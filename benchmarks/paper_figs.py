@@ -1,0 +1,367 @@
+"""One benchmark per paper table/figure (DESIGN.md §5 index).
+
+Each function runs the scenario on the tiering engine (Equilibria + the TPP
+baseline where the paper compares), validates the paper's claim, and returns
+(name, us_per_call, derived) rows for the CSV plus a JSON detail record.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.configs.base import TieringConfig
+from repro.core.simulator import SimResult, compare_modes, simulate
+from repro.core.workloads import (cache_like, ci_like, microbenchmark,
+                                  spark_like, tao_like, thrasher, web_like)
+
+RESULTS = Path(__file__).resolve().parent / "results"
+Row = Tuple[str, float, str]
+
+
+def _timed(fn, *a, **kw):
+    t0 = time.time()
+    out = fn(*a, **kw)
+    return out, (time.time() - t0) * 1e6
+
+
+def _save(name: str, detail: Dict):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(
+        json.dumps(detail, indent=1, default=float))
+
+
+# ---------------------------------------------------------------- Fig. 3 ----
+def fig3_hotness_unfairness() -> List[Row]:
+    """Hotter Container A takes (almost) all local memory under system-level
+    tiering; the colder B gets ~half its footprint (paper Fig. 3)."""
+    cfg = TieringConfig(n_tenants=2, n_fast_pages=512, n_slow_pages=512,
+                        lower_protection=(256, 256), upper_bound=(0, 0))
+    tenants = [microbenchmark(400, hotness=2.0), microbenchmark(400, hotness=1.0)]
+    res, us = _timed(compare_modes, cfg, tenants, 200)
+    tpp, eq = res["tpp"], res["equilibria"]
+    a_frac = tpp.fast_usage[-1, 0] / 400
+    b_frac = tpp.fast_usage[-1, 1] / 400
+    _save("fig3", {"tpp_fast": tpp.fast_usage[-1].tolist(),
+                   "eq_fast": eq.fast_usage[-1].tolist(),
+                   "tpp_fast_series": tpp.fast_usage[::5].tolist()})
+    return [("fig3_tpp_hot_tenant_fast_frac", us, f"{a_frac:.2f}"),
+            ("fig3_tpp_cold_tenant_fast_frac", us, f"{b_frac:.2f}"),
+            ("fig3_eq_cold_tenant_fast_frac", us,
+             f"{eq.fast_usage[-1, 1] / 400:.2f}")]
+
+
+# ------------------------------------------------- §III-F launch order ----
+def launch_order() -> List[Row]:
+    """Late-arriving identical tenant is permanently impaired under TPP
+    (paper: 28% lower throughput); equalized by Equilibria."""
+    cfg = TieringConfig(n_tenants=2, n_fast_pages=512, n_slow_pages=512,
+                        lower_protection=(256, 256), upper_bound=(0, 0))
+    tenants = [microbenchmark(300), microbenchmark(300, arrival=30)]
+    res, us = _timed(compare_modes, cfg, tenants, 250)
+    tpp, eq = res["tpp"], res["equilibria"]
+    gap_tpp = 1 - tpp.mean_throughput()[1] / tpp.mean_throughput()[0]
+    gap_eq = 1 - eq.mean_throughput()[1] / eq.mean_throughput()[0]
+    _save("launch_order", {"tpp_thr": tpp.mean_throughput().tolist(),
+                           "eq_thr": eq.mean_throughput().tolist()})
+    return [("launch_order_tpp_late_tenant_loss", us, f"{gap_tpp:.1%}"),
+            ("launch_order_eq_late_tenant_loss", us, f"{gap_eq:.1%}")]
+
+
+# ---------------------------------------------------------------- Fig. 5 ----
+def fig5_protection() -> List[Row]:
+    """Footprints 120/90/90GB, protection 80GB: fast usage converges to the
+    protections; A spills ~40GB, B/C ~10GB (1 page = 0.25GB)."""
+    cfg = TieringConfig(n_tenants=3, n_fast_pages=1024, n_slow_pages=512,
+                        lower_protection=(320, 320, 320), upper_bound=(0, 0, 0))
+    tenants = [microbenchmark(480), microbenchmark(360), microbenchmark(360)]
+    r, us = _timed(simulate, cfg, tenants, 250, "equilibria")
+    final = r.fast_usage[-25:].mean(0)
+    _save("fig5", {"fast_series": r.fast_usage[::5].tolist(),
+                   "slow_series": r.slow_usage[::5].tolist(),
+                   "demotions": r.demotions.sum(0).tolist()})
+    return [("fig5_converged_fast_gb", us,
+             "/".join(f"{v / 4:.0f}" for v in final)),
+            ("fig5_spilled_gb", us,
+             "/".join(f"{v / 4:.0f}" for v in r.slow_usage[-25:].mean(0)))]
+
+
+# ---------------------------------------------------------------- Fig. 6 ----
+def fig6_promotion_throttle() -> List[Row]:
+    """Over-protection Container A's promotion rate is suppressed while
+    converging (paper Fig. 6)."""
+    cfg = TieringConfig(n_tenants=3, n_fast_pages=1024, n_slow_pages=512,
+                        lower_protection=(320, 320, 320), upper_bound=(0, 0, 0))
+    tenants = [microbenchmark(480), microbenchmark(360), microbenchmark(360)]
+    tpp = simulate(cfg, tenants, 250, mode="tpp")
+    r, us = _timed(simulate, cfg, tenants, 250, "equilibria")
+    # during convergence, A's promotion rate is intentionally suppressed
+    # (Fig. 6 blue line) although it has the most CXL promotion candidates
+    conv = slice(20, 120)
+    a_promo = r.promotions[conv, 0].mean()
+    a_promo_tpp = tpp.promotions[conv, 0].mean()
+    suppression = 1 - a_promo / max(a_promo_tpp, 1e-9)
+    _save("fig6", {"promotions": r.promotions[::5].tolist(),
+                   "demotions": r.demotions[::5].tolist(),
+                   "promotions_tpp": tpp.promotions[::5].tolist()})
+    return [("fig6_overage_tenant_promo_rate_eq", us, f"{a_promo:.1f}"),
+            ("fig6_overage_tenant_promo_rate_unregulated", us,
+             f"{a_promo_tpp:.1f}"),
+            ("fig6_promotion_suppression", us, f"{suppression:.0%}")]
+
+
+# ------------------------------------------------------- §V-B validation ----
+def validation_suite() -> List[Row]:
+    rows: List[Row] = []
+    base = dict(n_tenants=3, n_fast_pages=1024, n_slow_pages=512,
+                lower_protection=(320, 320, 320), upper_bound=(0, 0, 0))
+    # V-B1 local preferred
+    cfg = TieringConfig(**base)
+    r, us = _timed(simulate, cfg, [microbenchmark(480), microbenchmark(160),
+                                   microbenchmark(160)], 120, "equilibria")
+    rows.append(("vb1_all_resident_fast", us,
+                 str(bool((r.slow_usage[-1] == 0).all()))))
+    # V-B3 donation
+    r, us = _timed(simulate, cfg, [microbenchmark(480),
+                                   microbenchmark(280, arrival=40),
+                                   microbenchmark(280, arrival=40)], 250,
+                   "equilibria")
+    rows.append(("vb3_donated_pages_to_A", us,
+                 f"{r.fast_usage[-25:, 0].mean() - 320:.0f}"))
+    # V-B4 upper bound
+    cfg = TieringConfig(**{**base, "upper_bound": (320, 0, 0)})
+    r, us = _timed(simulate, cfg, [microbenchmark(480), microbenchmark(160),
+                                   microbenchmark(160)], 150, "equilibria")
+    rows.append(("vb4_bound_respected", us,
+                 str(bool(r.fast_usage[-25:, 0].max() <= 320))))
+    return rows
+
+
+# ------------------------------------------------------- §V-B5 thrashing ----
+def fig_thrashing() -> List[Row]:
+    """Thrashing tenant: migrations cut by orders of magnitude; neighbors
+    regain ~7% throughput (paper §V-B5 / §III-F)."""
+    tenants = [thrasher(400, fast_share=16), microbenchmark(200),
+               microbenchmark(200)]
+    # migration_cost calibrated so unmitigated thrashing costs neighbors ~7%
+    # (the paper's measured interference)
+    cfg = TieringConfig(n_tenants=3, n_fast_pages=1024, n_slow_pages=512,
+                        lower_protection=(0, 256, 256), upper_bound=(16, 0, 0),
+                        migration_cost=0.0003, t_resident=10, r_thrashing=8.0,
+                        controller_period=15)
+    t0 = time.time()
+    on = simulate(cfg, tenants, 300, mode="equilibria")
+    off = simulate(cfg.with_(enable_thrash_mitigation=False), tenants, 300,
+                   mode="equilibria")
+    us = (time.time() - t0) * 1e6
+    w = slice(200, 300)
+    mig_on = float((on.promotions[w, 0] + on.demotions[w, 0]).mean())
+    mig_off = float((off.promotions[w, 0] + off.demotions[w, 0]).mean())
+    thr_gain = (on.mean_throughput(w)[1:].sum()
+                / max(off.mean_throughput(w)[1:].sum(), 1e-9) - 1)
+    _save("thrashing", {"mig_on": mig_on, "mig_off": mig_off,
+                        "promo_scale": on.promo_scale[::10, 0].tolist(),
+                        "thrash_events": on.thrash_events[::10, 0].tolist()})
+    return [("thrash_migrations_unmitigated", us, f"{mig_off:.1f}/tick"),
+            ("thrash_migrations_mitigated", us, f"{mig_on:.1f}/tick"),
+            ("thrash_neighbor_throughput_gain", us, f"{thr_gain:.1%}")]
+
+
+# ------------------------------------------------ Fig. 7 / §V-C DCPerf ----
+def fig7_heterogeneous() -> List[Row]:
+    """3x TaoBench + 1x SparkBench on the large server (192GB upper bound
+    each = the server split four ways; 1 page = 0.25GB: bound 768 pages,
+    fast 3072 = 768GB local, slow 1024 = 256GB CXL). Paper: 1.7x SparkBench
+    throughput on Equilibria vs TPP."""
+    fast, slow, bound = 3072, 1024, 768
+    tenants = [spark_like(1200), tao_like(900, arrival=10),
+               tao_like(900, arrival=20), tao_like(900, arrival=30)]
+    # p_base scaled to the real promotion-bandwidth : hot-set ratio — the
+    # mechanism is allocation-time placement + promotion headroom (paper:
+    # "preserving free local memory for the short-lived bursty SparkBench")
+    # lat_slow=3.0: the paper's *loaded* CXL latency (Fig. 2 — loaded rises
+    # well above the 252ns idle point; TaoBench keeps the bus busy here)
+    cfg = TieringConfig(n_tenants=4, n_fast_pages=fast, n_slow_pages=slow,
+                        lower_protection=(0, 0, 0, 0), p_base=12,
+                        upper_bound=(bound, bound, bound, bound),
+                        lat_slow=3.0)
+    t0 = time.time()
+    eq = simulate(cfg, tenants, 400, mode="equilibria", k_max=128)
+    tpp = simulate(cfg.with_(upper_bound=(0, 0, 0, 0)), tenants, 400,
+                   mode="tpp", k_max=128)
+    us = (time.time() - t0) * 1e6
+    # SparkBench runs in a loop; the paper reports queries/hour = completion
+    # rate during its *active* (high-footprint) analytics phases.
+    ticks = np.arange(400)
+    active = ((ticks // 30) % 2 == 0) & (ticks >= 200)
+    spark_qph_eq = eq.throughput[active, 0].mean()
+    spark_qph_tpp = tpp.throughput[active, 0].mean()
+    spark_gain = spark_qph_eq / max(spark_qph_tpp, 1e-9)
+    w = slice(200, 400)
+    tao_ratio = (eq.mean_throughput(w)[1:].mean()
+                 / max(tpp.mean_throughput(w)[1:].mean(), 1e-9))
+    _save("fig7", {"eq_fast": eq.fast_usage[::8].tolist(),
+                   "tpp_fast": tpp.fast_usage[::8].tolist(),
+                   "spark_qph_eq": float(spark_qph_eq),
+                   "spark_qph_tpp": float(spark_qph_tpp)})
+    return [("fig7_sparkbench_speedup_eq_vs_tpp", us, f"{spark_gain:.2f}x"),
+            ("fig7_taobench_ratio_eq_vs_tpp", us, f"{tao_ratio:.2f}x")]
+
+
+# -------------------------------------------------------- §V-D1 Cache ----
+def prod_cache() -> List[Row]:
+    """Two homogeneous Cache instances: TPP splits local memory unevenly
+    (paper: 90% vs 70% resident, up to 3.3x P99 gap, 65% throughput drop on
+    a burst); Equilibria (prot 70%, bound 75%) equalizes."""
+    # large server: 3072 fast + 1024 slow pages; footprints fill it
+    foot = 2000
+    prot, bound = int(foot * 0.70), int(foot * 0.75)
+    tenants = [cache_like(foot), cache_like(foot, arrival=5)]
+    cfg_eq = TieringConfig(n_tenants=2, n_fast_pages=3072, n_slow_pages=1024,
+                           lower_protection=(prot, prot),
+                           upper_bound=(bound, bound))
+    cfg_tpp = cfg_eq.with_(lower_protection=(0, 0), upper_bound=(0, 0))
+    t0 = time.time()
+    eq = simulate(cfg_eq, tenants, 300, mode="equilibria", k_max=512)
+    tpp = simulate(cfg_tpp, tenants, 300, mode="tpp", k_max=512)
+    us = (time.time() - t0) * 1e6
+    w = slice(150, 300)
+    eq_resident = eq.fast_usage[w].mean(0) / foot
+    tpp_resident = tpp.fast_usage[w].mean(0) / foot
+    p99_gap_tpp = tpp.p99_latency(w)[1] / tpp.p99_latency(w)[0]
+    p99_gap_eq = eq.p99_latency(w)[1] / eq.p99_latency(w)[0]
+    _save("prod_cache", {
+        "eq_resident": eq_resident.tolist(),
+        "tpp_resident": tpp_resident.tolist(),
+        "p99_gap": [float(p99_gap_tpp), float(p99_gap_eq)]})
+    return [("cache_tpp_resident_split", us,
+             f"{tpp_resident[0]:.0%}/{tpp_resident[1]:.0%}"),
+            ("cache_eq_resident_split", us,
+             f"{eq_resident[0]:.0%}/{eq_resident[1]:.0%}"),
+            ("cache_p99_gap_tpp_vs_eq", us,
+             f"{p99_gap_tpp:.2f}->{p99_gap_eq:.2f}")]
+
+
+def prod_cache_burst() -> List[Row]:
+    """Noisy-neighbor burst (§V-D1): B's usage jumps 0->90% in a minute; on
+    TPP A loses local share and throughput collapses; Equilibria absorbs."""
+    foot = 2000
+    prot, bound = 1400, 1500
+    tenants = [cache_like(foot),
+               cache_like(foot, arrival=150)]  # burst: B ramps at t=150
+    cfg_eq = TieringConfig(n_tenants=2, n_fast_pages=3072, n_slow_pages=1024,
+                           lower_protection=(prot, prot),
+                           upper_bound=(bound, bound))
+    cfg_tpp = cfg_eq.with_(lower_protection=(0, 0), upper_bound=(0, 0))
+    t0 = time.time()
+    eq = simulate(cfg_eq, tenants, 300, mode="equilibria", k_max=512)
+    tpp = simulate(cfg_tpp, tenants, 300, mode="tpp", k_max=512)
+    us = (time.time() - t0) * 1e6
+    pre, post = slice(100, 150), slice(160, 220)
+    drop_tpp = 1 - tpp.throughput[post, 0].mean() / tpp.throughput[pre, 0].mean()
+    drop_eq = 1 - eq.throughput[post, 0].mean() / eq.throughput[pre, 0].mean()
+    _save("prod_cache_burst", {"drop": [float(drop_tpp), float(drop_eq)]})
+    return [("cache_burst_victim_drop_tpp", us, f"{drop_tpp:.1%}"),
+            ("cache_burst_victim_drop_eq", us, f"{drop_eq:.1%}")]
+
+
+# ----------------------------------------------------------- §V-D2 CI ----
+def prod_ci() -> List[Row]:
+    """Four spiky CI builds; protection=192GB (=768 pages) derived by the
+    simple capacity-ratio policy. Late starter must get >90% fast residency
+    on Equilibria (paper Fig. 8)."""
+    prot = 768
+    tenants = [ci_like(1000), ci_like(1000, arrival=10),
+               ci_like(1000, arrival=20), ci_like(1000, arrival=60)]
+    cfg = TieringConfig(n_tenants=4, n_fast_pages=3072, n_slow_pages=1024,
+                        lower_protection=(prot,) * 4, upper_bound=(0,) * 4)
+    t0 = time.time()
+    eq = simulate(cfg, tenants, 300, mode="equilibria", k_max=512)
+    tpp = simulate(cfg.with_(lower_protection=(0,) * 4), tenants, 300,
+                   mode="tpp", k_max=512)
+    us = (time.time() - t0) * 1e6
+    w = slice(80, 160)  # during D's ramp-up
+    d_res_eq = (eq.fast_usage[w, 3] /
+                np.maximum(eq.fast_usage[w, 3] + eq.slow_usage[w, 3], 1)).mean()
+    d_res_tpp = (tpp.fast_usage[w, 3] /
+                 np.maximum(tpp.fast_usage[w, 3] + tpp.slow_usage[w, 3], 1)).mean()
+    thr_gain = eq.mean_throughput()[0:].sum() / tpp.mean_throughput()[0:].sum()
+    _save("prod_ci", {"eq_fast": eq.fast_usage[::8].tolist(),
+                      "d_resident": [float(d_res_eq), float(d_res_tpp)]})
+    return [("ci_late_starter_fast_residency_eq", us, f"{d_res_eq:.0%}"),
+            ("ci_late_starter_fast_residency_tpp", us, f"{d_res_tpp:.0%}"),
+            ("ci_total_throughput_eq_vs_tpp", us, f"{thr_gain:.3f}x")]
+
+
+# ---------------------------------------------------------- §V-D3 Web ----
+def prod_web() -> List[Row]:
+    """Five Web instances (two partitions), protection from a hot-footprint
+    profile (28GB = 112 pages @0.25GB). On TPP the partition-B instances'
+    local share decays; Equilibria holds every instance at >= protection."""
+    prot = 112
+    tenants = [web_like(240, hot_pages=112), web_like(240, hot_pages=112),
+               web_like(240, hot_pages=112), web_like(240, hot_pages=112),
+               web_like(240, hot_pages=112)]
+    # A & D serve partition B: less-hot, and the JIT re-specializes over
+    # time (slowly rotating hot set) — their pages "manifest as less hot".
+    # Partition-A instances keep warm non-hot pages (request-mix churn).
+    for i in (1, 2, 4):
+        tenants[i].cold_rate = 0.6
+    for i in (0, 3):
+        tenants[i].hot_rate = 2.2
+        tenants[i].rotate_hot_every = 50
+    cfg = TieringConfig(n_tenants=5, n_fast_pages=1024, n_slow_pages=256,
+                        lower_protection=(prot,) * 5, upper_bound=(0,) * 5,
+                        p_base=24)
+    t0 = time.time()
+    eq = simulate(cfg, tenants, 300, mode="equilibria")
+    tpp = simulate(cfg.with_(lower_protection=(0,) * 5), tenants, 300,
+                   mode="tpp")
+    us = (time.time() - t0) * 1e6
+    w = slice(150, 300)
+    min_fast_eq = eq.fast_usage[w].min(0)
+    partB = [0, 3]
+    decay_tpp = tpp.fast_usage[60, partB].mean() - tpp.fast_usage[-1, partB].mean()
+    slowdown_eq = 1 - (eq.mean_throughput(w)[partB].mean()
+                       / max(tpp.mean_throughput(w).max(), 1e-9))
+    _save("prod_web", {"eq_min_fast": min_fast_eq.tolist(),
+                       "tpp_partB_decay": float(decay_tpp)})
+    return [("web_protection_held_eq", us,
+             str(bool((min_fast_eq[partB] >= prot - 4).all()))),
+            ("web_partitionB_local_decay_tpp_pages", us, f"{decay_tpp:.0f}")]
+
+
+# --------------------------------------------------------- Table I/III ----
+def table1_bandwidth() -> List[Row]:
+    """Capacity-bound tenants keep most of the slow tier's capacity in use
+    while driving a small fraction of accesses to it (paper Table I)."""
+    tenants = [cache_like(800), web_like(700), ci_like(700)]
+    cfg = TieringConfig(n_tenants=3, n_fast_pages=1536, n_slow_pages=1024,
+                        lower_protection=(512, 512, 512), upper_bound=(0,) * 3)
+    r, us = _timed(simulate, cfg, tenants, 300, "equilibria")
+    w = slice(150, 300)
+    rows = []
+    detail = {}
+    for i, name in enumerate(["AppA", "AppB", "AppC"]):
+        slow_cap = r.slow_usage[w, i].mean()
+        # slow-tier access share ~ CXL bandwidth share
+        lat = r.latency[w, i].mean()
+        # lat = f_fast*1 + f_slow*2.5 -> f_slow = (lat-1)/1.5
+        f_slow = max((lat - 1.0) / 1.5, 0.0)
+        rows.append((f"table1_{name}_slow_capacity_pages", us,
+                     f"{slow_cap:.0f}"))
+        rows.append((f"table1_{name}_slow_access_share", us, f"{f_slow:.1%}"))
+        detail[name] = {"slow_pages": float(slow_cap), "slow_share": f_slow}
+    _save("table1", detail)
+    return rows
+
+
+ALL_BENCHES = [
+    fig3_hotness_unfairness, launch_order, fig5_protection,
+    fig6_promotion_throttle, validation_suite, fig_thrashing,
+    fig7_heterogeneous, prod_cache, prod_cache_burst, prod_ci, prod_web,
+    table1_bandwidth,
+]

@@ -1,0 +1,34 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+#   PYTHONPATH=src python -m benchmarks.run            # paper benchmarks
+#   PYTHONPATH=src python -m benchmarks.run --roofline # + roofline summary
+import sys
+
+
+def main() -> None:
+    from benchmarks.paper_figs import ALL_BENCHES
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in ALL_BENCHES:
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.0f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{bench.__name__},0,ERROR:{type(e).__name__}:{e}",
+                  flush=True)
+
+    if "--roofline" in sys.argv:
+        from benchmarks.roofline import full_table
+        for r in full_table():
+            print(f"roofline_{r.arch}_{r.shape},0,"
+                  f"dominant={r.dominant};frac={r.roofline_frac:.3f};"
+                  f"useful={r.useful_ratio:.2f}", flush=True)
+
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,66 @@
+"""End-to-end fault-tolerant training run.
+
+Trains a reduced Mamba2 config with the full production stack — synthetic
+sharded loader, AdamW, remat, atomic checkpoints, the FT driver with an
+injected mid-run failure — and verifies the loss curve survives the
+restart. Use --full for the real mamba2-130m config on capable hardware.
+
+  PYTHONPATH=src python examples/train_e2e.py --steps 60
+"""
+import argparse
+import shutil
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import SyntheticLoader
+from repro.ft.driver import FTConfig, TrainDriver
+from repro.models.params import init_params, param_count
+from repro.models.transformer import model_specs
+from repro.optim.adamw import init_opt_state
+from repro.train.step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_e2e")
+    args = ap.parse_args()
+    shutil.rmtree(args.ckpt, ignore_errors=True)
+
+    cfg = (get_config if args.full else get_smoke_config)("mamba2_130m")
+    tc = TrainConfig(learning_rate=3e-3, warmup_steps=5,
+                     total_steps=args.steps, remat_policy="none")
+    params = init_params(jax.random.PRNGKey(0), model_specs(cfg))
+    opt = init_opt_state(params)
+    print(f"training {cfg.name}: {param_count(model_specs(cfg)):,} params")
+
+    raw = jax.jit(make_train_step(cfg, tc), donate_argnums=(0, 1))
+
+    crash = {"armed": True}
+
+    def step_fn(state, batch):
+        if crash["armed"] and state[1].step >= args.steps // 2:
+            crash["armed"] = False
+            raise RuntimeError("injected node failure at midpoint")
+        p, o = state
+        p, o, m = raw(p, o, batch)
+        return (p, o), m
+
+    driver = TrainDriver(step_fn, FTConfig(checkpoint_dir=args.ckpt,
+                                           checkpoint_every=10))
+    loader = SyntheticLoader(cfg, args.batch, args.seq)
+    state, logs = driver.run((params, opt), loader, num_steps=args.steps)
+    losses = [float(m["loss"]) for m in logs]
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(logs)} steps "
+          f"(retries={driver.stats.retries} — survived the injected failure)")
+    assert losses[-1] < losses[0]
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

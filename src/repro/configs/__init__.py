@@ -1,0 +1,85 @@
+"""Architecture registry: one module per assigned architecture.
+
+Each arch module defines ``CONFIG`` (the exact assigned configuration) and
+``smoke_config()`` (a reduced same-family config for CPU smoke tests).
+Vocab sizes that don't divide the 16-way model axis are padded up to the next
+multiple of 256 (``vocab_true`` records the paper value) — standard TPU
+practice (MaxText does the same); padded logits are dead weight, never labels.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (MeshConfig, ModelConfig, MoEConfig, SSMConfig,
+                                ShapeConfig, SHAPES, TieringConfig, TrainConfig)
+
+ARCH_IDS = [
+    "mixtral_8x22b",
+    "granite_moe_3b_a800m",
+    "qwen3_32b",
+    "codeqwen15_7b",
+    "h2o_danube_3_4b",
+    "llama32_1b",
+    "mamba2_130m",
+    "whisper_tiny",
+    "llama32_vision_90b",
+    "zamba2_7b",
+]
+
+_ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = _ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    arch = _ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.smoke_config()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def reduced_depth_config(arch: str, n: int) -> ModelConfig:
+    """Depth-reduced config for unrolled cost extraction (same widths,
+    same sharding; only the stacked layer counts shrink)."""
+    import dataclasses
+    cfg = get_config(arch)
+    if cfg.family == "vlm":
+        n = max(cfg.cross_attn_every, (n // cfg.cross_attn_every)
+                * cfg.cross_attn_every)
+        return dataclasses.replace(cfg, num_layers=n)
+    if cfg.family == "encdec":
+        return dataclasses.replace(cfg, num_layers=n, encoder_layers=n)
+    if cfg.family == "hybrid":
+        n = max(cfg.hybrid_attn_every, (n // cfg.hybrid_attn_every)
+                * cfg.hybrid_attn_every)
+        return dataclasses.replace(cfg, num_layers=n)
+    return dataclasses.replace(cfg, num_layers=n)
+
+
+def reduced_depths(arch: str) -> tuple:
+    """Two unroll depths per arch for the linear cost fit."""
+    cfg = get_config(arch)
+    if cfg.family == "vlm":
+        return (cfg.cross_attn_every, 2 * cfg.cross_attn_every)
+    if cfg.family == "hybrid":
+        return (cfg.hybrid_attn_every, 2 * cfg.hybrid_attn_every)
+    return (2, 4)
+
+
+def shape_cells(arch: str):
+    """The assigned (shape) cells for one arch, with principled skips."""
+    cfg = get_config(arch)
+    cells = []
+    for name, sh in SHAPES.items():
+        if name == "long_500k" and not cfg.has_subquadratic_path:
+            continue  # pure full-attention archs skip long-context decode
+        cells.append(sh)
+    return cells

@@ -1,0 +1,313 @@
+"""The tiering engine: one jittable `tick` implementing allocation, hotness
+tracking, regulated demotion/promotion, thrashing mitigation and the perf
+model. Modes select the policy:
+
+  equilibria — the paper (Eq.1 + Eq.2 + upper bound + thrash mitigation)
+  tpp        — baseline Linux/TPP: watermark-driven *global-LRU* demotion,
+               hint-fault-style *global* promotion, no fairness
+  memtis     — MEMTIS-like: upper limit only (allocation-time enforcement)
+  static     — tier fixed at allocation, no migration
+
+Page ownership is static (tenant i owns a fixed logical range); liveness and
+tier are dynamic. All per-tenant reductions are matmuls against the static
+[T, L] ownership one-hot.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TieringConfig
+from repro.core import policy as P
+from repro.core.state import (TIER_FAST, TIER_NONE, TIER_SLOW, Counters,
+                              TenantPolicy, TierState, init_state, make_policy)
+
+MODES = ("equilibria", "tpp", "memtis", "static")
+
+
+class TickOutput(NamedTuple):
+    fast_usage: jax.Array      # [T] pages
+    slow_usage: jax.Array      # [T]
+    promotions: jax.Array      # [T] this tick
+    demotions: jax.Array       # [T]
+    throughput: jax.Array      # [T] accesses per latency-unit (1.0 = all-fast)
+    latency: jax.Array         # [T] mean access latency (units of lat_fast)
+    promo_scale: jax.Array     # [T]
+    thrash_events: jax.Array   # [T] cumulative
+    fast_free: jax.Array       # scalar
+
+
+def _select_per_tenant(score: jax.Array, masks: jax.Array, quotas: jax.Array,
+                       k_max: int) -> jax.Array:
+    """Select up to quotas[t] highest-score pages per tenant. masks: [T, L]."""
+    T, L = masks.shape
+    sel = jnp.zeros((L,), jnp.int32)
+    k = min(k_max, L)
+    for ti in range(T):
+        s = jnp.where(masks[ti], score, -jnp.inf)
+        vals, idx = jax.lax.top_k(s, k)
+        take = (jnp.arange(k) < quotas[ti]) & jnp.isfinite(vals)
+        sel = sel.at[idx].max(take.astype(jnp.int32))
+    return sel.astype(bool)
+
+
+def _select_global(score: jax.Array, mask: jax.Array, quota: jax.Array,
+                   k_max: int) -> jax.Array:
+    L = score.shape[0]
+    k = min(k_max, L)
+    s = jnp.where(mask, score, -jnp.inf)
+    vals, idx = jax.lax.top_k(s, k)
+    take = (jnp.arange(k) < quota) & jnp.isfinite(vals)
+    return jnp.zeros((L,), bool).at[idx].set(take)
+
+
+def _masked_rank(mask: jax.Array) -> jax.Array:
+    """Rank of each True element among True elements (by index order)."""
+    return jnp.cumsum(mask.astype(jnp.int32)) - mask.astype(jnp.int32)
+
+
+def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
+              k_max: int = 256):
+    """Build the jittable tick. owner: [L] int (static tenant of each page)."""
+    assert mode in MODES, mode
+    T = cfg.n_tenants
+    L = owner.shape[0]
+    owner_j = jnp.asarray(owner, jnp.int32)
+    owner_oh = jnp.asarray(
+        (owner[None, :] == np.arange(T)[:, None]).astype(np.float32))
+    owner_oh_i = owner_oh.astype(jnp.int32)
+    n_fast = cfg.n_fast_pages
+    wmark = max(int(np.ceil(n_fast * cfg.watermark_free)), 1)
+    pol: TenantPolicy = make_policy(cfg)
+
+    def tick(state: TierState, inputs) -> Tuple[TierState, TickOutput]:
+        accesses, alive = inputs
+        t = state.t
+        tier = state.tier.astype(jnp.int32)
+
+        # ---- 1. free dead pages -------------------------------------------
+        died = (tier != TIER_NONE) & ~alive
+        freed_t = owner_oh_i @ died.astype(jnp.int32)
+        tier = jnp.where(died, TIER_NONE, tier)
+
+        # ---- 2. allocate new pages ----------------------------------------
+        new = alive & (tier == TIER_NONE)
+        fast_usage = owner_oh_i @ (tier == TIER_FAST).astype(jnp.int32)
+        fast_free = n_fast - fast_usage.sum()
+        # per-tenant upper bound gating of *fast* placement
+        if mode in ("equilibria", "memtis") and cfg.enable_upper_bound:
+            ranks = jnp.zeros((L,), jnp.int32)
+            for ti in range(T):
+                m = new & (owner_j == ti)
+                ranks = jnp.where(m, _masked_rank(m), ranks)
+            bound = pol.upper_bound[owner_j]
+            under_bound = (bound == 0) | (fast_usage[owner_j] + ranks < bound)
+        else:
+            under_bound = jnp.ones((L,), bool)
+        elig = new & under_bound
+        grank = _masked_rank(elig)
+        go_fast = elig & (grank < jnp.maximum(fast_free - wmark, 0))
+        tier = jnp.where(go_fast, TIER_FAST, jnp.where(new, TIER_SLOW, tier))
+        alloc_t = owner_oh_i @ new.astype(jnp.int32)
+
+        # ---- 3. hotness / recency -----------------------------------------
+        hot = jnp.where(alive, cfg.hot_decay * state.hot + accesses, 0.0)
+        last_access = jnp.where(new | (accesses > 0), t, state.last_access)
+
+        # ---- 4. contention ------------------------------------------------
+        # Local memory is contended when free space cannot absorb both the
+        # watermark and the pending promotion demand (kswapd-style: promotion
+        # pressure drives background demotion, §IV-D).
+        fast_usage = owner_oh_i @ (tier == TIER_FAST).astype(jnp.int32)
+        fast_free = n_fast - fast_usage.sum()
+        cand_pre = (tier == TIER_SLOW) & (hot >= cfg.promo_hot_threshold) & alive
+        demand_t = jnp.minimum(owner_oh_i @ cand_pre.astype(jnp.int32), k_max)
+        promo_demand = jnp.minimum(demand_t.sum(), k_max)
+        contended = fast_free < wmark + promo_demand
+
+        # ---- 5. demotion ---------------------------------------------------
+        sync_quota = jnp.zeros((T,), jnp.int32)
+        if mode == "equilibria":
+            d_scan = P.eq1_demotion_scan(fast_usage, fast_usage, pol, contended)
+            if not cfg.enable_protection:
+                # ablation: proportional pressure without protection
+                d_scan = jnp.where(contended, fast_usage.astype(jnp.float32), 0.0)
+            # Eq.1 sets each tenant's *share* of reclaim work; the total is
+            # kswapd-style demand-driven: free enough for the watermark plus
+            # pending promotions, no more (work-conserving donation, §V-B3).
+            # A tenant's OWN promotion demand never drives its own demotion
+            # (that would be pure churn); only neighbors' demand evicts it.
+            demand_other = jnp.minimum(promo_demand - demand_t, k_max)
+            needed_t = jnp.maximum(wmark + demand_other - fast_free, 0)
+            total_scan = jnp.maximum(d_scan.sum(), 1.0)
+            share = jnp.ceil(d_scan * jnp.minimum(
+                needed_t.astype(jnp.float32) / total_scan, 1.0)).astype(jnp.int32)
+            if cfg.enable_upper_bound:
+                sync_quota = P.upper_bound_demotion(fast_usage, pol)
+            quota = jnp.minimum(share + sync_quota, k_max)
+        elif mode == "tpp":
+            needed = jnp.maximum(2 * wmark - fast_free, 0)
+            quota = jnp.minimum(needed, k_max * T)  # global
+        elif mode == "memtis":
+            sync_quota = P.upper_bound_demotion(fast_usage, pol)
+            quota = jnp.minimum(sync_quota, k_max)
+        else:  # static
+            quota = jnp.zeros((T,), jnp.int32)
+
+        age = (t - last_access).astype(jnp.float32)
+        cold_score = age * 1e3 - hot          # LRU order, hotness tiebreak
+        fast_mask = tier == TIER_FAST
+        if mode == "tpp":
+            demoted = _select_global(cold_score, fast_mask, quota, k_max * T)
+        elif mode == "static":
+            demoted = jnp.zeros((L,), bool)
+        else:
+            masks = owner_oh.astype(bool) & fast_mask[None]
+            demoted = _select_per_tenant(cold_score, masks, quota, k_max)
+        demo_t = owner_oh_i @ demoted.astype(jnp.int32)
+
+        # thrash detection on demotions (§IV-F)
+        page_ids = jnp.arange(L, dtype=jnp.int32)
+        thrash_new = P.thrash_check_demotions(
+            state.table, page_ids, demoted, owner_j, t, cfg, T)
+        tier = jnp.where(demoted, TIER_SLOW, tier)
+        fast_usage = fast_usage - demo_t
+        fast_free = n_fast - fast_usage.sum()
+
+        # ---- 6. promotion ---------------------------------------------------
+        # just-demoted pages are not promotion candidates this tick
+        cand = (tier == TIER_SLOW) & (hot >= cfg.promo_hot_threshold) & alive & ~demoted
+        cand_t = owner_oh_i @ cand.astype(jnp.int32)
+        if mode == "equilibria":
+            p_base = jnp.full((T,), float(cfg.p_base), jnp.float32)
+            if cfg.enable_promo_throttle:
+                p_scan, _ = P.eq2_promotion_scan(p_base, fast_usage, pol,
+                                                 contended, cfg)
+            else:
+                p_scan = p_base
+            p_scan = p_scan * state.promo_scale        # thrash mitigation
+            p_quota = jnp.minimum(p_scan.astype(jnp.int32), k_max)
+        elif mode in ("tpp", "memtis"):
+            p_quota = jnp.full((T,), cfg.p_base, jnp.int32)  # unregulated
+        else:
+            p_quota = jnp.zeros((T,), jnp.int32)
+
+        # never overfill: cap total promotions by free fast capacity.
+        # NOTE: promotions may transiently exceed a tenant's upper bound —
+        # the allocating thread then demotes synchronously in the same tick
+        # (paper §IV-D); that promote->sync-demote cycle is exactly the
+        # thrashing signature §IV-F detects.
+        p_quota = jnp.minimum(p_quota, jnp.minimum(cand_t, k_max))
+        headroom = jnp.maximum(fast_free - wmark, 0)
+        total = p_quota.sum()
+        scale = jnp.where(total > headroom,
+                          headroom.astype(jnp.float32) / jnp.maximum(total, 1),
+                          1.0)
+        p_quota = jnp.floor(p_quota.astype(jnp.float32) * scale).astype(jnp.int32)
+
+        if mode == "tpp":
+            promoted = _select_global(hot, cand, p_quota.sum(), k_max * T)
+        elif mode == "static":
+            promoted = jnp.zeros((L,), bool)
+        else:
+            masks = owner_oh.astype(bool) & cand[None]
+            promoted = _select_per_tenant(hot, masks, p_quota, k_max)
+        promo_t = owner_oh_i @ promoted.astype(jnp.int32)
+        tier = jnp.where(promoted, TIER_FAST, tier)
+        table = P.thrash_record_promotions(state.table, page_ids, promoted, t)
+
+        # ---- 6b. synchronous upper-bound demotion (allocation path, §IV-D):
+        # promotions that pushed a tenant past its bound are shed in the same
+        # tick by the "allocating thread" — these demotions hit the thrash
+        # table immediately when they evict recently-promoted pages.
+        sync2_t = jnp.zeros((T,), jnp.int32)
+        if mode in ("equilibria", "memtis") and cfg.enable_upper_bound:
+            fast_usage2 = owner_oh_i @ (tier == TIER_FAST).astype(jnp.int32)
+            over2 = jnp.where(pol.upper_bound > 0,
+                              jnp.maximum(fast_usage2 - pol.upper_bound, 0), 0)
+            over2 = jnp.minimum(over2, k_max)
+            age2 = (t - last_access).astype(jnp.float32)
+            cold2 = age2 * 1e3 - hot
+            masks2 = owner_oh.astype(bool) & (tier == TIER_FAST)[None]
+            sync_dem = _select_per_tenant(cold2, masks2, over2, k_max)
+            thr2 = P.thrash_check_demotions(table, page_ids, sync_dem,
+                                            owner_j, t, cfg, T)
+            thrash_new = thrash_new + thr2
+            tier = jnp.where(sync_dem, TIER_SLOW, tier)
+            sync2_t = owner_oh_i @ sync_dem.astype(jnp.int32)
+            demo_t = demo_t + sync2_t
+
+        # ---- 7. counters ----------------------------------------------------
+        c = state.counters
+        counters = Counters(
+            promotions=c.promotions + promo_t,
+            demotions=c.demotions + demo_t,
+            attempted_promotions=c.attempted_promotions + cand_t,
+            reclaims=c.reclaims + freed_t,
+            allocations=c.allocations + alloc_t,
+            thrash_events=c.thrash_events + thrash_new,
+            sync_demotions=c.sync_demotions
+            + jnp.minimum(sync_quota, demo_t) + sync2_t,
+        )
+        fast_usage = owner_oh_i @ (tier == TIER_FAST).astype(jnp.int32)
+        slow_usage = owner_oh_i @ (tier == TIER_SLOW).astype(jnp.int32)
+
+        new_state = TierState(
+            tier=tier.astype(jnp.int8), hot=hot, last_access=last_access,
+            counters=counters, promo_scale=state.promo_scale,
+            thrash_prev=state.thrash_prev, usage_prev=state.usage_prev,
+            freed_since=state.freed_since + freed_t, steady=state.steady,
+            table=table, t=t + 1)
+
+        # ---- 8. periodic controller (§IV-F) ---------------------------------
+        def run_ctrl(s: TierState) -> TierState:
+            out = P.thrash_controller(s, fast_usage + slow_usage, cfg)
+            return s._replace(promo_scale=out.promo_scale, steady=out.steady,
+                              table=out.table, thrash_prev=out.thrash_prev,
+                              usage_prev=out.usage_prev,
+                              freed_since=out.freed_since)
+
+        new_state = jax.lax.cond(
+            (t + 1) % cfg.controller_period == 0, run_ctrl, lambda s: s,
+            new_state)
+
+        # ---- 9. perf model ---------------------------------------------------
+        a_fast = owner_oh @ (accesses * (tier == TIER_FAST))
+        a_slow = owner_oh @ (accesses * (tier == TIER_SLOW))
+        a_tot = a_fast + a_slow
+        migrations = (promo_t + demo_t).sum().astype(jnp.float32)
+        lat = jnp.where(
+            a_tot > 0,
+            (a_fast * cfg.lat_fast + a_slow * cfg.lat_slow) / jnp.maximum(a_tot, 1e-9),
+            cfg.lat_fast) + migrations * cfg.migration_cost
+        thru = jnp.where(a_tot > 0, a_tot / lat, 0.0)
+
+        out = TickOutput(
+            fast_usage=fast_usage, slow_usage=slow_usage,
+            promotions=promo_t, demotions=demo_t,
+            throughput=thru, latency=lat, promo_scale=new_state.promo_scale,
+            thrash_events=counters.thrash_events,
+            fast_free=n_fast - fast_usage.sum())
+        return new_state, out
+
+    return tick
+
+
+def run_engine(cfg: TieringConfig, owner: np.ndarray, accesses: np.ndarray,
+               alive: np.ndarray, mode: str = "equilibria",
+               k_max: int = 256) -> TickOutput:
+    """Run the full trace (scan over ticks). accesses/alive: [ticks, L]."""
+    tick = make_tick(cfg, owner, mode, k_max)
+    state = init_state(cfg, owner.shape[0])
+
+    @jax.jit
+    def run(state, accesses, alive):
+        return jax.lax.scan(tick, state, (accesses, alive))
+
+    final, outs = run(state, jnp.asarray(accesses, jnp.float32),
+                      jnp.asarray(alive, bool))
+    return final, outs

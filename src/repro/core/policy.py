@@ -1,0 +1,138 @@
+"""Equilibria fairness policy — the paper's equations, as pure functions.
+
+Eq. 1 (demotion modulation), Eq. 2 (promotion regulation, fourth-power
+throttle with a 1/16 floor — see DESIGN.md on the paper's min/max typo),
+thrashing detection/controller, and the steady-state detector (§IV-F).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TieringConfig
+from repro.core.state import TenantPolicy, ThrashTable, TierState
+
+
+def eq1_demotion_scan(fast_usage: jax.Array, n_lru: jax.Array,
+                      policy: TenantPolicy, contended: jax.Array) -> jax.Array:
+    """Paper Eq. 1: d_scan = n_lru * (n_cgroup - n_protection) / n_cgroup.
+
+    Zero for tenants at/below their lower protection (they are *exempt* from
+    demotion under contention). Only applies when local memory is contended.
+    fast_usage, n_lru: [T] pages. Returns [T] f32 scan quota.
+    """
+    n_cgroup = fast_usage.astype(jnp.float32)
+    n_prot = policy.lower_protection.astype(jnp.float32)
+    over = jnp.maximum(n_cgroup - n_prot, 0.0)
+    d = jnp.where(n_cgroup > 0, n_lru.astype(jnp.float32) * over / jnp.maximum(n_cgroup, 1.0), 0.0)
+    return jnp.where(contended, d, 0.0)
+
+
+def upper_bound_demotion(fast_usage: jax.Array, policy: TenantPolicy) -> jax.Array:
+    """Upper-bound enforcement (§IV-D): "as the usage approaches the upper
+    bound, a background thread demotes pages ... gently"; at/over the bound
+    the allocating thread demotes synchronously. We model both: once usage
+    reaches 95% of the bound, demote down toward 90% (the gentle background
+    path); any overage past the bound is additionally forced (sync path).
+    Returns [T] pages that must be demoted regardless of global pressure."""
+    bound = policy.upper_bound
+    near = fast_usage >= (0.95 * bound).astype(jnp.int32)
+    gentle = jnp.maximum(fast_usage - (0.9 * bound).astype(jnp.int32), 0)
+    over = jnp.maximum(fast_usage - bound, 0)
+    quota = jnp.where(near, jnp.maximum(gentle, over), over)
+    return jnp.where(bound > 0, quota, 0).astype(jnp.int32)
+
+
+def eq2_promotion_scan(p_base: jax.Array, fast_usage: jax.Array,
+                       policy: TenantPolicy, contended: jax.Array,
+                       cfg: TieringConfig) -> Tuple[jax.Array, jax.Array]:
+    """Paper Eq. 2: p_scan = p_base * clip((n_prot/n_cgroup)^4, 1/16, 1).
+
+    A tenant is "promotion throttled" (§IV-E) when either
+      (a) usage > lower protection AND local memory is fully utilized, or
+      (b) usage is approaching (>=95%) or exceeds its upper bound.
+    Returns (p_scan [T] f32, throttled [T] bool).
+    """
+    usage = fast_usage.astype(jnp.float32)
+    prot = policy.lower_protection.astype(jnp.float32)
+    bound = policy.upper_bound.astype(jnp.float32)
+    over_prot = (usage > prot) & contended
+    near_bound = (bound > 0) & (usage >= 0.95 * bound)
+    throttled = over_prot | near_bound
+    # reference share for the ratio: the protection; when only the bound
+    # triggers (no protection set), the bound itself is the fair share.
+    ref = jnp.where(prot > 0, prot, jnp.where(bound > 0, bound, usage))
+    ratio = jnp.where(usage > 0, ref / jnp.maximum(usage, 1.0), 1.0)
+    factor = jnp.clip(ratio ** 4, cfg.promo_floor, 1.0)
+    p = jnp.where(throttled, p_base * factor, p_base)
+    return p, throttled
+
+
+# ------------------------------------------------------- thrash tracking ----
+def thrash_record_promotions(table: ThrashTable, promoted_pages: jax.Array,
+                             promoted_mask: jax.Array, t: jax.Array) -> ThrashTable:
+    """Insert promoted pages into the direct-mapped table (slot = page % S)."""
+    slots = table.page.shape[0]
+    idx = promoted_pages % slots
+    idx = jnp.where(promoted_mask, idx, slots)  # dropped writes -> OOB
+    page = table.page.at[idx].set(promoted_pages, mode="drop")
+    tick = table.tick.at[idx].set(jnp.broadcast_to(t, promoted_pages.shape),
+                                  mode="drop")
+    return ThrashTable(page=page, tick=tick)
+
+
+def thrash_check_demotions(table: ThrashTable, demoted_pages: jax.Array,
+                           demoted_mask: jax.Array, owners: jax.Array,
+                           t: jax.Array, cfg: TieringConfig,
+                           n_tenants: int) -> jax.Array:
+    """Count demotions of pages promoted < t_resident ago. Returns [T] int32."""
+    slots = table.page.shape[0]
+    idx = demoted_pages % slots
+    hit = (table.page[idx] == demoted_pages) & demoted_mask
+    recent = (t - table.tick[idx]) < cfg.t_resident
+    is_thrash = hit & recent
+    oh = jax.nn.one_hot(jnp.where(is_thrash, owners, n_tenants),
+                        n_tenants + 1, dtype=jnp.int32)[:, :n_tenants]
+    return oh.sum(axis=0)
+
+
+class ControllerOut(NamedTuple):
+    promo_scale: jax.Array
+    steady: jax.Array
+    table: ThrashTable
+    thrash_prev: jax.Array
+    usage_prev: jax.Array
+    freed_since: jax.Array
+
+
+def thrash_controller(state: TierState, usage_total: jax.Array,
+                      cfg: TieringConfig) -> ControllerOut:
+    """Periodic controller (§IV-F, every `controller_period` ticks):
+    steady-state detection, then halve/double promotion rates of thrashing
+    steady-state tenants; clear the table to start the next window."""
+    thrash_rate = (state.counters.thrash_events - state.thrash_prev).astype(jnp.float32)
+    # steady state: small rate-of-change of active pages AND small free rate
+    u = usage_total.astype(jnp.float32)
+    prev = state.usage_prev.astype(jnp.float32)
+    denom = jnp.maximum(jnp.maximum(u, prev), 1.0)
+    active_delta = jnp.abs(u - prev) / denom
+    free_rate = state.freed_since.astype(jnp.float32) / denom
+    steady = (active_delta < cfg.steady_active_delta) & (free_rate < cfg.steady_free_rate)
+
+    thrashing = thrash_rate > cfg.r_thrashing
+    mitigate = steady & thrashing if cfg.enable_thrash_mitigation else jnp.zeros_like(steady)
+    recover = ~thrashing
+    scale = state.promo_scale
+    scale = jnp.where(mitigate, jnp.maximum(scale * 0.5, 1.0 / 64.0), scale)
+    scale = jnp.where(recover, jnp.minimum(scale * 2.0, 1.0), scale)
+
+    slots = state.table.page.shape[0]
+    cleared = ThrashTable(page=jnp.full((slots,), -1, jnp.int32),
+                          tick=jnp.zeros((slots,), jnp.int32))
+    return ControllerOut(
+        promo_scale=scale, steady=steady, table=cleared,
+        thrash_prev=state.counters.thrash_events,
+        usage_prev=usage_total,
+        freed_since=jnp.zeros_like(state.freed_since))

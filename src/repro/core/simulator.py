@@ -1,0 +1,78 @@
+"""Trace-driven two-tier simulator: workloads -> engine -> summary metrics.
+
+The same policy code (core/policy.py, core/engine.py) drives both this
+simulator (for the paper's evaluation) and the tiered KV-cache serving path
+(serve/): the simulator is how we reproduce the paper's numbers without a
+2-socket CXL box; the perf model constants come from the paper (§V-A,
+Fig. 2: 252ns CXL vs ~100ns local, ~0.1 bandwidth ratio).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import TieringConfig
+from repro.core.engine import TickOutput, run_engine
+from repro.core.workloads import TenantWorkload, build_trace
+
+
+@dataclass
+class SimResult:
+    mode: str
+    fast_usage: np.ndarray      # [ticks, T]
+    slow_usage: np.ndarray      # [ticks, T]
+    promotions: np.ndarray      # [ticks, T]
+    demotions: np.ndarray       # [ticks, T]
+    throughput: np.ndarray      # [ticks, T]
+    latency: np.ndarray         # [ticks, T]
+    promo_scale: np.ndarray     # [ticks, T]
+    thrash_events: np.ndarray   # [ticks, T] cumulative
+
+    def steady_window(self, frac: float = 0.5) -> slice:
+        n = self.fast_usage.shape[0]
+        return slice(int(n * (1 - frac)), n)
+
+    def mean_throughput(self, window: Optional[slice] = None) -> np.ndarray:
+        w = window or self.steady_window()
+        return self.throughput[w].mean(axis=0)
+
+    def mean_latency(self, window: Optional[slice] = None) -> np.ndarray:
+        w = window or self.steady_window()
+        return self.latency[w].mean(axis=0)
+
+    def p99_latency(self, window: Optional[slice] = None) -> np.ndarray:
+        w = window or self.steady_window()
+        return np.percentile(self.latency[w], 99, axis=0)
+
+    def mean_fast(self, window: Optional[slice] = None) -> np.ndarray:
+        w = window or self.steady_window()
+        return self.fast_usage[w].mean(axis=0)
+
+    def migration_rate(self, window: Optional[slice] = None) -> np.ndarray:
+        w = window or self.steady_window()
+        return (self.promotions[w] + self.demotions[w]).mean(axis=0)
+
+
+def simulate(cfg: TieringConfig, tenants: List[TenantWorkload], ticks: int,
+             mode: str = "equilibria", k_max: int = 256) -> SimResult:
+    owner, accesses, alive = build_trace(tenants, ticks)
+    cfg = cfg.with_(n_tenants=len(tenants))
+    _, outs = run_engine(cfg, owner, accesses, alive, mode=mode, k_max=k_max)
+    return SimResult(
+        mode=mode,
+        fast_usage=np.asarray(outs.fast_usage),
+        slow_usage=np.asarray(outs.slow_usage),
+        promotions=np.asarray(outs.promotions),
+        demotions=np.asarray(outs.demotions),
+        throughput=np.asarray(outs.throughput),
+        latency=np.asarray(outs.latency),
+        promo_scale=np.asarray(outs.promo_scale),
+        thrash_events=np.asarray(outs.thrash_events),
+    )
+
+
+def compare_modes(cfg: TieringConfig, tenants: List[TenantWorkload], ticks: int,
+                  modes=("equilibria", "tpp")) -> Dict[str, SimResult]:
+    return {m: simulate(cfg, tenants, ticks, mode=m) for m in modes}

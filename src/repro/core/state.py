@@ -1,0 +1,124 @@
+"""Equilibria state: page metadata, per-tenant counters, thrash table.
+
+Everything is a pytree of jnp arrays so the whole control plane is jittable
+and runs inside compiled steps (the TPU analogue of "in the kernel").
+
+Pages are *logical*: each tenant owns a static contiguous range of logical
+page ids (ownership is fixed; liveness and tier are dynamic). ``tier`` is the
+dynamic placement: 0 = fast (local DRAM / HBM analogue), 1 = slow (CXL
+analogue), -1 = not allocated.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TieringConfig
+
+TIER_NONE = -1
+TIER_FAST = 0
+TIER_SLOW = 1
+
+
+class TenantPolicy(NamedTuple):
+    """Static per-tenant fairness policy (paper §IV-B), in pages."""
+    lower_protection: jax.Array   # [T] int32; 0 = no protection
+    upper_bound: jax.Array        # [T] int32; 0 = unbounded
+
+
+class Counters(NamedTuple):
+    """Per-tenant observability (paper §IV-C — the cgroup tier_stat analogue)."""
+    promotions: jax.Array          # [T] int32: pages promoted (pgpromote)
+    demotions: jax.Array           # [T] int32: pages demoted (pgdemote)
+    attempted_promotions: jax.Array  # [T] int32: candidates scanned
+    reclaims: jax.Array            # [T] int32: pages freed
+    allocations: jax.Array         # [T] int32: pages allocated
+    thrash_events: jax.Array       # [T] int32: promote->demote under t_resident
+    sync_demotions: jax.Array      # [T] int32: allocation-path (upper-bound) demotes
+
+
+class ThrashTable(NamedTuple):
+    """Fixed-size direct-mapped table of recently-promoted pages (§IV-F).
+
+    slot = page_id % slots; collisions are the paper's 'sampling'."""
+    page: jax.Array               # [slots] int32, -1 empty
+    tick: jax.Array               # [slots] int32 promotion time
+
+
+class TierState(NamedTuple):
+    # page metadata [L]
+    tier: jax.Array               # int8: -1/0/1
+    hot: jax.Array                # f32 EWMA access rate
+    last_access: jax.Array        # int32 tick
+    # tenant state [T]
+    counters: Counters
+    promo_scale: jax.Array        # f32: thrash-mitigation promotion multiplier
+    thrash_prev: jax.Array        # int32: thrash_events at last controller run
+    usage_prev: jax.Array         # int32: total usage at last controller run
+    freed_since: jax.Array        # int32: pages freed since last controller run
+    steady: jax.Array             # bool: steady-state flag (set by controller)
+    table: ThrashTable
+    t: jax.Array                  # scalar int32 tick
+
+
+def zero_counters(n_tenants: int) -> Counters:
+    z = jnp.zeros((n_tenants,), jnp.int32)
+    return Counters(z, z, z, z, z, z, z)
+
+
+def init_state(cfg: TieringConfig, n_pages: int) -> TierState:
+    T = cfg.n_tenants
+    return TierState(
+        tier=jnp.full((n_pages,), TIER_NONE, jnp.int8),
+        hot=jnp.zeros((n_pages,), jnp.float32),
+        last_access=jnp.zeros((n_pages,), jnp.int32),
+        counters=zero_counters(T),
+        promo_scale=jnp.ones((T,), jnp.float32),
+        thrash_prev=jnp.zeros((T,), jnp.int32),
+        usage_prev=jnp.zeros((T,), jnp.int32),
+        freed_since=jnp.zeros((T,), jnp.int32),
+        steady=jnp.zeros((T,), bool),
+        table=ThrashTable(page=jnp.full((cfg.thrash_table_slots,), -1, jnp.int32),
+                          tick=jnp.zeros((cfg.thrash_table_slots,), jnp.int32)),
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_policy(cfg: TieringConfig) -> TenantPolicy:
+    T = cfg.n_tenants
+    prot = np.zeros(T, np.int32)
+    bound = np.zeros(T, np.int32)
+    for i, v in enumerate(cfg.lower_protection[:T]):
+        prot[i] = v
+    for i, v in enumerate(cfg.upper_bound[:T]):
+        bound[i] = v
+    return TenantPolicy(jnp.asarray(prot), jnp.asarray(bound))
+
+
+def tenant_usage(state: TierState, owner_onehot: jax.Array):
+    """owner_onehot: [T, L] static ownership. Returns (fast[T], slow[T]) page counts."""
+    fast = owner_onehot @ (state.tier == TIER_FAST).astype(jnp.int32)
+    slow = owner_onehot @ (state.tier == TIER_SLOW).astype(jnp.int32)
+    return fast, slow
+
+
+def tier_stat(state: TierState, owner_onehot: jax.Array, page_bytes: int = 1 << 24):
+    """Observability export — the cgroup `memory.tier_stat` analogue (§IV-C)."""
+    fast, slow = tenant_usage(state, owner_onehot)
+    c = state.counters
+    return {
+        "local_usage_bytes": fast * page_bytes,
+        "cxl_usage_bytes": slow * page_bytes,
+        "pgpromote": c.promotions,
+        "pgdemote": c.demotions,
+        "pgpromote_attempted": c.attempted_promotions,
+        "pgreclaim": c.reclaims,
+        "pgalloc": c.allocations,
+        "thrash_events": c.thrash_events,
+        "sync_demotions": c.sync_demotions,
+        "promo_rate_scale": state.promo_scale,
+        "steady_state": state.steady,
+    }

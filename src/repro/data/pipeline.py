@@ -1,0 +1,90 @@
+"""Deterministic synthetic data pipeline + abstract input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of a cell — weak-type-correct, shardable, no device allocation —
+exactly what the dry-run lowers against. ``synthetic_batch`` materializes the
+same shapes for smoke tests / examples, with a seeded LCG stream so the
+pipeline is reproducible and shardable (each host slices its own rows).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _extras_spec(cfg: ModelConfig, batch: int, abstract: bool,
+                 rng: Optional[np.random.Generator] = None) -> Dict:
+    out: Dict = {}
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm":
+        shp = (batch, cfg.num_image_tokens, cfg.d_model)
+        out["image_embeds"] = (jax.ShapeDtypeStruct(shp, dt) if abstract else
+                               jnp.asarray(rng.normal(size=shp) * 0.02, dt))
+    if cfg.family == "encdec":
+        shp = (batch, cfg.encoder_seq, cfg.d_model)
+        out["frames"] = (jax.ShapeDtypeStruct(shp, dt) if abstract else
+                         jnp.asarray(rng.normal(size=shp) * 0.02, dt))
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Abstract inputs for one cell (train/prefill: full batch; decode: the
+    per-step token batch — the KV/tier state is built by serve.init_serve_state)."""
+    b = shape.global_batch
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32),
+        }
+        specs.update(_extras_spec(cfg, b, abstract=True))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32)}
+        specs.update(_extras_spec(cfg, b, abstract=True))
+        return specs
+    # decode: one new token per sequence
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def synthetic_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+                    kind: str = "train") -> Dict:
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, size=(batch, seq), dtype=np.int32)
+    out = {"tokens": jnp.asarray(toks)}
+    if kind == "train":
+        labels = np.roll(toks, -1, axis=1)
+        out["labels"] = jnp.asarray(labels)
+    out.update(_extras_spec(cfg, batch, abstract=False, rng=rng))
+    return out
+
+
+class SyntheticLoader:
+    """Sharded, prefetching synthetic loader (host-side double buffering)."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+                 shard_id: int = 0, num_shards: int = 1):
+        assert batch % num_shards == 0
+        self.cfg, self.batch, self.seq = cfg, batch // num_shards, seq
+        self.seed = seed * num_shards + shard_id
+        self._step = 0
+        self._next = None
+
+    def _make(self, step: int) -> Dict:
+        return synthetic_batch(self.cfg, self.batch, self.seq,
+                               seed=self.seed + step * 7919)
+
+    def __iter__(self) -> Iterator[Dict]:
+        return self
+
+    def __next__(self) -> Dict:
+        if self._next is None:
+            self._next = self._make(self._step)
+        cur = self._next
+        self._step += 1
+        self._next = self._make(self._step)   # prefetch next
+        return cur

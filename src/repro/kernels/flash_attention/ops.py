@@ -1,0 +1,42 @@
+"""Jit'd public wrapper: layout handling, head-dim padding, impl dispatch."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_tpu
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _pad_d(x: jax.Array, mult: int = 128):
+    d = x.shape[-1]
+    pad = (-d) % mult
+    if pad == 0:
+        return x, d
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]), d
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl",
+                                             "block_q", "block_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    impl: str = "ref", block_q: int = 512,
+                    block_k: int = 512) -> jax.Array:
+    """Flash attention over [B, H|K, S, D] tensors.
+
+    impl: "ref" (pure jnp, runs anywhere) | "pallas" (TPU) |
+          "pallas_interpret" (kernel body executed on CPU for validation).
+    """
+    if impl == "ref":
+        return flash_attention_ref(q, k, v, causal=causal, window=window)
+    qp, d0 = _pad_d(q)
+    kp, _ = _pad_d(k)
+    vp, _ = _pad_d(v)
+    out = flash_attention_tpu(qp, kp, vp, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k,
+                              sm_scale=1.0 / (d0 ** 0.5),
+                              interpret=(impl == "pallas_interpret"))
+    return out[..., :d0]

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal, SWA)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """q: [B, H, Sq, D]; k, v: [B, K, Skv, D] (K divides H). -> [B, H, Sq, D]."""
+    b, h, sq, d = q.shape
+    kh, skv = k.shape[1], k.shape[2]
+    g = h // kh
+    ke = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    ve = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    scale = 1.0 / np.sqrt(d)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, ke)
+    qpos = jnp.arange(sq) + (skv - sq)   # right-aligned queries
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None] > qpos[:, None] - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, ve).astype(q.dtype)

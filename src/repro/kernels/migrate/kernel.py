@@ -1,0 +1,60 @@
+"""Page-migration kernel (Pallas TPU): batched promote/demote page copies.
+
+The scalar-prefetch page table (src_idx, dst_idx, sel) drives the BlockSpec
+index maps — the DMA engine streams exactly the selected [pt, K, D] page per
+(layer, sequence) program, nothing else. The destination pool is
+input/output-aliased so unselected sequences keep their data without any
+copy. On real hardware this is the HBM<->host (CXL-analogue) transfer; the
+same kernel covers both directions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mig_kernel(src_idx_ref, dst_idx_ref, sel_ref, src_ref, dst_in_ref,
+                dst_ref):
+    b = pl.program_id(1)
+
+    @pl.when(sel_ref[b] != 0)
+    def _copy():
+        dst_ref[...] = src_ref[...]
+
+    @pl.when(sel_ref[b] == 0)
+    def _keep():
+        dst_ref[...] = dst_in_ref[...]
+
+
+def migrate_pages_tpu(src_pool, dst_pool, src_idx, dst_idx, sel, *,
+                      interpret: bool = False):
+    """src/dst_pool: [L, B, Mp, pt, K, D]; src_idx/dst_idx: [B]; sel: [B]."""
+    L, B, Ms_, pt, K, D = src_pool.shape
+    Md = dst_pool.shape[2]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(L, B),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, pt, K, D),
+                         lambda l, b, si, di, se: (l, b, si[b], 0, 0, 0)),
+            pl.BlockSpec((1, 1, 1, pt, K, D),
+                         lambda l, b, si, di, se: (l, b, di[b], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, pt, K, D),
+                               lambda l, b, si, di, se: (l, b, di[b], 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        _mig_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst_pool.shape, dst_pool.dtype),
+        input_output_aliases={4: 0},   # dst_pool (3 scalars + src = idx 4) -> out
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.maximum(src_idx, 0), jnp.maximum(dst_idx, 0),
+      sel.astype(jnp.int32), src_pool, dst_pool)

@@ -1,0 +1,18 @@
+"""Jit'd wrapper for page migration with impl dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.migrate.kernel import migrate_pages_tpu
+from repro.kernels.migrate.ref import migrate_pages_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",), donate_argnums=(1,))
+def migrate_pages(src_pool, dst_pool, src_idx, dst_idx, sel, *,
+                  impl: str = "ref"):
+    if impl == "ref":
+        return migrate_pages_ref(src_pool, dst_pool, src_idx, dst_idx, sel)
+    return migrate_pages_tpu(src_pool, dst_pool, src_idx, dst_idx, sel,
+                             interpret=(impl == "pallas_interpret"))

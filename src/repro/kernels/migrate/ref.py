@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the page-migration kernel (matches
+memtier.tiering's `move`: one page per selected sequence, all layers)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def migrate_pages_ref(src_pool, dst_pool, src_idx, dst_idx, sel):
+    """src/dst_pool: [L, B, Mp, pt, K, D]; src_idx/dst_idx: [B]; sel: [B].
+    Returns dst_pool with page src_pool[:, b, src_idx[b]] written at
+    dst_idx[b] for selected b."""
+    L, B = src_pool.shape[:2]
+    barange = jnp.arange(B)
+    src = src_pool[:, barange, src_idx]
+    cur = dst_pool[:, barange, dst_idx]
+    out = jnp.where(sel[None, :, None, None, None], src, cur)
+    return dst_pool.at[:, barange, dst_idx].set(out)

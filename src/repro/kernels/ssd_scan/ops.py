@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the SSD scan with impl dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_tpu
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd_scan(x, a, b, c, *, chunk: int = 128, impl: str = "ref"):
+    """Mamba2 SSD. x: [B,S,H,P]; a: [B,S,H]; b,c: [B,S,H,N]."""
+    if impl == "ref":
+        return ssd_scan_ref(x, a, b, c, chunk)
+    return ssd_scan_tpu(x, a, b, c, chunk=chunk,
+                        interpret=(impl == "pallas_interpret"))

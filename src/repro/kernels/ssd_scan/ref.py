@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the Mamba2 SSD scan kernel: the chunked SSD from
+models/ssm.py restricted to a single (batch, head) — plus the full-array
+wrapper used for allclose tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked, ssd_recurrent_ref  # noqa: F401
+
+
+def ssd_scan_ref(x, a, b, c, chunk: int, h0=None):
+    """x: [B,S,H,P]; a: [B,S,H]; b,c: [B,S,H,N] -> (y [B,S,H,P], h [B,H,P,N]).
+    (Delegates to the framework implementation, which is itself validated
+    against the O(S) recurrent form.)"""
+    return ssd_chunked(x, a, b, c, chunk, h0=h0)

@@ -1,0 +1,61 @@
+"""Jit'd wrapper: run the pool-partial kernel on both tiers and merge.
+
+``tiered_attention(...)`` is a drop-in for
+memtier.kvcache.tiered_paged_attention (same outputs) with impl dispatch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tiered_attention.kernel import pool_attention_partial_tpu
+from repro.kernels.tiered_attention.ref import (merge_partials_ref,
+                                                pool_attention_partial_ref)
+
+
+def _renorm_mass(mass, mstab, m_merged, page_block):
+    """mass [B,H,Mp] with per-block stabilizers mstab [B,H,nblk] ->
+    unnormalized mass relative to m_merged [B,H]."""
+    B, H, Mp = mass.shape
+    nblk = mstab.shape[-1]
+    stab = jnp.repeat(mstab, Mp // nblk, axis=-1)            # [B,H,Mp]
+    return mass * jnp.exp(stab - m_merged[..., None])
+
+
+@functools.partial(jax.jit, static_argnames=("window", "impl", "page_block"))
+def tiered_attention(q, fast_k, fast_v, slow_k, slow_v, fast_page, slow_page,
+                     seq_len, *, window: Optional[int] = None,
+                     impl: str = "ref", page_block: int = 8):
+    """q: [B,1,H,D]; pools: [B,Mp,pt,K,D]; *_page: [B,Mp] absolute page ids
+    (-1 free); seq_len: [B]. Returns (out [B,1,H,D], fast_mass [B,Mf],
+    slow_mass [B,Ms]) — identical semantics to the XLA serving path."""
+    B, _, H, D = q.shape
+    q2 = q[:, 0]
+    if impl == "ref":
+        pf = pool_attention_partial_ref(q2, fast_k, fast_v, fast_page,
+                                        seq_len, window=window)
+        ps = pool_attention_partial_ref(q2, slow_k, slow_v, slow_page,
+                                        seq_len, window=window)
+        out, (mf, ms) = merge_partials_ref(q.dtype, [pf, ps])
+        return out[:, None], mf, ms
+
+    interpret = impl == "pallas_interpret"
+    af, mf_, lf, massf, stabf = pool_attention_partial_tpu(
+        q2, fast_k, fast_v, fast_page, seq_len, window=window,
+        page_block=page_block, interpret=interpret)
+    as_, ms_, ls, masss, stabs = pool_attention_partial_tpu(
+        q2, slow_k, slow_v, slow_page, seq_len, window=window,
+        page_block=page_block, interpret=interpret)
+    m = jnp.maximum(mf_, ms_)
+    cf = jnp.exp(mf_ - m)
+    cs = jnp.exp(ms_ - m)
+    l = lf * cf + ls * cs
+    out = (af * cf[..., None] + as_ * cs[..., None]) / jnp.maximum(
+        l[..., None], 1e-30)
+    denom = jnp.maximum(l.sum(axis=1), 1e-30)[:, None]
+    fast_mass = _renorm_mass(massf, stabf, m, page_block).sum(axis=1) / denom
+    slow_mass = _renorm_mass(masss, stabs, m, page_block).sum(axis=1) / denom
+    return out[:, None].astype(q.dtype), fast_mass, slow_mass

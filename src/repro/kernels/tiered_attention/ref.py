@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the tiered paged-attention kernel.
+
+Computes a *pool-partial* attention: online-softmax statistics plus per-page
+attention mass over ONE pool (fast or slow). Two partials merge into the
+final output (ops.py), mirroring memtier.kvcache.tiered_paged_attention.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def pool_attention_partial_ref(q, pool_k, pool_v, slot_page, seq_len, *,
+                               window: Optional[int] = None,
+                               sm_scale: Optional[float] = None):
+    """q: [B,H,D]; pool_k/v: [B,Mp,pt,K,D]; slot_page: [B,Mp] (absolute page
+    id, -1 free); seq_len: [B] (current position, inclusive).
+
+    Returns (acc [B,H,D] f32 — UNNORMALIZED, m [B,H], l [B,H],
+             mass [B,H,Mp] — per-head unnormalized page attention mass).
+    """
+    B, Mp, pt, K, D = pool_k.shape
+    H = q.shape[1]
+    G = H // K
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(D)
+    ke = jnp.repeat(pool_k, G, axis=3).reshape(B, Mp * pt, H, D)
+    ve = jnp.repeat(pool_v, G, axis=3).reshape(B, Mp * pt, H, D)
+    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32) * scale,
+                   ke.astype(jnp.float32))
+    tok = (slot_page.astype(jnp.int32) * pt)[:, :, None] + jnp.arange(pt)
+    ok = (slot_page >= 0)[:, :, None] & (tok <= seq_len[:, None, None])
+    if window is not None:
+        ok &= tok > (seq_len[:, None, None] - window)
+    ok = ok.reshape(B, 1, Mp * pt)
+    s = jnp.where(ok, s, NEG_INF)
+    m = s.max(axis=-1)                                     # [B,H]
+    p = jnp.where(ok, jnp.exp(s - m[..., None]), 0.0)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bht,bthd->bhd", p, ve.astype(jnp.float32))
+    mass = p.reshape(B, H, Mp, pt).sum(axis=-1)            # [B,H,Mp]
+    return acc, m, l, mass
+
+
+def merge_partials_ref(q_dtype, partials):
+    """Merge pool partials [(acc,m,l,mass), ...] -> (out [B,H,D], masses)."""
+    ms = jnp.stack([p[1] for p in partials])               # [P,B,H]
+    m = ms.max(axis=0)
+    outs, masses, l_tot = None, [], None
+    for acc, mp, lp, mass in partials:
+        c = jnp.exp(mp - m)                                # [B,H]
+        l_tot = lp * c if l_tot is None else l_tot + lp * c
+        outs = acc * c[..., None] if outs is None else outs + acc * c[..., None]
+        masses.append(mass * c[:, :, None])
+    out = outs / jnp.maximum(l_tot[..., None], 1e-30)
+    denom = jnp.maximum(l_tot.sum(axis=1), 1e-30)          # [B]
+    page_masses = [(mm.sum(axis=1) / denom[:, None]) for mm in masses]
+    return out.astype(q_dtype), page_masses

@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+# ^ MUST be the first lines, before any other import: jax locks the device
+#   count on first initialization. Set ONLY here — smoke tests and benches
+#   see the single real CPU device.
+
+# Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+# production meshes and record memory/cost/collective analysis.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_32b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+#
+# Results are cached as JSON under benchmarks/results/dryrun/.
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, shape_cells
+from repro.configs.base import SHAPES, ShapeConfig, TieringConfig, TrainConfig
+from repro.data.pipeline import input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.params import abstract_params, param_count
+from repro.models.transformer import model_specs
+from repro.optim.adamw import abstract_opt_state
+from repro.serve.decode import build_serve_step, init_serve_state
+from repro.sharding import rules as R
+from repro.train.step import make_prefill_step, make_train_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+# TPU v5e-class hardware model (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+
+_COLL_RE = re.compile(
+    r"(\w+\[[0-9,a-z{}\[\]]*\]|\([^)]*\))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.I)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+
+_DT_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+             "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+             "pred": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DT_BYTES.get(dt if dt in _DT_BYTES else dt[:3], 4)
+    return total
+
+
+# Ring-collective bytes-on-wire factors (per device, relative to result bytes)
+_COLL_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by collectives, parsed from post-SPMD HLO.
+    Shapes in the partitioned module are already per-device; we weight by
+    ring-algorithm factors ((N-1)/N ≈ 1)."""
+    per_op = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(2).lower()
+        b = _shape_bytes(m.group(1)) * _COLL_FACTOR.get(op, 1.0)
+        per_op[op] = per_op.get(op, 0.0) + b
+    per_op["total"] = float(sum(per_op.values()))
+    return per_op
+
+
+def build_cell(arch: str, shape: ShapeConfig, mesh, tc: TrainConfig,
+               cfg=None):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
+    from repro.sharding.context import set_mesh_context
+    set_mesh_context(mesh)
+    cfg = cfg or get_config(arch)
+    specs = model_specs(cfg)
+    aparams = abstract_params(specs)
+    pshard = R.param_shardings(specs, mesh, R.base_rules("pod" in mesh.axis_names))
+    batch = input_specs(cfg, shape)
+    bshard = R.batch_shardings(cfg, mesh, batch)
+
+    if shape.kind == "train":
+        aopt = abstract_opt_state(aparams)
+        oshard = jax.tree_util.tree_map(
+            lambda _: None, aopt, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        oshard = type(aopt)(m=pshard, v=pshard,
+                            step=R.replicated(mesh))
+        step = make_train_step(cfg, tc)
+        fn = jax.jit(step,
+                     in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+        return fn, (aparams, aopt, batch)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, tc)
+        fn = jax.jit(step, in_shardings=(pshard, bshard), out_shardings=None)
+        return fn, (aparams, batch)
+
+    # decode — keeps the layer SCAN. Both unrolled variants were tried and
+    # measured WORSE on this backend (stacked ys: +0% temp, slow compiles;
+    # in-place .at[l].set chain: +128% temp — XLA-CPU does not alias the
+    # DUS chain). The scan's xs->ys costs ~0.7-1.2x pool temp and compiles
+    # 6x faster. Full log: EXPERIMENTS.md §Perf B.
+    from repro.models.unroll import set_unroll
+    set_unroll(False)
+    tcfg = TieringConfig(n_tenants=4, page_tokens=64)
+    state = init_serve_state(cfg, tcfg, shape.global_batch, shape.seq_len,
+                             abstract=True)
+    sshard = R.serve_state_shardings(state, mesh)
+    step = build_serve_step(cfg, tcfg, shape.global_batch, shape.seq_len)
+
+    def step_batch(params, st, b):
+        return step(params, st, b["tokens"])
+
+    fn = jax.jit(step_batch,
+                 in_shardings=(pshard, sshard, bshard),
+                 out_shardings=(None, sshard),
+                 donate_argnums=(1,))
+    return fn, (aparams, state, batch)
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
+                tc: TrainConfig | None = None, save: bool = True,
+                tag: str = "", reduced_depth: int = 0) -> dict:
+    from repro.configs import reduced_depth_config
+    from repro.models.unroll import set_unroll
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if reduced_depth:
+        cfg = reduced_depth_config(arch, reduced_depth)
+        set_unroll(True)
+    else:
+        cfg = get_config(arch)
+        set_unroll(False)
+    tc = tc or TrainConfig()
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(map(str, mesh.devices.shape)),
+           "multi_pod": multi_pod, "kind": shape.kind, "tag": tag,
+           "reduced_depth": reduced_depth,
+           "num_layers": cfg.num_layers,
+           "params": param_count(model_specs(cfg)),
+           "active_params": cfg.active_param_count()}
+    try:
+        with mesh:
+            fn, args = build_cell(arch, shape, mesh, tc, cfg=cfg)
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+        from repro.models.unroll import unrolled
+        rec["unrolled"] = unrolled()
+        rec["lower_compile_s"] = round(time.time() - t0, 1)
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes",
+                          "alias_size_in_bytes")
+                if hasattr(ma, k)}
+        except Exception as e:  # noqa: BLE001
+            rec["memory_analysis"] = {"error": str(e)}
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            rec["cost_analysis"] = {
+                k: float(v) for k, v in ca.items()
+                if k in ("flops", "bytes accessed", "transcendentals",
+                         "utilization operand", "bytes accessed output")
+                or k.startswith("bytes accessed")}
+        except Exception as e:  # noqa: BLE001
+            rec["cost_analysis"] = {"error": str(e)}
+        try:
+            hlo = compiled.as_text()
+            rec["collectives"] = collective_bytes(hlo)
+            rec["hlo_bytes"] = len(hlo)
+        except Exception as e:  # noqa: BLE001
+            rec["collectives"] = {"error": str(e)}
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    if save:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        suffix = "multipod" if multi_pod else "pod"
+        if reduced_depth:
+            suffix += f"_red{reduced_depth}"
+        name = f"{arch}_{shape_name}_{suffix}{('_' + tag) if tag else ''}.json"
+        (RESULTS_DIR / name).write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--reduced", action="store_true",
+                    help="also run the two unrolled reduced-depth cost probes")
+    ap.add_argument("--reduced-only", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import reduced_depths
+
+    cells = []
+    if args.all:
+        pairs = [(a, sh.name) for a in ARCH_IDS for sh in shape_cells(a)]
+    else:
+        assert args.arch and args.shape
+        pairs = [(args.arch, args.shape)]
+    for arch, shape_name in pairs:
+        for mp in ([False, True] if args.both_meshes else [args.multi_pod]):
+            depths = [0]
+            if args.reduced or args.reduced_only:
+                if not mp:  # cost probes on the single-pod mesh only
+                    depths = list(reduced_depths(arch)) + ([] if args.reduced_only else [0])
+                    if args.reduced_only:
+                        pass
+                elif args.reduced_only:
+                    continue
+            for rd in depths:
+                cells.append((arch, shape_name, mp, rd))
+
+    for arch, shape_name, mp, rd in cells:
+        suffix = ("multipod" if mp else "pod") + (f"_red{rd}" if rd else "")
+        out = RESULTS_DIR / f"{arch}_{shape_name}_{suffix}{('_' + args.tag) if args.tag else ''}.json"
+        if out.exists() and not args.force:
+            rec = json.loads(out.read_text())
+            if rec.get("ok"):
+                print(f"SKIP {arch} {shape_name} {suffix} (cached ok)", flush=True)
+                continue
+        rec = dryrun_cell(arch, shape_name, mp, tag=args.tag, reduced_depth=rd)
+        status = "OK " if rec["ok"] else "FAIL"
+        flops = rec.get("cost_analysis", {}).get("flops", 0)
+        print(f"{status} {arch:24s} {shape_name:12s} {suffix:8s} "
+              f"{rec['total_s']:7.1f}s flops/dev={flops:.3e} "
+              f"coll/dev={rec.get('collectives', {}).get('total', 0):.3e}B",
+              flush=True)
+        if not rec["ok"]:
+            print(rec["error"], flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,290 @@
+"""Tiered paged KV cache — the Equilibria mechanism on the serving path.
+
+Layout (per decoder layer, stacked on a leading L axis, scanned):
+  fast_k/v: [L, B, Mf, pt, K, D]   fast tier (HBM-resident pages)
+  slow_k/v: [L, B, Ms, pt, K, D]   slow tier (CXL/host-class pages)
+
+Pages are per-sequence; the *global* fast tier is a shared budget enforced by
+the Equilibria policy (per-tenant lower protection / upper bound / Eq.1 /
+Eq.2 / thrash mitigation — the same functions as core/policy.py). Page
+hotness is the per-page attention mass emitted by the attention computation —
+the TPU-native analogue of NUMA hint faults: softmax weights *are* access
+frequencies.
+
+On a real TPU deployment the slow pools live in `pinned_host` memory and the
+Pallas kernel (kernels/tiered_attention) streams them; in the CPU dry-run
+both pools are device buffers and the latency difference is modeled.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TieringConfig
+from repro.core import policy as P
+from repro.core.state import Counters, TenantPolicy, ThrashTable, zero_counters
+
+NEG_INF = -1e30
+
+
+class TieredKVCache(NamedTuple):
+    # pools (leading layer axis, scanned)
+    fast_k: jax.Array      # [L, B, Mf, pt, K, D]
+    fast_v: jax.Array
+    slow_k: jax.Array      # [L, B, Ms, pt, K, D]
+    slow_v: jax.Array
+    # slot metadata [B, Mf] / [B, Ms]
+    fast_page: jax.Array   # logical page id held by slot, -1 free (int32)
+    slow_page: jax.Array
+    fast_hot: jax.Array    # f32 EWMA attention mass
+    slow_hot: jax.Array
+    # logical page table [B, M]: tier (-1/0/1) and index within tier pool
+    page_tier: jax.Array   # int8
+    page_idx: jax.Array    # int32
+    # sequence state
+    seq_len: jax.Array     # [B] int32 tokens generated so far (global position)
+    tenant: jax.Array      # [B] int32
+    # fairness state
+    counters: Counters     # [T]
+    promo_scale: jax.Array  # [T] f32
+    thrash_prev: jax.Array  # [T] int32
+    steady: jax.Array       # [T] bool
+    table: ThrashTable
+    t: jax.Array            # scalar int32 step
+
+
+def cache_dims(cfg: ModelConfig, shape_seq: int, page_tokens: int,
+               fast_frac: float = 0.75, slack: float = 0.3):
+    """Logical pages M and per-tier pool sizes (Mf, Ms) for a target context.
+    All rounded up to multiples of 16 so the page dim tiles the TP axis."""
+    def r16(n):
+        return max(16, ((n + 15) // 16) * 16)
+
+    if cfg.sliding_window is not None:
+        logical = r16(cfg.sliding_window // page_tokens + 2)  # ring over window
+    else:
+        logical = r16((shape_seq + page_tokens - 1) // page_tokens)
+    mf = min(r16(int(np.ceil(logical * fast_frac)) + 1), logical)
+    ms = min(r16(int(np.ceil(logical * slack)) + 1), logical)
+    return logical, mf, ms
+
+
+def kv_layer_count(cfg: ModelConfig) -> int:
+    """Number of attention layers that need a paged KV cache."""
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.hybrid_attn_every + 1  # shared-block apps
+    if cfg.family == "vlm":
+        return cfg.num_layers - cfg.num_layers // cfg.cross_attn_every
+    return cfg.num_layers  # dense/moe/encdec(decoder self-attn)
+
+
+def init_cache(cfg: ModelConfig, tcfg: TieringConfig, batch: int, seq: int,
+               abstract: bool = False):
+    """Concrete zeros (tests) or ShapeDtypeStructs (dry-run input_specs)."""
+    L = kv_layer_count(cfg)
+    pt = tcfg.page_tokens
+    M, Mf, Ms = cache_dims(cfg, seq, pt)
+    K, D = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    T = tcfg.n_tenants
+
+    def arr(shape, dtype, fill=0):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.full(shape, fill, dtype)
+
+    tenant = (jax.ShapeDtypeStruct((batch,), jnp.int32) if abstract
+              else jnp.arange(batch, dtype=jnp.int32) % T)
+    z32 = functools.partial(arr, dtype=jnp.int32)
+    return TieredKVCache(
+        fast_k=arr((L, batch, Mf, pt, K, D), dt),
+        fast_v=arr((L, batch, Mf, pt, K, D), dt),
+        slow_k=arr((L, batch, Ms, pt, K, D), dt),
+        slow_v=arr((L, batch, Ms, pt, K, D), dt),
+        fast_page=z32((batch, Mf), fill=-1),
+        slow_page=z32((batch, Ms), fill=-1),
+        fast_hot=arr((batch, Mf), jnp.float32),
+        slow_hot=arr((batch, Ms), jnp.float32),
+        page_tier=arr((batch, M), jnp.int8, fill=-1),
+        page_idx=z32((batch, M)),
+        seq_len=z32((batch,)),
+        tenant=tenant,
+        counters=(Counters(*[jax.ShapeDtypeStruct((T,), jnp.int32)] * 7)
+                  if abstract else zero_counters(T)),
+        promo_scale=arr((T,), jnp.float32, fill=1),
+        thrash_prev=z32((T,)),
+        steady=arr((T,), bool),
+        table=ThrashTable(page=z32((tcfg.thrash_table_slots,), fill=-1),
+                          tick=z32((tcfg.thrash_table_slots,))),
+        t=(jax.ShapeDtypeStruct((), jnp.int32) if abstract
+           else jnp.zeros((), jnp.int32)),
+    )
+
+
+# ------------------------------------------------------- page allocation ----
+def alloc_page_for_append(cache: TieredKVCache, tcfg: TieringConfig,
+                          policy: TenantPolicy, fast_budget: int):
+    """Allocate (or reuse, for SWA rings) the page that will hold this step's
+    token, for every sequence. Fast placement requires the tenant to be under
+    its upper bound AND the global fast budget to have headroom (§IV-D)."""
+    B, M = cache.page_tier.shape
+    pt_tokens = cache.fast_k.shape[3]
+    pos = cache.seq_len                                   # [B] position to write
+    apage = pos // pt_tokens                              # absolute page id
+    lpage = apage % M                                     # ring slot for SWA
+    need_new = (pos % pt_tokens) == 0
+    barange = jnp.arange(B)
+    cur_tier = cache.page_tier[barange, lpage].astype(jnp.int32)
+    reuse = need_new & (cur_tier >= 0)                    # ring slot overwrite
+
+    # per-tenant fast accounting
+    T = policy.lower_protection.shape[0]
+    fast_cnt = (cache.fast_page >= 0).sum(axis=1)         # [B]
+    ten_oh = jax.nn.one_hot(cache.tenant, T, dtype=jnp.int32)  # [B, T]
+    fast_usage = ten_oh.T @ fast_cnt                      # [T]
+    global_fast = fast_cnt.sum()
+
+    bound = policy.upper_bound[cache.tenant]
+    under_bound = (bound == 0) | (fast_usage[cache.tenant] < bound)
+    fast_free_slot = cache.fast_page < 0                  # [B, Mf]
+    has_fast_slot = fast_free_slot.any(axis=1)
+    budget_rank = jnp.cumsum((need_new & ~reuse).astype(jnp.int32)) - 1
+    budget_ok = (global_fast + budget_rank) < fast_budget
+    go_fast = need_new & ~reuse & under_bound & has_fast_slot & budget_ok
+
+    fast_slot = jnp.argmax(fast_free_slot, axis=1)        # first free
+    slow_free_slot = cache.slow_page < 0
+    slow_slot = jnp.argmax(slow_free_slot, axis=1)
+
+    # apply allocations
+    new_tier = jnp.where(go_fast, 0, 1).astype(jnp.int8)
+    new_idx = jnp.where(go_fast, fast_slot, slow_slot)
+    page_tier = cache.page_tier.at[barange, lpage].set(
+        jnp.where(need_new & ~reuse, new_tier, cache.page_tier[barange, lpage]))
+    page_idx = cache.page_idx.at[barange, lpage].set(
+        jnp.where(need_new & ~reuse, new_idx, cache.page_idx[barange, lpage]))
+    take_fast = need_new & ~reuse & go_fast
+    take_slow = need_new & ~reuse & ~go_fast
+    fast_page = cache.fast_page.at[barange, fast_slot].set(
+        jnp.where(take_fast, apage, cache.fast_page[barange, fast_slot]))
+    slow_page = cache.slow_page.at[barange, slow_slot].set(
+        jnp.where(take_slow, apage, cache.slow_page[barange, slow_slot]))
+    # ring-slot reuse (SWA): refresh the pool slot's absolute page id
+    reuse_idx = cache.page_idx[barange, lpage]
+    reuse_fast = reuse & (cur_tier == 0)
+    reuse_slow = reuse & (cur_tier == 1)
+    fast_page = fast_page.at[barange, reuse_idx].set(
+        jnp.where(reuse_fast, apage, fast_page[barange, reuse_idx]))
+    slow_page = slow_page.at[barange, reuse_idx].set(
+        jnp.where(reuse_slow, apage, slow_page[barange, reuse_idx]))
+    alloc_t = ten_oh.T @ (need_new & ~reuse).astype(jnp.int32)
+
+    cache = cache._replace(page_tier=page_tier, page_idx=page_idx,
+                           fast_page=fast_page, slow_page=slow_page,
+                           counters=cache.counters._replace(
+                               allocations=cache.counters.allocations + alloc_t))
+    return cache, lpage
+
+
+# ------------------------------------------------------------- KV append ----
+def append_token_kv(pool_k, pool_v, other_k, other_v, cache: TieredKVCache,
+                    lpage, k_new, v_new):
+    """Write this step's K/V ([B,1,K,D]) into the page allocated by
+    alloc_page_for_append. pool_* are this layer's [B, Mf|Ms, pt, K, D] slices;
+    writes go to the fast pool slice or slow pool slice depending on tier."""
+    B = k_new.shape[0]
+    barange = jnp.arange(B)
+    tier = cache.page_tier[barange, lpage]
+    idx = cache.page_idx[barange, lpage]
+    off = cache.seq_len % pool_k.shape[2]
+    kw, vw = k_new[:, 0], v_new[:, 0]
+    is_fast = tier == 0
+    # masked writes into both pools (one is a no-op per sequence)
+    fidx = jnp.where(is_fast, idx, 0)
+    sidx = jnp.where(is_fast, 0, idx)
+    pool_k = pool_k.at[barange, fidx, off].set(
+        jnp.where(is_fast[:, None, None], kw, pool_k[barange, fidx, off]))
+    pool_v = pool_v.at[barange, fidx, off].set(
+        jnp.where(is_fast[:, None, None], vw, pool_v[barange, fidx, off]))
+    other_k = other_k.at[barange, sidx, off].set(
+        jnp.where(is_fast[:, None, None], other_k[barange, sidx, off], kw))
+    other_v = other_v.at[barange, sidx, off].set(
+        jnp.where(is_fast[:, None, None], other_v[barange, sidx, off], vw))
+    return pool_k, pool_v, other_k, other_v
+
+
+# -------------------------------------------------- tiered paged attention ----
+def _pool_attention_partial(q, pool_k, pool_v, valid_tok):
+    """Online-softmax partial over one pool.
+    q: [B,K,G,D]; pool: [B,Mp,pt,K,D]; valid_tok: [B,Mp,pt] bool.
+    Returns (acc [B,K,G,D], m [B,K,G], l [B,K,G], mass [B,K,G,Mp])."""
+    B, Mp, pt, K, D = pool_k.shape
+    kf = pool_k.reshape(B, Mp * pt, K, D).astype(jnp.float32)
+    vf = pool_v.reshape(B, Mp * pt, K, D).astype(jnp.float32)
+    sc = jnp.einsum("bkgd,btkd->bkgt", q, kf)
+    vm = valid_tok.reshape(B, 1, 1, Mp * pt)
+    sc = jnp.where(vm, sc, NEG_INF)
+    m = sc.max(axis=-1)
+    p = jnp.exp(sc - m[..., None])
+    p = jnp.where(vm, p, 0.0)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bkgt,btkd->bkgd", p, vf)
+    # per-(head, page) attention mass — summed over heads only after the
+    # per-head merge corrections are applied (kernels/tiered_attention ref)
+    mass = p.reshape(B, K, -1, Mp, pt).sum(axis=4)
+    return acc, m, l, mass
+
+
+def tiered_paged_attention(q, fast_k, fast_v, slow_k, slow_v,
+                           fast_valid, slow_valid):
+    """Decode attention over the two-tier paged cache (XLA reference; the
+    Pallas kernel kernels/tiered_attention computes the same contraction).
+
+    q: [B,1,H,D]. fast_*: [B,Mf,pt,K,D]; *_valid: [B,Mp,pt] token validity.
+    Returns (out [B,1,H,D], fast_mass [B,Mf], slow_mass [B,Ms]).
+    """
+    B, _, H, D = q.shape
+    K = fast_k.shape[3]
+    G = H // K
+    scale = 1.0 / np.sqrt(D)
+    qg = (q[:, 0].reshape(B, K, G, D) * scale).astype(jnp.float32)
+    acc_f, m_f, l_f, mass_f = _pool_attention_partial(qg, fast_k, fast_v, fast_valid)
+    acc_s, m_s, l_s, mass_s = _pool_attention_partial(qg, slow_k, slow_v, slow_valid)
+    # merge the two partials (flash-style)
+    m = jnp.maximum(m_f, m_s)
+    cf = jnp.exp(m_f - m)
+    cs = jnp.exp(m_s - m)
+    l = l_f * cf + l_s * cs
+    acc = acc_f * cf[..., None] + acc_s * cs[..., None]
+    out = (acc / jnp.maximum(l[..., None], 1e-30)).reshape(B, 1, H, D)
+    # per-head merge corrections, then sum heads, then normalize by the
+    # merged partition mass (identical math to kernels/tiered_attention)
+    denom = jnp.maximum(l.sum(axis=(1, 2)), 1e-30)[:, None]
+    mass_f = (mass_f * cf[..., None]).sum(axis=(1, 2)) / denom
+    mass_s = (mass_s * cs[..., None]).sum(axis=(1, 2)) / denom
+    return out.astype(q.dtype), mass_f, mass_s
+
+
+def token_validity(cache: TieredKVCache, window: Optional[int]):
+    """Valid token mask per pool slot: [B,Mf,pt], [B,Ms,pt]."""
+    B, Mf = cache.fast_page.shape
+    Ms = cache.slow_page.shape[1]
+    pt = cache.fast_k.shape[3]
+    cur = cache.seq_len  # tokens 0..cur (cur inclusive: this step's token written)
+
+    def valid(slot_page):
+        Mp = slot_page.shape[1]
+        base = slot_page.astype(jnp.int32) * pt                     # [B,Mp]
+        tok = base[:, :, None] + jnp.arange(pt)[None, None, :]      # [B,Mp,pt]
+        ok = (slot_page >= 0)[:, :, None] & (tok <= cur[:, None, None])
+        if window is not None:
+            ok &= tok > (cur[:, None, None] - window)
+        return ok
+
+    return valid(cache.fast_page), valid(cache.slow_page)

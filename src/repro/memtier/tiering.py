@@ -1,0 +1,209 @@
+"""Equilibria tiering step over the paged KV cache.
+
+Runs inside the compiled serve_step after attention: EWMA-updates page
+hotness from attention mass, computes per-tenant quotas with the *same*
+policy functions as the OS-level simulator (core/policy.py — Eq.1, Eq.2,
+thrash controller), rounds them to per-sequence migrations (rate-limited,
+one page per selected sequence per step ≈ migration bandwidth limit), and
+executes the page copies between pools for all layers at once.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TieringConfig
+from repro.core import policy as P
+from repro.core.state import Counters, TenantPolicy
+from repro.memtier.kvcache import TieredKVCache
+
+
+def _per_tenant_seq_select(score: jax.Array, eligible: jax.Array,
+                           tenant: jax.Array, quota: jax.Array, n_tenants: int,
+                           k_per_tenant: int = 4) -> jax.Array:
+    """Pick up to quota[t] sequences per tenant with the highest score.
+    score/eligible/tenant: [B]; quota: [T]. Returns selected [B] bool."""
+    B = score.shape[0]
+    sel = jnp.zeros((B,), jnp.int32)
+    k = min(k_per_tenant, B)
+    for ti in range(n_tenants):
+        m = eligible & (tenant == ti)
+        s = jnp.where(m, score, -jnp.inf)
+        vals, idx = jax.lax.top_k(s, k)
+        take = (jnp.arange(k) < quota[ti]) & jnp.isfinite(vals)
+        sel = sel.at[idx].max(take.astype(jnp.int32))
+    return sel.astype(bool)
+
+
+def equilibria_kv_step(cache: TieredKVCache, fast_mass: jax.Array,
+                       slow_mass: jax.Array, tcfg: TieringConfig,
+                       policy: TenantPolicy, fast_budget: int,
+                       mode: str = "equilibria") -> TieredKVCache:
+    """One tiering step. fast_mass/slow_mass: [B, Mf]/[B, Ms] attention mass
+    accumulated over layers this step (the hotness signal)."""
+    B, Mf = cache.fast_page.shape
+    Ms = cache.slow_page.shape[1]
+    M = cache.page_tier.shape[1]
+    T = policy.lower_protection.shape[0]
+    barange = jnp.arange(B)
+    t = cache.t
+
+    # ---- hotness EWMA ----
+    fast_used = cache.fast_page >= 0
+    slow_used = cache.slow_page >= 0
+    fast_hot = jnp.where(fast_used, tcfg.hot_decay * cache.fast_hot + fast_mass, 0.0)
+    slow_hot = jnp.where(slow_used, tcfg.hot_decay * cache.slow_hot + slow_mass, 0.0)
+
+    # ---- per-tenant usage & contention ----
+    ten_oh = jax.nn.one_hot(cache.tenant, T, dtype=jnp.int32)      # [B, T]
+    fast_cnt = fast_used.sum(axis=1)
+    slow_cnt = slow_used.sum(axis=1)
+    fast_usage = ten_oh.T @ fast_cnt                                # [T]
+    global_fast = fast_cnt.sum()
+    wmark = max(int(np.ceil(fast_budget * tcfg.watermark_free)), 1)
+    slow_demand = (ten_oh.T @ (slow_hot.max(axis=1) >= tcfg.promo_hot_threshold
+                               ).astype(jnp.int32)).sum()
+    contended = (fast_budget - global_fast) < (wmark + slow_demand)
+
+    # ---- quotas (paper Eq.1 / Eq.2, per tenant) ----
+    if mode == "equilibria":
+        d_scan = P.eq1_demotion_scan(fast_usage, fast_usage, policy, contended)
+        sync = P.upper_bound_demotion(fast_usage, policy)
+        d_quota = jnp.minimum(d_scan.astype(jnp.int32) + sync, 4)
+        p_base = jnp.full((T,), 4.0, jnp.float32)
+        p_scan, _ = P.eq2_promotion_scan(p_base, fast_usage, policy,
+                                         contended, tcfg)
+        p_quota = jnp.maximum((p_scan * cache.promo_scale), 0.0).astype(jnp.int32)
+        bound_room = jnp.where(policy.upper_bound > 0,
+                               jnp.maximum(policy.upper_bound - fast_usage, 0),
+                               p_quota)
+        p_quota = jnp.minimum(p_quota, bound_room)
+    elif mode == "tpp":  # unregulated: demote when over budget, promote freely
+        over = jnp.maximum(global_fast - (fast_budget - wmark), 0)
+        d_quota = jnp.minimum(jnp.full((T,), over, jnp.int32), 4)
+        p_quota = jnp.full((T,), 4, jnp.int32)
+    else:  # static: no migration
+        d_quota = jnp.zeros((T,), jnp.int32)
+        p_quota = jnp.zeros((T,), jnp.int32)
+
+    # ---- demotion: coldest fast page of selected sequences ----
+    cold = jnp.where(fast_used, fast_hot, jnp.inf)
+    src_f = jnp.argmin(cold, axis=1)                               # [B]
+    has_fast = fast_used.any(axis=1)
+    has_slow_free = (~slow_used).any(axis=1)
+    demote_sel = _per_tenant_seq_select(
+        -cold[barange, src_f], has_fast & has_slow_free, cache.tenant,
+        d_quota, T)
+    dst_s = jnp.argmax(~slow_used, axis=1)                         # first free slow
+
+    apage_d = cache.fast_page[barange, src_f]                      # absolute page
+    lpage_d = jnp.maximum(apage_d, 0) % M                          # page-table slot
+    gpage_d = barange * (1 << 20) + jnp.maximum(apage_d, 0)        # stable identity
+    thrash_new = P.thrash_check_demotions(
+        cache.table, gpage_d, demote_sel, cache.tenant, t, tcfg, T)
+
+    def move(dst_pool, src_pool, dst_idx, src_idx, sel):
+        # dst/src pools: [L, B, Mp, pt, K, D]; move one page per selected seq
+        src = src_pool[:, barange, src_idx]                        # [L, B, pt, K, D]
+        cur = dst_pool[:, barange, dst_idx]
+        out = jnp.where(sel[None, :, None, None, None], src, cur)
+        return dst_pool.at[:, barange, dst_idx].set(out)
+
+    slow_k = move(cache.slow_k, cache.fast_k, dst_s, src_f, demote_sel)
+    slow_v = move(cache.slow_v, cache.fast_v, dst_s, src_f, demote_sel)
+    slow_page = cache.slow_page.at[barange, dst_s].set(
+        jnp.where(demote_sel, apage_d, cache.slow_page[barange, dst_s]))
+    slow_hot = slow_hot.at[barange, dst_s].set(
+        jnp.where(demote_sel, fast_hot[barange, src_f],
+                  slow_hot[barange, dst_s]))
+    fast_page = cache.fast_page.at[barange, src_f].set(
+        jnp.where(demote_sel, -1, cache.fast_page[barange, src_f]))
+    fast_hot = fast_hot.at[barange, src_f].set(
+        jnp.where(demote_sel, 0.0, fast_hot[barange, src_f]))
+    page_tier = cache.page_tier.at[barange, lpage_d].set(
+        jnp.where(demote_sel, 1, cache.page_tier[barange, lpage_d]
+                  .astype(jnp.int32)).astype(jnp.int8))
+    page_idx = cache.page_idx.at[barange, lpage_d].set(
+        jnp.where(demote_sel, dst_s, cache.page_idx[barange, lpage_d]))
+    fast_used = fast_page >= 0
+    slow_used = slow_page >= 0
+
+    # ---- promotion: hottest slow page of selected sequences ----
+    hot_s = jnp.where(slow_used, slow_hot, -jnp.inf)
+    src_s = jnp.argmax(hot_s, axis=1)
+    hot_enough = hot_s[barange, src_s] >= tcfg.promo_hot_threshold
+    has_fast_free = (~fast_used).any(axis=1)
+    headroom = jnp.maximum(fast_budget - fast_used.sum() - wmark, 0)
+    promote_sel = _per_tenant_seq_select(
+        hot_s[barange, src_s], hot_enough & has_fast_free, cache.tenant,
+        jnp.minimum(p_quota, headroom), T)
+    dst_f = jnp.argmax(~fast_used, axis=1)
+
+    apage_p = slow_page[barange, src_s]
+    lpage_p = jnp.maximum(apage_p, 0) % M
+    fast_k = move(cache.fast_k, slow_k, dst_f, src_s, promote_sel)
+    fast_v = move(cache.fast_v, slow_v, dst_f, src_s, promote_sel)
+    fast_page = fast_page.at[barange, dst_f].set(
+        jnp.where(promote_sel, apage_p, fast_page[barange, dst_f]))
+    fast_hot = fast_hot.at[barange, dst_f].set(
+        jnp.where(promote_sel, slow_hot[barange, src_s],
+                  fast_hot[barange, dst_f]))
+    slow_page = slow_page.at[barange, src_s].set(
+        jnp.where(promote_sel, -1, slow_page[barange, src_s]))
+    slow_hot = slow_hot.at[barange, src_s].set(
+        jnp.where(promote_sel, 0.0, slow_hot[barange, src_s]))
+    page_tier = page_tier.at[barange, lpage_p].set(
+        jnp.where(promote_sel, 0, page_tier[barange, lpage_p]
+                  .astype(jnp.int32)).astype(jnp.int8))
+    page_idx = page_idx.at[barange, lpage_p].set(
+        jnp.where(promote_sel, dst_f, page_idx[barange, lpage_p]))
+
+    gpage_p = barange * (1 << 20) + jnp.maximum(apage_p, 0)
+    table = P.thrash_record_promotions(cache.table, gpage_p, promote_sel, t)
+
+    # ---- counters & thrash controller ----
+    promo_t = ten_oh.T @ promote_sel.astype(jnp.int32)
+    demo_t = ten_oh.T @ demote_sel.astype(jnp.int32)
+    c = cache.counters
+    counters = Counters(
+        promotions=c.promotions + promo_t,
+        demotions=c.demotions + demo_t,
+        attempted_promotions=c.attempted_promotions
+        + ten_oh.T @ hot_enough.astype(jnp.int32),
+        reclaims=c.reclaims, allocations=c.allocations,
+        thrash_events=c.thrash_events + thrash_new,
+        sync_demotions=c.sync_demotions)
+
+    period = tcfg.controller_period
+
+    def run_ctrl(args):
+        scale, table_in, prev = args
+        rate = (counters.thrash_events - prev).astype(jnp.float32)
+        # decode is steady-state by construction after warmup
+        steady = jnp.full((T,), t > 2 * period, bool)
+        thrashing = rate > tcfg.r_thrashing
+        mitigate = steady & thrashing
+        scale = jnp.where(mitigate, jnp.maximum(scale * 0.5, 1 / 64), scale)
+        scale = jnp.where(~thrashing, jnp.minimum(scale * 2.0, 1.0), scale)
+        slots = table_in.page.shape[0]
+        cleared = table_in._replace(page=jnp.full((slots,), -1, jnp.int32))
+        return scale, cleared, counters.thrash_events, steady
+
+    def no_ctrl(args):
+        scale, table_in, prev = args
+        return scale, table_in, prev, cache.steady
+
+    promo_scale, table, thrash_prev, steady = jax.lax.cond(
+        (t + 1) % period == 0, run_ctrl, no_ctrl,
+        (cache.promo_scale, table, cache.thrash_prev))
+
+    return cache._replace(
+        fast_k=fast_k, fast_v=fast_v, slow_k=slow_k, slow_v=slow_v,
+        fast_page=fast_page, slow_page=slow_page,
+        fast_hot=fast_hot, slow_hot=slow_hot,
+        page_tier=page_tier, page_idx=page_idx,
+        counters=counters, promo_scale=promo_scale,
+        thrash_prev=thrash_prev, steady=steady, table=table, t=t + 1)

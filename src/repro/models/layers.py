@@ -1,0 +1,362 @@
+"""Core neural layers, pure JAX on parameter pytrees.
+
+Attention comes in four structural variants (picked by shape, not by flag):
+  * attn_dense    — materialized scores; short sequences (<= ~8k)
+  * attn_chunked  — online-softmax scan over KV chunks (flash-style); long prefill
+  * attn_local    — banded two-block sliding-window attention; SWA at any length
+  * attn_decode   — single-query attention against a contiguous KV cache
+The tiered paged-KV decode attention (the paper-relevant one) lives in
+serve/decode.py and kernels/tiered_attention/.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.params import ParamSpec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- norms ----
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------- rotary ----
+def rotary_embed(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, n_heads, head_dim]; positions: [..., S] (int)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs            # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                                  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------- attn cores ----
+# GQA is computed in expanded-head form: KV (small, TP-replicated) is
+# broadcast to H heads so every tensor keeps its "heads"->model sharding.
+# Splitting H into (K, G) would break TP when K < mesh model size (e.g. 8 kv
+# heads on a 16-wide axis): XLA then replicates the whole attention across
+# the model axis (~5x FLOPs/device — measured; see EXPERIMENTS.md §Perf).
+def _expand_kv(k: jax.Array, h: int) -> jax.Array:
+    """[B,T,K,D] -> [B,T,H,D]; head i attends kv head i // (H/K) (q-grouping
+    matches q.reshape(B,S,K,G,D) ordering)."""
+    b, t, kh, d = k.shape
+    if kh == h:
+        return k
+    return jnp.repeat(k, h // kh, axis=2)
+
+
+def attn_dense(q, k, v, *, causal: bool, window: Optional[int] = None,
+               q_offset: int = 0) -> jax.Array:
+    """Materialized-scores attention. q:[B,S,H,D] k,v:[B,T,K,D] -> [B,S,H,D]."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    ke = _expand_kv(k, h).astype(jnp.float32)
+    ve = _expand_kv(v, h).astype(jnp.float32)
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32) * scale, ke)
+    if causal or window is not None:
+        qpos = jnp.arange(s) + q_offset
+        kpos = jnp.arange(t)
+        mask = jnp.ones((s, t), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p, ve)
+    return out.astype(q.dtype)
+
+
+def attn_chunked(q, k, v, *, causal: bool = True, chunk: int = 1024) -> jax.Array:
+    """Flash-style online-softmax over KV chunks; avoids the S×T score tensor.
+
+    q:[B,S,H,D] k,v:[B,T,K,D]. Scans KV chunks; for causal, fully-masked
+    chunks still execute (static schedule) but contribute nothing — the
+    Pallas kernel (kernels/flash_attention) skips them on TPU.
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    assert t % chunk == 0, (t, chunk)
+    n_chunks = t // chunk
+    scale = 1.0 / np.sqrt(d)
+    qe = (q * scale).astype(jnp.float32)                               # [B,S,H,D]
+    kc = _expand_kv(k, h).reshape(b, n_chunks, chunk, h, d)
+    vc = _expand_kv(v, h).reshape(b, n_chunks, chunk, h, d)
+    qpos = jnp.arange(s)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        kb, vb, ci = xs
+        sc = jnp.einsum("bshd,bchd->bhsc", qe, kb.astype(jnp.float32))
+        if causal:
+            kpos = ci * chunk + jnp.arange(chunk)
+            mask = kpos[None, :] <= qpos[:, None]                      # [S, C]
+            sc = jnp.where(mask[None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhsc,bchd->bhsd", p, vb.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, h, s, d), jnp.float32)
+    m0 = jnp.full((b, h, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    from repro.models.unroll import chunk_unroll
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(n_chunks)),
+        unroll=chunk_unroll(n_chunks))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)                     # [B,S,H,D]
+
+
+def attn_local(q, k, v, *, window: int) -> jax.Array:
+    """Banded sliding-window attention: q block i attends kv blocks {i-1, i}.
+
+    Sub-quadratic: FLOPs ~ 2·S·2W. Requires S % W == 0 (pad upstream).
+    q:[B,S,H,D], k,v:[B,S,K,D].
+    """
+    b, s, h, d = q.shape
+    w = window
+    assert s % w == 0, (s, w)
+    nb = s // w
+    scale = 1.0 / np.sqrt(d)
+    qb = (q * scale).reshape(b, nb, w, h, d).astype(jnp.float32)
+    kb = _expand_kv(k, h).reshape(b, nb, w, h, d)
+    vb = _expand_kv(v, h).reshape(b, nb, w, h, d)
+    # previous block (block -1 = zeros, fully masked)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kb], axis=2).astype(jnp.float32)      # [B,nb,2w,H,D]
+    v2 = jnp.concatenate([vprev, vb], axis=2).astype(jnp.float32)
+    sc = jnp.einsum("bnshd,bnthd->bnhst", qb, k2)
+    qpos = jnp.arange(w)
+    kpos = jnp.arange(2 * w) - w                                       # relative to block start
+    mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] > qpos[:, None] - w)
+    block_first = (jnp.arange(nb) == 0)[:, None, None]                 # [nb,1,1]
+    prev_ok = (kpos >= 0)[None, None, :]                               # [1,1,2w]
+    mask_f = mask[None] & (~block_first | prev_ok)                     # [nb,w,2w]
+    sc = jnp.where(mask_f[None, :, None], sc, NEG_INF)                 # [1,nb,1,w,2w]
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bnhst,bnthd->bnshd", p, v2)
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def attn_decode(q, k_cache, v_cache, kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Single-token decode attention against a contiguous cache.
+
+    q:[B,1,H,D], caches:[B,T,K,D]; kv_len (opt): [B] valid lengths.
+    """
+    b, _, h, d = q.shape
+    t = k_cache.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    ke = _expand_kv(k_cache, h).astype(jnp.float32)
+    ve = _expand_kv(v_cache, h).astype(jnp.float32)
+    sc = jnp.einsum("bhd,bthd->bht", q[:, 0].astype(jnp.float32) * scale, ke)
+    if kv_len is not None:
+        valid = jnp.arange(t)[None] < kv_len[:, None]                  # [B,T]
+        sc = jnp.where(valid[:, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bht,bthd->bhd", p, ve)
+    return out[:, None].astype(q.dtype)
+
+
+# -------------------------------------------------------- attention block ----
+def attention_specs(cfg: ModelConfig, *, cross: bool = False, d_in: Optional[int] = None):
+    d = d_in or cfg.d_model
+    hd = cfg.resolved_head_dim
+    h, kh = cfg.num_heads, cfg.num_kv_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    specs = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim"), dt),
+        "wk": ParamSpec((d, kh, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wv": ParamSpec((d, kh, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed"), dt),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((hd,), ("head_dim",), dt, init="ones")
+        specs["k_norm"] = ParamSpec((hd,), ("head_dim",), dt, init="ones")
+    return specs
+
+
+def attention_qkv(p, x, cfg: ModelConfig, positions, *, kv_x=None, rope: bool = True):
+    """Project to q,k,v (+qk-norm, +rope). Returns q:[B,S,H,D], k,v:[B,T,K,D]."""
+    dt = jnp.dtype(cfg.dtype)
+    kv_src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", kv_src, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", kv_src, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    if rope and kv_x is None and positions is not None:
+        q = rotary_embed(q, positions, cfg.rope_theta)
+        k = rotary_embed(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_out(p, attn, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    return jnp.einsum("bshk,hkd->bsd", attn, p["wo"].astype(dt))
+
+
+def self_attention(p, x, cfg: ModelConfig, positions, *, causal=True,
+                   window=None) -> jax.Array:
+    """Full self-attention block body (no residual/norm)."""
+    q, k, v = attention_qkv(p, x, cfg, positions)
+    s = x.shape[1]
+    if window is not None and s > window:
+        attn = attn_local(q, k, v, window=window)
+    elif s > 2048 and causal:
+        attn = attn_chunked(q, k, v, causal=causal, chunk=min(1024, s))
+    else:
+        attn = attn_dense(q, k, v, causal=causal, window=window)
+    return attention_out(p, attn, cfg)
+
+
+def cross_attention(p, x, enc, cfg: ModelConfig) -> jax.Array:
+    q, k, v = attention_qkv(p, x, cfg, None, kv_x=enc, rope=False)
+    attn = attn_dense(q, k, v, causal=False)
+    return attention_out(p, attn, cfg)
+
+
+# ------------------------------------------------------------------ MLP ----
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None, d_in: Optional[int] = None):
+    d = d_in or cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    if cfg.act == "silu":
+        return {
+            "wg": ParamSpec((d, f), ("embed", "mlp"), dt),
+            "wu": ParamSpec((d, f), ("embed", "mlp"), dt),
+            "wd": ParamSpec((f, d), ("mlp", "embed"), dt),
+        }
+    return {
+        "w1": ParamSpec((d, f), ("embed", "mlp"), dt),
+        "b1": ParamSpec((f,), ("mlp",), dt, init="zeros"),
+        "w2": ParamSpec((f, d), ("mlp", "embed"), dt),
+        "b2": ParamSpec((d,), ("embed",), dt, init="zeros"),
+    }
+
+
+def mlp(p, x, cfg: ModelConfig) -> jax.Array:
+    dt = jnp.dtype(cfg.dtype)
+    if "wg" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(dt))
+        return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["wd"].astype(dt))
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(dt)) + p["b1"].astype(dt)
+    h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(dt)) + p["b2"].astype(dt)
+
+
+# ------------------------------------------------------------------ MoE ----
+def moe_specs(cfg: ModelConfig):
+    assert cfg.moe is not None
+    d, m = cfg.d_model, cfg.moe
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "router": ParamSpec((d, m.num_experts), ("embed", "experts_dim"), dt, init="small"),
+        "wg": ParamSpec((m.num_experts, d, m.d_ff_expert), ("experts", "embed", "expert_mlp"), dt),
+        "wu": ParamSpec((m.num_experts, d, m.d_ff_expert), ("experts", "embed", "expert_mlp"), dt),
+        "wd": ParamSpec((m.num_experts, m.d_ff_expert, d), ("experts", "expert_mlp", "embed"), dt),
+    }
+
+
+def moe_block(p, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Top-k MoE with *grouped gather dispatch* (per-sample groups).
+
+    Each sample is a routing group: every expert takes its top-C tokens
+    within the sample (C = S*top_k/E * capacity_factor), gathered directly —
+    no [T, E, C] dispatch one-hot einsum. The gather keeps all data local to
+    the sample's data shard (no cross-shard traffic), its backward is a
+    scatter-add, and expert FLOPs = capacity_factor x the ideal active
+    FLOPs. (The original GShard dispatch-einsum costs T*E*C*D flops — 2-4x
+    the expert matmuls themselves; see EXPERIMENTS.md §Perf mixtral
+    iteration.) Returns (out, aux_loss). x: [B, S, D].
+    """
+    m: MoEConfig = cfg.moe
+    dt = jnp.dtype(cfg.dtype)
+    b, s, d = x.shape
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                            # [B,S,E]
+    gate_vals, _ = jax.lax.top_k(probs, m.top_k)                       # [B,S,k]
+    thresh = gate_vals[..., -1:]                                       # [B,S,1]
+    # token-choice top-k membership, expert-side capacity selection
+    score = jnp.where(probs >= thresh, probs, 0.0)                     # [B,S,E]
+    capacity = max(int(np.ceil(s * m.top_k / m.num_experts
+                               * m.capacity_factor)), 4)
+    capacity = min(capacity, s)
+    vals, idx = jax.lax.top_k(score.transpose(0, 2, 1), capacity)      # [B,E,C]
+    keep = vals > 0.0
+    barange = jnp.arange(b)[:, None, None]
+    xe = x[barange, idx]                                               # [B,E,C,D]
+    g = jnp.einsum("becd,edf->becf", xe, p["wg"].astype(dt))
+    u = jnp.einsum("becd,edf->becf", xe, p["wu"].astype(dt))
+    ye = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u, p["wd"].astype(dt))
+    w = (vals * keep).astype(jnp.float32)                              # gates
+    weighted = ye.astype(jnp.float32) * w[..., None]
+    out = jnp.zeros((b, s, d), jnp.float32).at[barange, idx].add(weighted)
+    denom = jnp.zeros((b, s), jnp.float32).at[barange, idx].add(w)
+    out = out / jnp.maximum(denom, 1e-9)[..., None]
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    me = probs.mean((0, 1))
+    assigned = (probs >= thresh).astype(jnp.float32)
+    ce = assigned.mean((0, 1)) / m.top_k * m.num_experts
+    aux = jnp.sum(me * ce)
+    return out.astype(dt), aux
+
+
+def moe_block_decode(p, x, cfg: ModelConfig) -> jax.Array:
+    """MoE for decode (few tokens): gather per-token expert weights.
+
+    x: [B, 1, D]. No grad needed; gathers top_k expert mats per token.
+    """
+    m: MoEConfig = cfg.moe
+    dt = jnp.dtype(cfg.dtype)
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d)
+    logits = jnp.einsum("td,de->te", tokens.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)              # [T,k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    wg = p["wg"].astype(dt)[expert_idx]                                 # [T,k,D,F]
+    wu = p["wu"].astype(dt)[expert_idx]
+    wd = p["wd"].astype(dt)[expert_idx]
+    g = jnp.einsum("td,tkdf->tkf", tokens, wg)
+    u = jnp.einsum("td,tkdf->tkf", tokens, wu)
+    y = jnp.einsum("tkf,tkfd->tkd", jax.nn.silu(g) * u, wd)
+    out = jnp.einsum("tkd,tk->td", y.astype(jnp.float32),
+                     gate_vals.astype(jnp.float32))
+    return out.reshape(b, s, d).astype(dt)

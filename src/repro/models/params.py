@@ -1,0 +1,81 @@
+"""Parameter-spec system.
+
+Models declare a nested dict of ParamSpec (shape + dtype + logical axes + init).
+From specs we derive:
+  * init_params(key, specs)     -> concrete pytree (smoke tests, examples)
+  * abstract_params(specs)      -> ShapeDtypeStruct pytree (dry-run, no allocation)
+  * logical_axes(specs)         -> pytree of logical-axis tuples (sharding rules)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names, len == ndim
+    dtype: Any = jnp.float32
+    init: str = "normal"              # normal | zeros | ones | embed | small
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+ParamTree = Dict[str, Any]  # nested dict of ParamSpec
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, specs: ParamTree):
+    return jax.tree_util.tree_map(fn, specs, is_leaf=_is_spec)
+
+
+def abstract_params(specs: ParamTree):
+    return tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs)
+
+
+def logical_axes(specs: ParamTree):
+    return tree_map_specs(lambda s: s.axes, specs)
+
+
+def param_count(specs: ParamTree) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=_is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def param_bytes(specs: ParamTree) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=_is_spec)
+    return int(sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for s in leaves))
+
+
+def init_params(key: jax.Array, specs: ParamTree):
+    """Materialize concrete parameters. Deterministic given key."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(k, s: ParamSpec):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        fan_in = s.shape[0] if len(s.shape) >= 1 else 1
+        if s.init == "embed":
+            std = 1.0
+        elif s.init == "small":
+            std = 0.02
+        else:
+            std = s.scale / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, s.shape, jnp.float32) * std).astype(s.dtype)
+
+    out = [one(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)

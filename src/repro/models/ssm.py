@@ -1,0 +1,229 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked SSD algorithm for train/prefill; O(1)-state recurrent step for decode.
+The chunked form here is also the oracle for kernels/ssd_scan.
+
+TPU adaptation note (DESIGN.md §2): projections are split (wx/wz/wB/wC/wdt)
+instead of one fused in_proj so the inner dimension shards cleanly over the
+"model" mesh axis; head_dim is chosen per-arch so n_heads divides the TP axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.params import ParamSpec
+from repro.models.layers import rms_norm
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s: SSMConfig = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    assert nh * s.head_dim == di, (di, s.head_dim)
+    return di, nh, s.ngroups, s.state_dim
+
+
+def mamba_specs(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    di, nh, g, n = ssm_dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "norm": ParamSpec((d,), ("embed",), dt, init="ones"),
+        "wx": ParamSpec((d, di), ("embed", "ssm_inner"), dt),
+        "wz": ParamSpec((d, di), ("embed", "ssm_inner"), dt),
+        "wB": ParamSpec((d, g * n), ("embed", None), dt),
+        "wC": ParamSpec((d, g * n), ("embed", None), dt),
+        "wdt": ParamSpec((d, nh), ("embed", None), dt, init="small"),
+        "conv_x": ParamSpec((s.conv_width, di), (None, "ssm_inner"), dt, init="small"),
+        "conv_B": ParamSpec((s.conv_width, g * n), (None, None), dt, init="small"),
+        "conv_C": ParamSpec((s.conv_width, g * n), (None, None), dt, init="small"),
+        "dt_bias": ParamSpec((nh,), (None,), dt, init="zeros"),
+        "A_log": ParamSpec((nh,), (None,), dt, init="zeros"),
+        "D": ParamSpec((nh,), (None,), dt, init="ones"),
+        "gnorm": ParamSpec((di,), ("ssm_inner",), dt, init="ones"),
+        "wo": ParamSpec((di, d), ("ssm_inner", "embed"), dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: [B,S,C], w: [W,C]."""
+    width, c = w.shape
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],          # [W, 1, C]
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c)
+    return out.astype(x.dtype)
+
+
+def segsum(a: jax.Array) -> jax.Array:
+    """a: [..., q] log-decays -> [..., q, q] with L[i,j]=sum_{k=j+1..i} a_k (i>=j)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, a, b, c, chunk: int, h0: Optional[jax.Array] = None):
+    """Chunked SSD scan (Mamba2 paper Listing 1, JAX port).
+
+    x: [B,S,H,P] (already dt-scaled), a: [B,S,H] log decay (dt*A, negative),
+    b, c: [B,S,H,N] (groups pre-broadcast to heads).
+    Returns y: [B,S,H,P], h_final: [B,H,P,N].
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    xr = x.reshape(B, nc, chunk, H, P).astype(jnp.float32)
+    ar = a.reshape(B, nc, chunk, H).transpose(0, 1, 3, 2).astype(jnp.float32)  # [B,c,H,q]
+    br = b.reshape(B, nc, chunk, H, N).astype(jnp.float32)
+    cr = c.reshape(B, nc, chunk, H, N).astype(jnp.float32)
+
+    a_cum = jnp.cumsum(ar, axis=-1)                                   # [B,c,H,q]
+    L = jnp.exp(segsum(ar))                                           # [B,c,H,q,q]
+    # intra-chunk (diagonal blocks)
+    scores = jnp.einsum("bclhn,bcshn->bchls", cr, br) * L
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores, xr)
+    # per-chunk states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)                   # [B,c,H,q]
+    states = jnp.einsum("bcshn,bchs,bcshp->bchpn", br, decay_states, xr)
+    # inter-chunk recurrence
+    if h0 is None:
+        h0 = jnp.zeros((B, H, x.shape[-1], N), jnp.float32)
+    states_cat = jnp.concatenate([h0[:, None].astype(jnp.float32), states], axis=1)
+    chunk_sum = a_cum[..., -1].transpose(0, 2, 1)                     # [B,H,c]
+    decay_chunk = jnp.exp(segsum(jnp.pad(chunk_sum, ((0, 0), (0, 0), (1, 0)))))
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states_cat)
+    prev_states, h_final = new_states[:, :-1], new_states[:, -1]
+    # inter-chunk contribution
+    state_decay_out = jnp.exp(a_cum)                                  # [B,c,H,q]
+    y_off = jnp.einsum("bclhn,bchpn,bchl->bclhp", cr, prev_states, state_decay_out)
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_recurrent_ref(x, a, b, c, h0=None):
+    """O(S·N) sequential reference (oracle for ssd_chunked & the Pallas kernel)."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    h = (jnp.zeros((B, H, P, N), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+
+    def step(h, t):
+        xt, at, bt, ct = t
+        h = h * jnp.exp(at)[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhpn", bt, xt)
+        y = jnp.einsum("bhn,bhpn->bhp", ct, h)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          a.transpose(1, 0, 2).astype(jnp.float32),
+          b.transpose(1, 0, 2, 3).astype(jnp.float32),
+          c.transpose(1, 0, 2, 3).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h
+
+
+class MambaCache(NamedTuple):
+    """Per-layer decode state."""
+    h: jax.Array          # [B, H, P, N] SSM state
+    conv_x: jax.Array     # [B, W-1, di]
+    conv_B: jax.Array     # [B, W-1, g*n]
+    conv_C: jax.Array     # [B, W-1, g*n]
+
+
+def mamba_cache_specs(cfg: ModelConfig, batch: int, n_layers: int):
+    di, nh, g, n = ssm_dims(cfg)
+    s = cfg.ssm
+    w = s.conv_width - 1
+    f32, dt = jnp.float32, jnp.dtype(cfg.dtype)
+    return MambaCache(
+        h=jax.ShapeDtypeStruct((n_layers, batch, nh, s.head_dim, n), f32),
+        conv_x=jax.ShapeDtypeStruct((n_layers, batch, w, di), dt),
+        conv_B=jax.ShapeDtypeStruct((n_layers, batch, w, g * n), dt),
+        conv_C=jax.ShapeDtypeStruct((n_layers, batch, w, g * n), dt),
+    )
+
+
+def _project(p, u, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.einsum("bsd,di->bsi", u, p["wx"].astype(dt))
+    z = jnp.einsum("bsd,di->bsi", u, p["wz"].astype(dt))
+    bb = jnp.einsum("bsd,dn->bsn", u, p["wB"].astype(dt))
+    cc = jnp.einsum("bsd,dn->bsn", u, p["wC"].astype(dt))
+    dtv = jnp.einsum("bsd,dh->bsh", u, p["wdt"].astype(dt))
+    return x, z, bb, cc, dtv
+
+
+def mamba_block(p, u, cfg: ModelConfig,
+                h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence Mamba2 block (train/prefill). u: [B,S,D] -> ([B,S,D], h_final)."""
+    s: SSMConfig = cfg.ssm
+    di, nh, g, n = ssm_dims(cfg)
+    B, S, _ = u.shape
+    un = rms_norm(u, p["norm"], cfg.rms_eps)
+    x, z, bb, cc, dtv = _project(p, un, cfg)
+    x = jax.nn.silu(_causal_conv(x, p["conv_x"]))
+    bb = jax.nn.silu(_causal_conv(bb, p["conv_B"]))
+    cc = jax.nn.silu(_causal_conv(cc, p["conv_C"]))
+    dt_f = jax.nn.softplus(dtv.astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))         # [B,S,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                       # [H]
+    a = dt_f * A                                                       # [B,S,H] log-decay
+    xh = x.reshape(B, S, nh, s.head_dim)
+    xdt = xh.astype(jnp.float32) * dt_f[..., None]
+    # broadcast groups -> heads
+    bh = jnp.repeat(bb.reshape(B, S, g, n), nh // g, axis=2)
+    ch = jnp.repeat(cc.reshape(B, S, g, n), nh // g, axis=2)
+    y, h_fin = ssd_chunked(xdt, a, bh, ch, min(s.chunk_size, S), h0=h0)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y.astype(u.dtype) * jax.nn.silu(z), p["gnorm"], cfg.rms_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["wo"].astype(jnp.dtype(cfg.dtype)))
+    return u + out, h_fin
+
+
+def mamba_decode_step(p, u, cache: MambaCache, cfg: ModelConfig
+                      ) -> Tuple[jax.Array, MambaCache]:
+    """Single-token step. u: [B,1,D] -> ([B,1,D], new cache)."""
+    s: SSMConfig = cfg.ssm
+    di, nh, g, n = ssm_dims(cfg)
+    B = u.shape[0]
+    un = rms_norm(u, p["norm"], cfg.rms_eps)
+    x, z, bb, cc, dtv = _project(p, un, cfg)
+
+    def conv_step(buf, new, w):
+        # buf: [B, W-1, C]; new: [B, 1, C]
+        seq = jnp.concatenate([buf, new], axis=1)                      # [B, W, C]
+        out = jnp.einsum("bwc,wc->bc", seq.astype(jnp.float32),
+                         w.astype(jnp.float32))[:, None]
+        return jax.nn.silu(out).astype(new.dtype), seq[:, 1:]
+
+    x1, cx = conv_step(cache.conv_x, x, p["conv_x"])
+    b1, cb = conv_step(cache.conv_B, bb, p["conv_B"])
+    c1, ccv = conv_step(cache.conv_C, cc, p["conv_C"])
+    dt_f = jax.nn.softplus(dtv[:, 0].astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))         # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt_f * A)                                             # [B,H]
+    xh = x1[:, 0].reshape(B, nh, s.head_dim).astype(jnp.float32)
+    bh = jnp.repeat(b1[:, 0].reshape(B, g, n), nh // g, axis=1).astype(jnp.float32)
+    ch = jnp.repeat(c1[:, 0].reshape(B, g, n), nh // g, axis=1).astype(jnp.float32)
+    h = cache.h * da[..., None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhpn", bh, xh, dt_f)
+    y = jnp.einsum("bhn,bhpn->bhp", ch, h)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, di)
+    y = rms_norm(y.astype(u.dtype) * jax.nn.silu(z), p["gnorm"], cfg.rms_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["wo"].astype(jnp.dtype(cfg.dtype)))
+    return u + out, MambaCache(h=h, conv_x=cx, conv_B=cb, conv_C=ccv)

@@ -1,0 +1,370 @@
+"""Model stacks for all assigned architecture families.
+
+Every family exposes:
+  * <family>_specs(cfg)                       — ParamSpec tree (stacked layers)
+  * forward(params, tokens, cfg, ...)         — full-sequence logits (train/prefill)
+  * decode blocks take an ``attend`` callback so the same block code runs
+    against a contiguous cache (reference) or the tiered paged cache (serve/).
+
+Layers are stacked along a leading "layers" axis and scanned with lax.scan so
+HLO size is O(1) in depth (68 dry-run compiles on one CPU core).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec, tree_map_specs
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.unroll import scan_layers
+from repro.sharding.context import constrain_batch
+
+
+# ------------------------------------------------------------- utilities ----
+def stack_specs(specs, n: int):
+    """Prepend a stacked 'layers' dimension to every ParamSpec."""
+    return tree_map_specs(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype,
+                            s.init, s.scale), specs)
+
+
+def make_remat(body: Callable, policy: str) -> Callable:
+    if policy == "none":
+        return body
+    if policy == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)  # "block": full remat of each layer
+
+
+def embed_specs(cfg: ModelConfig):
+    # The table's model dim uses the dedicated "embed_tbl" logical axis
+    # (unsharded): FSDP-sharding it over "data" conflicts with the
+    # batch-sharded token indices and makes GSPMD replicate the lookup over
+    # the batch (measured 1.3GB f32 all-reduces; EXPERIMENTS.md §Perf C).
+    dt = jnp.dtype(cfg.param_dtype)
+    specs = {
+        "tok": ParamSpec((cfg.vocab_size, cfg.d_model),
+                         ("vocab", "embed_tbl"), dt, init="embed"),
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), dt, init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                     ("embed_tbl", "vocab"), dt)
+    return specs
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    return constrain_batch(params["embed"]["tok"].astype(dt)[tokens])
+
+
+def lm_logits(params, x, cfg: ModelConfig):
+    x = L.rms_norm(x, params["embed"]["final_norm"], cfg.rms_eps)
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.tie_embeddings:
+        out = jnp.einsum("bsd,vd->bsv", x, params["embed"]["tok"].astype(dt))
+    else:
+        out = jnp.einsum("bsd,dv->bsv", x, params["embed"]["lm_head"].astype(dt))
+    return constrain_batch(out, model_dim=2)
+
+
+# ------------------------------------------------- dense / MoE decoder LM ----
+def decoder_block_specs(cfg: ModelConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    specs = {
+        "ln1": ParamSpec((cfg.d_model,), ("embed",), dt, init="ones"),
+        "attn": L.attention_specs(cfg),
+        "ln2": ParamSpec((cfg.d_model,), ("embed",), dt, init="ones"),
+    }
+    if cfg.family == "moe":
+        specs["moe"] = L.moe_specs(cfg)
+    else:
+        specs["mlp"] = L.mlp_specs(cfg)
+    return specs
+
+
+def decoder_block(p, x, cfg: ModelConfig, positions) -> Tuple[jax.Array, jax.Array]:
+    """Pre-norm block. Returns (x, moe_aux_loss)."""
+    h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+    x = x + L.self_attention(p["attn"], h, cfg, positions,
+                             causal=True, window=cfg.sliding_window)
+    h = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+    if cfg.family == "moe":
+        y, aux = L.moe_block(p["moe"], h, cfg)
+    else:
+        y, aux = L.mlp(p["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def decoder_block_decode(p, x, cfg: ModelConfig, positions, attend) -> jax.Array:
+    """Decode block; ``attend(q, k_new, v_new) -> attn [B,1,H,D]`` owns the cache."""
+    h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+    q, k, v = L.attention_qkv(p["attn"], h, cfg, positions)
+    x = x + L.attention_out(p["attn"], attend(q, k, v), cfg)
+    h = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+    if cfg.family == "moe":
+        y = L.moe_block_decode(p["moe"], h, cfg)
+    else:
+        y = L.mlp(p["mlp"], h, cfg)
+    return x + y
+
+
+def lm_specs(cfg: ModelConfig):
+    return {"embed": embed_specs(cfg),
+            "layers": stack_specs(decoder_block_specs(cfg), cfg.num_layers)}
+
+
+def lm_forward(params, tokens, cfg: ModelConfig, remat: str = "block"):
+    """tokens: [B,S] -> logits [B,S,V]; also returns aux (moe load-balance)."""
+    x = embed_tokens(params, tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = decoder_block(lp, constrain_batch(x), cfg, positions)
+        return (constrain_batch(x), aux + a), None
+
+    body = make_remat(body, remat)
+    (x, aux), _ = scan_layers(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    return lm_logits(params, x, cfg), aux
+
+
+# ------------------------------------------------------------ Mamba2 LM ----
+def ssm_lm_specs(cfg: ModelConfig):
+    return {"embed": embed_specs(cfg),
+            "layers": stack_specs(S.mamba_specs(cfg), cfg.num_layers)}
+
+
+def ssm_lm_forward(params, tokens, cfg: ModelConfig, remat: str = "block"):
+    x = embed_tokens(params, tokens, cfg)
+
+    def body(x, lp):
+        x, _ = S.mamba_block(lp, constrain_batch(x), cfg)
+        return constrain_batch(x), None
+
+    body = make_remat(body, remat)
+    x, _ = scan_layers(body, x, params["layers"])
+    return lm_logits(params, x, cfg), jnp.zeros((), jnp.float32)
+
+
+# -------------------------------------------------- hybrid (zamba2-style) ----
+def hybrid_specs(cfg: ModelConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    shared = {
+        "in_proj": ParamSpec((2 * cfg.d_model, cfg.d_model), ("embed_x2", "embed"), dt),
+        "ln1": ParamSpec((cfg.d_model,), ("embed",), dt, init="ones"),
+        "attn": L.attention_specs(cfg),
+        "ln2": ParamSpec((cfg.d_model,), ("embed",), dt, init="ones"),
+        "mlp": L.mlp_specs(cfg),
+        "out_proj": ParamSpec((cfg.d_model, cfg.d_model), ("embed", "embed_out"), dt,
+                              init="small"),
+    }
+    return {"embed": embed_specs(cfg),
+            "layers": stack_specs(S.mamba_specs(cfg), cfg.num_layers),
+            "shared": shared}
+
+
+def _shared_attn_block(sp, x, emb0, cfg: ModelConfig, positions):
+    dt = jnp.dtype(cfg.dtype)
+    h = jnp.concatenate([x, emb0], axis=-1)
+    h = jnp.einsum("bse,ed->bsd", h, sp["in_proj"].astype(dt))
+    a = L.rms_norm(h, sp["ln1"], cfg.rms_eps)
+    h = h + L.self_attention(sp["attn"], a, cfg, positions, causal=True,
+                             window=cfg.sliding_window)
+    a = L.rms_norm(h, sp["ln2"], cfg.rms_eps)
+    h = h + L.mlp(sp["mlp"], a, cfg)
+    return x + jnp.einsum("bsd,de->bse", h, sp["out_proj"].astype(dt))
+
+
+def hybrid_forward(params, tokens, cfg: ModelConfig, remat: str = "block"):
+    """Zamba2-style: Mamba2 backbone, one *shared* attention block applied
+    every ``hybrid_attn_every`` layers on concat(hidden, embeddings)."""
+    x = embed_tokens(params, tokens, cfg)
+    emb0 = x
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+    sp = params["shared"]
+    every = cfg.hybrid_attn_every
+
+    def body(carry, xs):
+        x, = carry
+        lp, idx = xs
+        x = constrain_batch(x)
+        x = jax.lax.cond(idx % every == 0,
+                         lambda x: _shared_attn_block(sp, x, emb0, cfg, positions),
+                         lambda x: x, x)
+        x, _ = S.mamba_block(lp, x, cfg)
+        return (constrain_batch(x),), None
+
+    body = make_remat(body, remat)
+    (x,), _ = scan_layers(body, (x,),
+                           (params["layers"], jnp.arange(cfg.num_layers)))
+    return lm_logits(params, x, cfg), jnp.zeros((), jnp.float32)
+
+
+# ----------------------------------------------------- VLM (llama-vision) ----
+def vlm_specs(cfg: ModelConfig):
+    """num_layers = self layers + cross layers; repeat unit of
+    (cross_attn_every - 1) self blocks followed by 1 gated cross block."""
+    every = cfg.cross_attn_every
+    assert every > 1 and cfg.num_layers % every == 0
+    n_units = cfg.num_layers // every
+    dt = jnp.dtype(cfg.param_dtype)
+    unit = {
+        "self": stack_specs(decoder_block_specs(cfg), every - 1),
+        "cross": {
+            "ln": ParamSpec((cfg.d_model,), ("embed",), dt, init="ones"),
+            "attn": L.attention_specs(cfg),
+            "gate": ParamSpec((), (), dt, init="zeros"),
+            "ln2": ParamSpec((cfg.d_model,), ("embed",), dt, init="ones"),
+            "mlp": L.mlp_specs(cfg),
+            "gate_mlp": ParamSpec((), (), dt, init="zeros"),
+        },
+    }
+    return {"embed": embed_specs(cfg), "units": stack_specs(unit, n_units)}
+
+
+def _cross_block(cp, x, enc, cfg: ModelConfig):
+    h = L.rms_norm(x, cp["ln"], cfg.rms_eps)
+    a = L.cross_attention(cp["attn"], h, enc, cfg)
+    x = x + jnp.tanh(cp["gate"].astype(jnp.float32)).astype(x.dtype) * a
+    h = L.rms_norm(x, cp["ln2"], cfg.rms_eps)
+    y = L.mlp(cp["mlp"], h, cfg)
+    return x + jnp.tanh(cp["gate_mlp"].astype(jnp.float32)).astype(x.dtype) * y
+
+
+def vlm_forward(params, tokens, image_embeds, cfg: ModelConfig,
+                remat: str = "block"):
+    """tokens: [B,S]; image_embeds (stub frontend): [B, n_img, D]."""
+    x = embed_tokens(params, tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+    enc = image_embeds.astype(jnp.dtype(cfg.dtype))
+
+    def self_body(carry, lp):
+        x, aux = carry
+        x, a = decoder_block(lp, constrain_batch(x), cfg, positions)
+        return (constrain_batch(x), aux + a), None
+
+    self_body = make_remat(self_body, remat)
+
+    def unit_body(carry, up):
+        x, aux = carry
+        (x, aux), _ = scan_layers(self_body, (x, aux), up["self"])
+        x = constrain_batch(_cross_block(up["cross"], x, enc, cfg))
+        return (x, aux), None
+
+    (x, aux), _ = scan_layers(unit_body, (x, jnp.zeros((), jnp.float32)),
+                               params["units"])
+    return lm_logits(params, x, cfg), aux
+
+
+# ------------------------------------------------- enc-dec (whisper-tiny) ----
+def encdec_specs(cfg: ModelConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    enc_block = {
+        "ln1": ParamSpec((cfg.d_model,), ("embed",), dt, init="ones"),
+        "attn": L.attention_specs(cfg),
+        "ln2": ParamSpec((cfg.d_model,), ("embed",), dt, init="ones"),
+        "mlp": L.mlp_specs(cfg),
+    }
+    dec_block = {
+        "ln1": ParamSpec((cfg.d_model,), ("embed",), dt, init="ones"),
+        "attn": L.attention_specs(cfg),
+        "ln_x": ParamSpec((cfg.d_model,), ("embed",), dt, init="ones"),
+        "xattn": L.attention_specs(cfg, cross=True),
+        "ln2": ParamSpec((cfg.d_model,), ("embed",), dt, init="ones"),
+        "mlp": L.mlp_specs(cfg),
+    }
+    return {
+        "embed": embed_specs(cfg),
+        "enc_ln": ParamSpec((cfg.d_model,), ("embed",), dt, init="ones"),
+        "encoder": stack_specs(enc_block, cfg.encoder_layers),
+        "decoder": stack_specs(dec_block, cfg.num_layers),
+    }
+
+
+def _sinusoid(seq: int, d: int) -> np.ndarray:
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1).astype(np.float32)
+
+
+def encode_frames(params, frames, cfg: ModelConfig, remat: str = "block"):
+    """frames: [B, T_enc, D] precomputed frame embeddings (stub conv frontend)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = frames.astype(dt) + jnp.asarray(_sinusoid(frames.shape[1], cfg.d_model), dt)
+
+    def body(x, lp):
+        x = constrain_batch(x)
+        h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+        x = x + L.self_attention(lp["attn"], h, cfg, None, causal=False)
+        h = L.rms_norm(x, lp["ln2"], cfg.rms_eps)
+        return constrain_batch(x + L.mlp(lp["mlp"], h, cfg)), None
+
+    body = make_remat(body, remat)
+    x, _ = scan_layers(body, x, params["encoder"])
+    return L.rms_norm(x, params["enc_ln"], cfg.rms_eps)
+
+
+def encdec_dec_block(p, x, enc, cfg: ModelConfig, positions):
+    h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+    x = x + L.self_attention(p["attn"], h, cfg, positions, causal=True)
+    h = L.rms_norm(x, p["ln_x"], cfg.rms_eps)
+    x = x + L.cross_attention(p["xattn"], h, enc, cfg)
+    h = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+    return x + L.mlp(p["mlp"], h, cfg)
+
+
+def encdec_forward(params, tokens, frames, cfg: ModelConfig,
+                   remat: str = "block"):
+    enc = encode_frames(params, frames, cfg, remat)
+    x = embed_tokens(params, tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+
+    def body(x, lp):
+        return constrain_batch(
+            encdec_dec_block(lp, constrain_batch(x), enc, cfg, positions)), None
+
+    body = make_remat(body, remat)
+    x, _ = scan_layers(body, x, params["decoder"])
+    return lm_logits(params, x, cfg), jnp.zeros((), jnp.float32)
+
+
+# --------------------------------------------------------------- router ----
+def model_specs(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe"):
+        return lm_specs(cfg)
+    if cfg.family == "ssm":
+        return ssm_lm_specs(cfg)
+    if cfg.family == "hybrid":
+        return hybrid_specs(cfg)
+    if cfg.family == "vlm":
+        return vlm_specs(cfg)
+    if cfg.family == "encdec":
+        return encdec_specs(cfg)
+    raise ValueError(cfg.family)
+
+
+def model_forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+                  remat: str = "block"):
+    """Unified full-sequence forward. batch: tokens [+frames | +image_embeds]."""
+    tokens = batch["tokens"]
+    if cfg.family in ("dense", "moe"):
+        return lm_forward(params, tokens, cfg, remat)
+    if cfg.family == "ssm":
+        return ssm_lm_forward(params, tokens, cfg, remat)
+    if cfg.family == "hybrid":
+        return hybrid_forward(params, tokens, cfg, remat)
+    if cfg.family == "vlm":
+        return vlm_forward(params, tokens, batch["image_embeds"], cfg, remat)
+    if cfg.family == "encdec":
+        return encdec_forward(params, tokens, batch["frames"], cfg, remat)
+    raise ValueError(cfg.family)

@@ -1,0 +1,48 @@
+"""Scan-vs-unroll switch for layer stacks.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE (trip count ignored), so
+the scan-over-layers HLO undercounts FLOPs/bytes/collective traffic. For the
+roofline we re-lower each cell at two reduced depths with the stacks fully
+unrolled (exact per-layer HLO, same sharding) and extrapolate linearly to the
+production depth: cost(L) = base + L * per_layer. Production compiles keep
+the scan (O(1) HLO size, fast compiles).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_UNROLL = False
+
+
+def set_unroll(v: bool) -> None:
+    global _UNROLL
+    _UNROLL = bool(v)
+
+
+def unrolled() -> bool:
+    return _UNROLL
+
+
+def scan_layers(body, carry, xs, length=None):
+    """jax.lax.scan over the layer dim, or an exact python-level unroll."""
+    if not _UNROLL:
+        return jax.lax.scan(body, carry, xs)
+    leaves = jax.tree_util.tree_leaves(xs)
+    n = length if length is not None else leaves[0].shape[0]
+    ys = []
+    for i in range(n):
+        xs_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, xs_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys_stacked = jax.tree_util.tree_map(
+            lambda *a: jnp.stack(a, axis=0), *ys)
+    else:
+        ys_stacked = None
+    return carry, ys_stacked
+
+
+def chunk_unroll(n_chunks: int) -> int:
+    """Unroll factor for inner chunk scans (flash attention reference)."""
+    return n_chunks if _UNROLL else 1

@@ -1,0 +1,110 @@
+"""AdamW with decoupled weight decay, global-norm clipping, cosine schedule,
+and optional int8 block-quantized gradient compression (simulating a
+compressed DP all-reduce payload — the distributed-optimization trick).
+
+No optax dependency: optimizer state is a plain pytree {m, v, step}.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    m: object      # pytree like params (f32)
+    v: object      # pytree like params (f32)
+    step: jax.Array
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(m=zeros,
+                    v=jax.tree_util.tree_map(jnp.copy, zeros)
+                    if not isinstance(zeros, jax.ShapeDtypeStruct) else zeros,
+                    step=jnp.zeros((), jnp.int32))
+
+
+def abstract_opt_state(abstract_params) -> OptState:
+    f32 = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), abstract_params)
+    return OptState(m=f32, v=f32, step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def lr_schedule(step: jax.Array, tc: TrainConfig) -> jax.Array:
+    warm = jnp.minimum(step.astype(jnp.float32) / max(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step.astype(jnp.float32) - tc.warmup_steps)
+                    / max(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def compress_grads_int8(grads, block: int = 256):
+    """Simulated compressed DP all-reduce: block-wise int8 quantize-dequantize.
+
+    On a real deployment the int8 payload (+ per-block scales) is what crosses
+    the DCN/ICI links between pods (4x fewer bytes on the gradient
+    all-reduce); here we apply the quantization error so training sees the
+    exact numerics of the compressed collective.
+    """
+    def q(g):
+        g32 = g.astype(jnp.float32)
+        flat = g32.reshape(-1)
+        n = flat.shape[0]
+        pad = (-n) % block
+        flat = jnp.pad(flat, (0, pad)).reshape(-1, block)
+        scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+        qv = jnp.clip(jnp.round(flat / jnp.maximum(scale, 1e-12)), -127, 127)
+        deq = (qv * scale).reshape(-1)[:n].reshape(g.shape)
+        return deq
+    return jax.tree_util.tree_map(q, grads)
+
+
+def adamw_update(params, grads, opt: OptState, tc: TrainConfig
+                 ) -> Tuple[object, OptState, dict]:
+    if tc.grad_compression:
+        grads = compress_grads_int8(grads)
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    step = opt.step + 1
+    lr = lr_schedule(step, tc)
+    b1, b2 = tc.beta1, tc.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (mhat / (jnp.sqrt(vhat) + tc.eps)
+                          + tc.weight_decay * p32)
+        return p32.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt.m)
+    flat_v = treedef.flatten_up_to(opt.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(m=new_m, v=new_v, step=step), metrics

@@ -1,0 +1,356 @@
+"""Multi-tenant decode serving with Equilibria-tiered paged KV caches.
+
+``build_serve_step(cfg, tcfg, batch, seq)`` returns (serve_step, init_state)
+for any assigned architecture family. serve_step(params, state, tokens)
+decodes one token for every sequence and runs the Equilibria tiering step
+(hotness from attention mass, Eq.1/Eq.2-regulated migrations, thrash
+mitigation) inside the same compiled program.
+
+State is a dict: {"kv": TieredKVCache?, "mamba": MambaCache?, "cross_k/v"?}.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TieringConfig
+from repro.core.state import TenantPolicy, make_policy
+from repro.memtier import kvcache as KC
+from repro.memtier.tiering import equilibria_kv_step
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as TF
+from repro.models.unroll import scan_layers
+
+
+def fast_budget_pages(cfg: ModelConfig, tcfg: TieringConfig, batch: int,
+                      seq: int) -> int:
+    """Global fast-tier budget: fast_frac of the total logical pages."""
+    M, Mf, Ms = KC.cache_dims(cfg, seq, tcfg.page_tokens)
+    return max(int(batch * M * 0.75), 1)
+
+
+def init_serve_state(cfg: ModelConfig, tcfg: TieringConfig, batch: int,
+                     seq: int, abstract: bool = False,
+                     params=None) -> Dict[str, object]:
+    state: Dict[str, object] = {}
+    dt = jnp.dtype(cfg.dtype)
+    K, D = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def arr(shape, dtype):
+        return (jax.ShapeDtypeStruct(shape, dtype) if abstract
+                else jnp.zeros(shape, dtype))
+
+    if cfg.family != "ssm":
+        state["kv"] = KC.init_cache(cfg, tcfg, batch, seq, abstract=abstract)
+    if cfg.family in ("ssm", "hybrid"):
+        nl = cfg.num_layers
+        mc = S.mamba_cache_specs(cfg, batch, nl)
+        state["mamba"] = (mc if abstract else
+                          jax.tree_util.tree_map(
+                              lambda s: jnp.zeros(s.shape, s.dtype), mc))
+    if cfg.family == "vlm":
+        n_units = cfg.num_layers // cfg.cross_attn_every
+        state["cross_k"] = arr((n_units, batch, cfg.num_image_tokens, K, D), dt)
+        state["cross_v"] = arr((n_units, batch, cfg.num_image_tokens, K, D), dt)
+    if cfg.family == "encdec":
+        state["cross_k"] = arr((cfg.num_layers, batch, cfg.encoder_seq, K, D), dt)
+        state["cross_v"] = arr((cfg.num_layers, batch, cfg.encoder_seq, K, D), dt)
+    return state
+
+
+def compute_cross_kv(params, cfg: ModelConfig, enc: jax.Array):
+    """Precompute per-layer cross-attention K/V from the encoder output
+    (whisper) or stub image embeddings (vlm). enc: [B, T, D].
+    Returns (ck, cv): [L_cross, B, T, K, D]."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "encdec":
+        wk = params["decoder"]["xattn"]["wk"]        # [L, D, K, hd]
+        wv = params["decoder"]["xattn"]["wv"]
+    elif cfg.family == "vlm":
+        wk = params["units"]["cross"]["attn"]["wk"]
+        wv = params["units"]["cross"]["attn"]["wv"]
+    else:
+        raise ValueError(cfg.family)
+    enc = enc.astype(dt)
+    ck = jnp.einsum("btd,ldhk->lbthk", enc, wk.astype(dt))
+    cv = jnp.einsum("btd,ldhk->lbthk", enc, wv.astype(dt))
+    return ck, cv
+
+
+def _cross_attend(p, x, ck, cv, cfg: ModelConfig):
+    """Cross-attention against precomputed K/V. x: [B,1,D]; ck/cv: [B,T,K,D]."""
+    dt = jnp.dtype(cfg.dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.rms_eps)
+    attn = L.attn_decode(q, ck, cv)
+    return L.attention_out(p, attn, cfg)
+
+
+def build_serve_step(cfg: ModelConfig, tcfg: TieringConfig, batch: int,
+                     seq: int, mode: str = "equilibria"):
+    """Returns serve_step(params, state, tokens [B,1]) -> (logits, state)."""
+    policy = make_policy(tcfg)
+    budget = fast_budget_pages(cfg, tcfg, batch, seq) if cfg.family != "ssm" else 0
+    window = cfg.sliding_window
+
+    def attend_and_update(kv: KC.TieredKVCache, lpage, fast_valid, slow_valid,
+                          pools, q, k, v):
+        fk, fv, sk, sv = pools
+        fk, fv, sk, sv = KC.append_token_kv(fk, fv, sk, sv, kv, lpage, k, v)
+        out, mf, ms = KC.tiered_paged_attention(q, fk, fv, sk, sv,
+                                                fast_valid, slow_valid)
+        return out, (fk, fv, sk, sv), mf, ms
+
+    # ------------------------------------------------------------- SSM ----
+    if cfg.family == "ssm":
+        def serve_step(params, state, tokens):
+            x = TF.embed_tokens(params, tokens, cfg)
+            mc = state["mamba"]
+
+            def body(x, xs):
+                lp, h, cx, cb, cc = xs
+                cache = S.MambaCache(h, cx, cb, cc)
+                x, cache = S.mamba_decode_step(lp, x, cache, cfg)
+                return x, cache
+
+            x, mc2 = scan_layers(
+                body, x, (params["layers"], mc.h, mc.conv_x, mc.conv_B,
+                          mc.conv_C))
+            logits = TF.lm_logits(params, x, cfg)
+            return logits, {**state, "mamba": S.MambaCache(*mc2)}
+
+        return serve_step
+
+    # ------------------------------------------- families with paged KV ----
+    def tiering_epilogue(kv: KC.TieredKVCache, pools, mf, ms, n_kv_layers):
+        kv = kv._replace(fast_k=pools[0], fast_v=pools[1],
+                         slow_k=pools[2], slow_v=pools[3],
+                         seq_len=kv.seq_len + 1)
+        kv = equilibria_kv_step(kv, mf / n_kv_layers, ms / n_kv_layers,
+                                tcfg, policy, budget, mode=mode)
+        return kv
+
+    if cfg.family in ("dense", "moe"):
+        def serve_step(params, state, tokens):
+            from repro.models.unroll import unrolled
+            kv: KC.TieredKVCache = state["kv"]
+            kv, lpage = KC.alloc_page_for_append(kv, tcfg, policy, budget)
+            fast_valid, slow_valid = KC.token_validity(kv, window)
+            x = TF.embed_tokens(params, tokens, cfg)
+            pos = kv.seq_len[:, None]
+            B, Mf = kv.fast_page.shape
+            Ms = kv.slow_page.shape[1]
+            acc0 = (x, jnp.zeros((B, Mf), jnp.float32),
+                    jnp.zeros((B, Ms), jnp.float32))
+
+            def body(carry, xs):
+                x, amf, ams = carry
+                lp, fk, fv, sk, sv = xs
+                h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+                q, k, v = L.attention_qkv(lp["attn"], h, cfg, pos)
+                out, pools, mf, ms = attend_and_update(
+                    kv, lpage, fast_valid, slow_valid, (fk, fv, sk, sv), q, k, v)
+                x = x + L.attention_out(lp["attn"], out, cfg)
+                h = L.rms_norm(x, lp["ln2"], cfg.rms_eps)
+                if cfg.family == "moe":
+                    y = L.moe_block_decode(lp["moe"], h, cfg)
+                else:
+                    y = L.mlp(lp["mlp"], h, cfg)
+                return (x + y, amf + mf, ams + ms), pools
+
+            if unrolled():
+                # in-place per-layer pool updates: a scan would route the
+                # pools through xs->ys and double-buffer the whole KV
+                # (measured ~1x extra pool temp; EXPERIMENTS.md §Perf B)
+                fk, fv = kv.fast_k, kv.fast_v
+                sk, sv = kv.slow_k, kv.slow_v
+                carry = acc0
+                for l in range(cfg.num_layers):
+                    lp = jax.tree_util.tree_map(lambda a: a[l],
+                                                params["layers"])
+                    carry, pools_l = body(
+                        carry, (lp, fk[l], fv[l], sk[l], sv[l]))
+                    fk = fk.at[l].set(pools_l[0])
+                    fv = fv.at[l].set(pools_l[1])
+                    sk = sk.at[l].set(pools_l[2])
+                    sv = sv.at[l].set(pools_l[3])
+                x, amf, ams = carry
+                pools = (fk, fv, sk, sv)
+            else:
+                (x, amf, ams), pools = scan_layers(
+                    body, acc0, (params["layers"], kv.fast_k, kv.fast_v,
+                                 kv.slow_k, kv.slow_v))
+            kv = tiering_epilogue(kv, pools, amf, ams, cfg.num_layers)
+            return TF.lm_logits(params, x, cfg), {**state, "kv": kv}
+
+        return serve_step
+
+    if cfg.family == "encdec":
+        def serve_step(params, state, tokens):
+            kv: KC.TieredKVCache = state["kv"]
+            kv, lpage = KC.alloc_page_for_append(kv, tcfg, policy, budget)
+            fast_valid, slow_valid = KC.token_validity(kv, window)
+            x = TF.embed_tokens(params, tokens, cfg)
+            pos = kv.seq_len[:, None]
+            B, Mf = kv.fast_page.shape
+            Ms = kv.slow_page.shape[1]
+            acc0 = (x, jnp.zeros((B, Mf), jnp.float32),
+                    jnp.zeros((B, Ms), jnp.float32))
+
+            def body(carry, xs):
+                x, amf, ams = carry
+                lp, fk, fv, sk, sv, ck, cv = xs
+                h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+                q, k, v = L.attention_qkv(lp["attn"], h, cfg, pos)
+                out, pools, mf, ms = attend_and_update(
+                    kv, lpage, fast_valid, slow_valid, (fk, fv, sk, sv), q, k, v)
+                x = x + L.attention_out(lp["attn"], out, cfg)
+                h = L.rms_norm(x, lp["ln_x"], cfg.rms_eps)
+                x = x + _cross_attend(lp["xattn"], h, ck, cv, cfg)
+                h = L.rms_norm(x, lp["ln2"], cfg.rms_eps)
+                return (x + L.mlp(lp["mlp"], h, cfg), amf + mf, ams + ms), pools
+
+            (x, amf, ams), pools = scan_layers(
+                body, acc0, (params["decoder"], kv.fast_k, kv.fast_v,
+                             kv.slow_k, kv.slow_v,
+                             state["cross_k"], state["cross_v"]))
+            kv = tiering_epilogue(kv, pools, amf, ams, cfg.num_layers)
+            return TF.lm_logits(params, x, cfg), {**state, "kv": kv}
+
+        return serve_step
+
+    if cfg.family == "vlm":
+        every = cfg.cross_attn_every
+        n_units = cfg.num_layers // every
+
+        def serve_step(params, state, tokens):
+            kv: KC.TieredKVCache = state["kv"]
+            kv, lpage = KC.alloc_page_for_append(kv, tcfg, policy, budget)
+            fast_valid, slow_valid = KC.token_validity(kv, window)
+            x = TF.embed_tokens(params, tokens, cfg)
+            pos = kv.seq_len[:, None]
+            B, Mf = kv.fast_page.shape
+            Ms = kv.slow_page.shape[1]
+            n_self = every - 1
+            # reshape per-unit pools: [n_units, n_self, ...]
+            def units(a):
+                return a.reshape((n_units, n_self) + a.shape[1:])
+            acc0 = (x, jnp.zeros((B, Mf), jnp.float32),
+                    jnp.zeros((B, Ms), jnp.float32))
+
+            def unit_body(carry, xs):
+                up, fk_u, fv_u, sk_u, sv_u, ck, cv = xs
+
+                def self_body(c, xs2):
+                    x, amf, ams = c
+                    lp, fk, fv, sk, sv = xs2
+                    h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+                    q, k, v = L.attention_qkv(lp["attn"], h, cfg, pos)
+                    out, pools, mf, ms = attend_and_update(
+                        kv, lpage, fast_valid, slow_valid, (fk, fv, sk, sv),
+                        q, k, v)
+                    x = x + L.attention_out(lp["attn"], out, cfg)
+                    h = L.rms_norm(x, lp["ln2"], cfg.rms_eps)
+                    return (x + L.mlp(lp["mlp"], h, cfg), amf + mf, ams + ms), pools
+
+                c, pools_u = scan_layers(
+                    self_body, carry, (up["self"], fk_u, fv_u, sk_u, sv_u))
+                x, amf, ams = c
+                cp = up["cross"]
+                h = L.rms_norm(x, cp["ln"], cfg.rms_eps)
+                a = _cross_attend(cp["attn"], h, ck, cv, cfg)
+                x = x + jnp.tanh(cp["gate"].astype(jnp.float32)).astype(x.dtype) * a
+                h = L.rms_norm(x, cp["ln2"], cfg.rms_eps)
+                y = L.mlp(cp["mlp"], h, cfg)
+                x = x + jnp.tanh(cp["gate_mlp"].astype(jnp.float32)).astype(x.dtype) * y
+                return (x, amf, ams), pools_u
+
+            (x, amf, ams), pools = scan_layers(
+                unit_body, acc0,
+                (params["units"], units(kv.fast_k), units(kv.fast_v),
+                 units(kv.slow_k), units(kv.slow_v),
+                 state["cross_k"], state["cross_v"]))
+            pools = tuple(p.reshape((n_units * n_self,) + p.shape[2:])
+                          for p in pools)
+            kv = tiering_epilogue(kv, pools, amf, ams, n_units * n_self)
+            return TF.lm_logits(params, x, cfg), {**state, "kv": kv}
+
+        return serve_step
+
+    if cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+
+        def serve_step(params, state, tokens):
+            kv: KC.TieredKVCache = state["kv"]
+            mc: S.MambaCache = state["mamba"]
+            kv, lpage = KC.alloc_page_for_append(kv, tcfg, policy, budget)
+            fast_valid, slow_valid = KC.token_validity(kv, window)
+            x = TF.embed_tokens(params, tokens, cfg)
+            emb0 = x
+            pos = kv.seq_len[:, None]
+            B, Mf = kv.fast_page.shape
+            Ms = kv.slow_page.shape[1]
+            sp = params["shared"]
+            dt = jnp.dtype(cfg.dtype)
+            acc0 = (x, kv.fast_k, kv.fast_v, kv.slow_k, kv.slow_v,
+                    jnp.zeros((B, Mf), jnp.float32),
+                    jnp.zeros((B, Ms), jnp.float32))
+
+            def shared_app(x, pools4, j, amf, ams):
+                fk = jax.lax.dynamic_index_in_dim(pools4[0], j, 0, False)
+                fv = jax.lax.dynamic_index_in_dim(pools4[1], j, 0, False)
+                sk = jax.lax.dynamic_index_in_dim(pools4[2], j, 0, False)
+                sv = jax.lax.dynamic_index_in_dim(pools4[3], j, 0, False)
+                h = jnp.concatenate([x, emb0], axis=-1)
+                h = jnp.einsum("bse,ed->bsd", h, sp["in_proj"].astype(dt))
+                a = L.rms_norm(h, sp["ln1"], cfg.rms_eps)
+                q, k, v = L.attention_qkv(sp["attn"], a, cfg, pos)
+                out, (fk, fv, sk, sv), mf, ms = attend_and_update(
+                    kv, lpage, fast_valid, slow_valid, (fk, fv, sk, sv), q, k, v)
+                h = h + L.attention_out(sp["attn"], out, cfg)
+                a = L.rms_norm(h, sp["ln2"], cfg.rms_eps)
+                h = h + L.mlp(sp["mlp"], a, cfg)
+                x = x + jnp.einsum("bsd,de->bse", h, sp["out_proj"].astype(dt))
+                pools4 = tuple(
+                    jax.lax.dynamic_update_index_in_dim(p, u, j, 0)
+                    for p, u in zip(pools4, (fk, fv, sk, sv)))
+                return x, pools4, amf + mf, ams + ms
+
+            def body(carry, xs):
+                x, fk, fv, sk, sv, amf, ams = carry
+                lp, h_l, cx_l, cb_l, cc_l, idx = xs
+                j = idx // every
+
+                def with_attn(args):
+                    x, pools4, amf, ams = args
+                    return shared_app(x, pools4, j, amf, ams)
+
+                def no_attn(args):
+                    x, pools4, amf, ams = args
+                    return x, pools4, amf, ams
+
+                x, (fk, fv, sk, sv), amf, ams = jax.lax.cond(
+                    idx % every == 0, with_attn, no_attn,
+                    (x, (fk, fv, sk, sv), amf, ams))
+                mcache = S.MambaCache(h_l, cx_l, cb_l, cc_l)
+                x, mcache = S.mamba_decode_step(lp, x, mcache, cfg)
+                return (x, fk, fv, sk, sv, amf, ams), mcache
+
+            (x, fk, fv, sk, sv, amf, ams), mc2 = scan_layers(
+                body, acc0,
+                (params["layers"], mc.h, mc.conv_x, mc.conv_B, mc.conv_C,
+                 jnp.arange(cfg.num_layers)))
+            n_kv = cfg.num_layers // every + 1
+            kv = tiering_epilogue(kv, (fk, fv, sk, sv), amf, ams, n_kv)
+            return TF.lm_logits(params, x, cfg), {
+                **state, "kv": kv, "mamba": S.MambaCache(*mc2)}
+
+        return serve_step
+
+    raise ValueError(cfg.family)

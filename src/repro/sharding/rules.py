@@ -1,0 +1,150 @@
+"""Logical-axis sharding rules (MaxText-style) → NamedSharding.
+
+The production mesh is ("data", "model") = (16, 16) per pod, with a leading
+"pod" axis (=2) for the multi-pod dry-run. Parallelism strategy:
+  * batch       → ("pod", "data")   data parallelism across pods+data axis
+  * weights     → "embed"-class dims FSDP-sharded over "data";
+                  heads / mlp / vocab / expert-ff / ssm-inner TP over "model"
+  * KV pools    → batch over "data", page dim over "model" (sharded-KV
+                  attention; softmax partials combine with XLA collectives)
+
+Rules are *per-config*: dims that don't divide the mesh axis fall back to
+replication (e.g. whisper-tiny's 6 heads on a 16-wide model axis).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec, logical_axes, tree_map_specs
+
+
+def base_rules(multi_pod: bool) -> Dict[str, Optional[Tuple[str, ...]]]:
+    return {
+        "vocab": ("model",),
+        "embed": ("data",),         # FSDP
+        "embed_tbl": None,          # embed table model-dim: see embed_specs
+        "embed_x2": ("data",),
+        "embed_out": None,
+        "heads": ("model",),        # TP
+        "kv_heads": None,           # small; replicated (GQA)
+        "head_dim": None,
+        "mlp": ("model",),
+        "experts": None,
+        "experts_dim": None,
+        "expert_mlp": ("model",),
+        "ssm_inner": ("model",),
+        "layers": None,
+        None: None,
+    }
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def spec_for(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+             rules: Dict, mesh: Mesh) -> P:
+    parts = []
+    used = set()
+    for ax, dim in zip(axes, shape):
+        r = rules.get(ax, None)
+        if r is None:
+            parts.append(None)
+            continue
+        r = tuple(a for a in r if a not in used)
+        total = int(np.prod([mesh_axis_size(mesh, a) for a in r])) if r else 1
+        if not r or dim % total != 0:
+            parts.append(None)      # non-divisible -> replicate (no padding)
+        else:
+            parts.append(r if len(r) > 1 else r[0])
+            used.update(r)
+    return P(*parts)
+
+
+def param_shardings(specs, mesh: Mesh, rules: Dict):
+    """ParamSpec tree -> NamedSharding tree."""
+    return tree_map_specs(
+        lambda s: NamedSharding(mesh, spec_for(s.axes, s.shape, rules, mesh)),
+        specs)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def fitted_batch_axes(mesh: Mesh, dim: int) -> Optional[Tuple[str, ...]]:
+    """Largest prefix of the batch axes that divides `dim` (None if none)."""
+    ba = batch_axes(mesh)
+    best = None
+    total = 1
+    for i in range(len(ba)):
+        total *= mesh_axis_size(mesh, ba[i])
+        if dim % total == 0:
+            best = ba[:i + 1]
+    return best
+
+
+def data_sharding(mesh: Mesh, shape: Tuple[int, ...],
+                  batch_dim: int = 0) -> NamedSharding:
+    parts: list = [None] * len(shape)
+    ba = fitted_batch_axes(mesh, shape[batch_dim])
+    if ba:
+        parts[batch_dim] = ba if len(ba) > 1 else ba[0]
+    return NamedSharding(mesh, P(*parts))
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, batch: Dict) -> Dict:
+    """Shardings for a train/prefill input batch (dict of arrays)."""
+    return {k: data_sharding(mesh, v.shape) for k, v in batch.items()}
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def kv_pool_sharding(mesh: Mesh) -> NamedSharding:
+    """[L, B, M, pt, K, D]: batch over data axes, pages over model."""
+    ba = batch_axes(mesh)
+    return NamedSharding(mesh, P(None, ba if len(ba) > 1 else ba[0], "model"))
+
+
+def tree_sharding_like(tree, mesh: Mesh, leaf_fn):
+    return jax.tree_util.tree_map(leaf_fn, tree)
+
+
+def serve_state_shardings(state, mesh: Mesh):
+    """Shardings for the serve state dict (tiered KV cache + extras)."""
+
+    def bspec_for(dim: int):
+        ba = fitted_batch_axes(mesh, dim)
+        if not ba:
+            return None
+        return ba if len(ba) > 1 else ba[0]
+
+    def model_for(dim: int):
+        return "model" if dim % mesh_axis_size(mesh, "model") == 0 else None
+
+    def leaf(path, x):
+        keys = [getattr(p, "name", getattr(p, "key", None)) for p in path]
+        name = next((k for k in keys if isinstance(k, str)), "")
+        shp = x.shape
+        if name in ("fast_k", "fast_v", "slow_k", "slow_v", "cross_k",
+                    "cross_v"):
+            # [L, B, M|T, pt?, K, D]: batch over data, pages/tokens over model
+            return NamedSharding(mesh, P(None, bspec_for(shp[1]),
+                                         model_for(shp[2])))
+        if name in ("fast_page", "slow_page", "fast_hot", "slow_hot",
+                    "page_tier", "page_idx", "seq_len", "tenant"):
+            return NamedSharding(mesh, P(bspec_for(shp[0])))
+        if name in ("h", "conv_x", "conv_B", "conv_C"):   # mamba cache [L,B,...]
+            return NamedSharding(mesh, P(None, bspec_for(shp[1])))
+        return NamedSharding(mesh, P())  # counters, tables, scalars
+
+    return jax.tree_util.tree_map_with_path(leaf, state)

@@ -1,0 +1,78 @@
+"""Training step: loss, grads (with microbatch accumulation), AdamW update."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.transformer import model_forward
+from repro.optim.adamw import OptState, adamw_update
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy; stable in f32 over (possibly padded) vocab."""
+    l32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(l32, axis=-1)
+    ll = jnp.take_along_axis(l32, labels[..., None], axis=-1)[..., 0]
+    return (lse - ll).mean()
+
+
+def make_loss_fn(cfg: ModelConfig, tc: TrainConfig):
+    compute_dt = jnp.dtype(cfg.dtype)
+
+    def loss_fn(params, batch: Dict):
+        # Cast f32 master weights to the compute dtype up front so the FSDP
+        # all-gathers move bf16, not f32 (2x collective bytes otherwise —
+        # EXPERIMENTS.md §Perf iteration C). Grads flow back to f32 masters.
+        params = jax.tree_util.tree_map(
+            lambda p: p.astype(compute_dt)
+            if p.dtype == jnp.float32 else p, params)
+        logits, aux = model_forward(params, batch, cfg, tc.remat_policy)
+        loss = cross_entropy(logits, batch["labels"])
+        total = loss + 0.01 * aux
+        return total, {"ce": loss, "moe_aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    """Returns train_step(params, opt, batch) -> (params, opt, metrics)."""
+    loss_fn = make_loss_fn(cfg, tc)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt: OptState, batch: Dict):
+        if tc.microbatches > 1:
+            n = tc.microbatches
+
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (loss, _), g = grad_fn(params, mb)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + loss), None
+
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / n, grads)
+            loss = loss_sum / n
+            extras = {}
+        else:
+            (loss, extras), grads = grad_fn(params, batch)
+        params, opt, metrics = adamw_update(params, grads, opt, tc)
+        metrics = {"loss": loss, **metrics, **extras}
+        return params, opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, tc: TrainConfig):
+    """Inference prefill: full forward, returns last-position logits (the KV
+    writeback is a contiguous reshape into pages — see DESIGN.md)."""
+    def prefill_step(params, batch: Dict):
+        logits, _ = model_forward(params, batch, cfg, tc.remat_policy)
+        return logits[:, -1]
+    return prefill_step

@@ -1,0 +1,9 @@
+import os
+
+# Keep smoke tests on the single real CPU device (the dry-run sets its own
+# XLA_FLAGS in repro.launch.dryrun, never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

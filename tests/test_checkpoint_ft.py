@@ -1,0 +1,102 @@
+"""Checkpoint/restore roundtrip, atomic commit, elastic reshape, FT driver."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import sharded as ckpt
+from repro.ft.driver import FTConfig, TrainDriver
+
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"w": jnp.ones((5,), jnp.int32),
+                  "scale": jnp.asarray(2.5)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 7, t, extra={"note": "x"})
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    r = ckpt.restore(str(tmp_path), 7, t)
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ckpt.restore_extra(str(tmp_path))["note"] == "x"
+
+
+def test_gc_keeps_latest(tmp_path):
+    t = _tree()
+    for s in range(6):
+        ckpt.save(str(tmp_path), s, t, keep=2)
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 2 and steps[-1] == "step_00000005"
+
+
+def test_async_checkpointer(tmp_path):
+    t = _tree()
+    ac = ckpt.AsyncCheckpointer(str(tmp_path))
+    ac.save(3, t)
+    ac.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 3
+
+
+def test_ft_driver_restart_and_straggler(tmp_path):
+    """Inject a transient failure; driver restores and completes. A slow step
+    is flagged as a straggler."""
+    state = {"x": jnp.zeros(())}
+    fails = {"armed": True}
+    stragglers = []
+
+    def step_fn(s, batch):
+        if batch == 13 and fails["armed"]:
+            fails["armed"] = False
+            raise RuntimeError("injected node failure")
+        if batch == 17:
+            time.sleep(0.15)
+        else:
+            time.sleep(0.01)
+        return {"x": s["x"] + 1}, {"step_metric": batch}
+
+    cfg = FTConfig(checkpoint_dir=str(tmp_path), checkpoint_every=5,
+                   straggler_factor=3.0, heartbeat_file=str(tmp_path / "hb"))
+    drv = TrainDriver(step_fn, cfg,
+                      on_straggler=lambda s, dt: stragglers.append(s))
+    state, logs = drv.run(state, iter(range(100)), num_steps=25)
+    assert drv.stats.retries == 1
+    assert drv.stats.completed_steps == 25
+    assert 17 in stragglers
+    assert (tmp_path / "hb").exists()
+    assert ckpt.latest_step(str(tmp_path)) is not None
+
+
+def test_elastic_restore_with_new_sharding(tmp_path):
+    """Checkpoint leaves are host arrays; restore re-applies shardings for
+    the current (different) topology."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    t = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ckpt.save(str(tmp_path), 0, t)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, P("data"))}
+    r = ckpt.restore(str(tmp_path), 0, t, shardings=sh)
+    assert r["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(r["w"]), np.asarray(t["w"]))
+
+
+def test_resume_from_latest(tmp_path):
+    state = {"x": jnp.zeros(())}
+
+    def step_fn(s, batch):
+        return {"x": s["x"] + 1}, {}
+
+    cfg = FTConfig(checkpoint_dir=str(tmp_path), checkpoint_every=5)
+    drv = TrainDriver(step_fn, cfg)
+    state, _ = drv.run(state, iter(range(100)), num_steps=12)
+    # "crash": new driver resumes from step 10 checkpoint
+    drv2 = TrainDriver(step_fn, cfg)
+    restored, start = drv2.maybe_restore({"x": jnp.zeros(())})
+    assert start == 10
+    assert float(restored["x"]) == 10.0

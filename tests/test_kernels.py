@@ -1,0 +1,138 @@
+"""Per-kernel validation: Pallas (interpret=True, kernel body on CPU) vs the
+pure-jnp ref.py oracle, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ------------------------------------------------------- flash attention ----
+@pytest.mark.parametrize("b,h,kh,sq,skv,d", [
+    (2, 4, 2, 128, 128, 64),
+    (1, 8, 8, 64, 64, 32),
+    (2, 2, 1, 64, 256, 64),      # decode-ish: short q, long kv
+    (1, 4, 2, 256, 256, 48),     # non-128 head dim (pad path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None)])
+def test_flash_attention(b, h, kh, sq, skv, d, dtype, causal, window):
+    from repro.kernels.flash_attention.ops import flash_attention
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, kh, skv, d), dtype)
+    v = jax.random.normal(ks[2], (b, kh, skv, d), dtype)
+    ref = flash_attention(q, k, v, causal=causal, window=window, impl="ref")
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          impl="pallas_interpret", block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+# ------------------------------------------------------ tiered attention ----
+@pytest.mark.parametrize("b,h,kh,d,mf,ms,pt", [
+    (2, 8, 4, 64, 16, 8, 8),
+    (3, 4, 4, 32, 8, 8, 4),
+    (2, 16, 2, 64, 16, 16, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [None, 40])
+def test_tiered_attention(b, h, kh, d, mf, ms, pt, dtype, window):
+    from repro.kernels.tiered_attention.ops import tiered_attention
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, 1, h, d), dtype)
+    fk = jax.random.normal(ks[1], (b, mf, pt, kh, d), dtype)
+    fv = jax.random.normal(ks[2], (b, mf, pt, kh, d), dtype)
+    sk = jax.random.normal(ks[3], (b, ms, pt, kh, d), dtype)
+    sv = jax.random.normal(ks[4], (b, ms, pt, kh, d), dtype)
+    fp = jnp.where(jnp.arange(mf)[None] < mf - 2,
+                   jnp.arange(mf)[None].repeat(b, 0), -1)
+    sp = jnp.where(jnp.arange(ms)[None] < ms - 1,
+                   (mf - 2 + jnp.arange(ms))[None].repeat(b, 0), -1)
+    seq_len = jnp.full((b,), (mf - 2 + ms - 1) * pt - 3, jnp.int32)
+    ref = tiered_attention(q, fk, fv, sk, sv, fp, sp, seq_len,
+                           window=window, impl="ref")
+    out = tiered_attention(q, fk, fv, sk, sv, fp, sp, seq_len,
+                           window=window, impl="pallas_interpret",
+                           page_block=4)
+    for r, o in zip(ref, out):
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(r, np.float32),
+                                   atol=_tol(dtype), rtol=1e-2)
+
+
+def test_tiered_attention_matches_serving_path():
+    """Kernel ref == the XLA function used inside serve_step."""
+    from repro.kernels.tiered_attention.ops import tiered_attention
+    from repro.memtier.kvcache import tiered_paged_attention
+    b, h, kh, d, mf, ms, pt = 2, 8, 4, 32, 8, 8, 4
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, 1, h, d), jnp.float32)
+    fk = jax.random.normal(ks[1], (b, mf, pt, kh, d), jnp.float32)
+    fv = jax.random.normal(ks[2], (b, mf, pt, kh, d), jnp.float32)
+    sk = jax.random.normal(ks[3], (b, ms, pt, kh, d), jnp.float32)
+    sv = jax.random.normal(ks[4], (b, ms, pt, kh, d), jnp.float32)
+    fp = jnp.tile(jnp.arange(mf)[None], (b, 1))
+    sp = jnp.where(jnp.arange(ms)[None] < ms - 2,
+                   (mf + jnp.arange(ms))[None].repeat(b, 0), -1)
+    seq_len = jnp.full((b,), (mf + ms - 2) * pt - 1, jnp.int32)
+    out_k, mf_k, ms_k = tiered_attention(q, fk, fv, sk, sv, fp, sp, seq_len,
+                                         impl="ref")
+    # serving path uses token-validity masks built from the same metadata
+    tok_f = fp[:, :, None] * pt + jnp.arange(pt)[None, None]
+    okf = (fp >= 0)[:, :, None] & (tok_f <= seq_len[:, None, None])
+    tok_s = sp[:, :, None] * pt + jnp.arange(pt)[None, None]
+    oks = (sp >= 0)[:, :, None] & (tok_s <= seq_len[:, None, None])
+    out_s, mf_s, ms_s = tiered_paged_attention(q, fk, fv, sk, sv, okf, oks)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_s), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(mf_k), np.asarray(mf_s), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(ms_k), np.asarray(ms_s), atol=2e-5)
+
+
+# --------------------------------------------------------------- migrate ----
+@pytest.mark.parametrize("l,b,msrc,mdst,pt,kh,d", [
+    (2, 4, 6, 5, 4, 2, 16), (1, 8, 4, 4, 8, 1, 32), (3, 2, 8, 8, 2, 4, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_migrate(l, b, msrc, mdst, pt, kh, d, dtype):
+    from repro.kernels.migrate.ops import migrate_pages
+    rng = np.random.default_rng(0)
+    src = jnp.asarray(rng.normal(size=(l, b, msrc, pt, kh, d)), dtype)
+    dstn = rng.normal(size=(l, b, mdst, pt, kh, d)).astype(np.float32)
+    si = jnp.asarray(rng.integers(0, msrc, b), jnp.int32)
+    di = jnp.asarray(rng.integers(0, mdst, b), jnp.int32)
+    sel = jnp.asarray(rng.integers(0, 2, b).astype(bool))
+    ref = migrate_pages(src, jnp.asarray(dstn, dtype), si, di, sel, impl="ref")
+    out = migrate_pages(src, jnp.asarray(dstn, dtype), si, di, sel,
+                        impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(ref, np.float32))
+
+
+# -------------------------------------------------------------- ssd scan ----
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 64, 3, 16, 8, 16), (1, 128, 2, 32, 16, 32), (2, 32, 4, 8, 8, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan(b, s, h, p, n, chunk, dtype):
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    from repro.models.ssm import ssd_recurrent_ref
+    ks = jax.random.split(KEY, 4)
+    x = (jax.random.normal(ks[0], (b, s, h, p)) * 0.5).astype(dtype)
+    a = (-jnp.abs(jax.random.normal(ks[1], (b, s, h))) * 0.3).astype(jnp.float32)
+    bb = (jax.random.normal(ks[2], (b, s, h, n)) * 0.5).astype(dtype)
+    cc = (jax.random.normal(ks[3], (b, s, h, n)) * 0.5).astype(dtype)
+    y_ref, h_ref = ssd_recurrent_ref(x.astype(jnp.float32), a,
+                                     bb.astype(jnp.float32),
+                                     cc.astype(jnp.float32))
+    y, hf = ssd_scan(x, a, bb, cc, chunk=chunk, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=5 * _tol(dtype), rtol=5e-2)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(h_ref),
+                               atol=5 * _tol(dtype), rtol=5e-2)

@@ -1,0 +1,127 @@
+"""Hypothesis property tests on the fairness policy invariants (Eq.1/Eq.2,
+thrash table) and on engine-level conservation laws."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import TieringConfig
+from repro.core import policy as P
+from repro.core.state import TenantPolicy
+from repro.core.simulator import simulate
+from repro.core.workloads import TenantWorkload, microbenchmark
+
+CFG = TieringConfig()
+
+
+def _policy(prot, bound):
+    return TenantPolicy(jnp.asarray(prot, jnp.int32),
+                        jnp.asarray(bound, jnp.int32))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(0, 2000), min_size=1, max_size=8),
+       st.lists(st.integers(0, 2000), min_size=1, max_size=8))
+def test_eq1_invariants(usage, prot):
+    n = min(len(usage), len(prot))
+    usage, prot = usage[:n], prot[:n]
+    pol = _policy(prot, [0] * n)
+    u = jnp.asarray(usage, jnp.int32)
+    d = P.eq1_demotion_scan(u, u, pol, jnp.asarray(True))
+    d = np.asarray(d)
+    # never negative; zero for tenants at/below protection; bounded by usage
+    assert (d >= 0).all()
+    for i in range(n):
+        if usage[i] <= prot[i]:
+            assert d[i] == 0
+        assert d[i] <= usage[i] + 1e-6
+    # monotone in overage: more usage (same protection) => >= scan
+    d2 = P.eq1_demotion_scan(u + 100, u + 100, pol, jnp.asarray(True))
+    assert (np.asarray(d2) >= d - 1e-6).all()
+    # not contended => no demotion pressure
+    d3 = P.eq1_demotion_scan(u, u, pol, jnp.asarray(False))
+    assert (np.asarray(d3) == 0).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(1, 4000), min_size=1, max_size=8),
+       st.lists(st.integers(1, 4000), min_size=1, max_size=8))
+def test_eq2_invariants(usage, prot):
+    n = min(len(usage), len(prot))
+    usage, prot = usage[:n], prot[:n]
+    pol = _policy(prot, [0] * n)
+    u = jnp.asarray(usage, jnp.int32)
+    p_base = jnp.full((n,), 256.0)
+    p, throttled = P.eq2_promotion_scan(p_base, u, pol, jnp.asarray(True), CFG)
+    p = np.asarray(p)
+    # floor of 1/16 of base; never exceeds base
+    assert (p >= 256.0 / 16 - 1e-6).all()
+    assert (p <= 256.0 + 1e-6).all()
+    for i in range(n):
+        if usage[i] <= prot[i]:
+            assert p[i] == 256.0           # under protection: unthrottled
+        else:
+            # paper's examples: 1% overage -> ~96%, 10% -> ~68%
+            ratio = prot[i] / usage[i]
+            expect = max(min(ratio ** 4, 1.0), 1.0 / 16)
+            np.testing.assert_allclose(p[i] / 256.0, expect, rtol=1e-5)
+
+
+def test_eq2_paper_quoted_values():
+    """§IV-E: 96% at 1% overage; 68% at 10% overage; floor 1/16."""
+    pol = _policy([1000], [0])
+    for over, expect in [(1.01, 0.961), (1.10, 0.683)]:
+        p, _ = P.eq2_promotion_scan(jnp.array([256.0]),
+                                    jnp.array([int(1000 * over)]), pol,
+                                    jnp.asarray(True), CFG)
+        np.testing.assert_allclose(float(p[0]) / 256.0, expect, atol=0.005)
+    p, _ = P.eq2_promotion_scan(jnp.array([256.0]), jnp.array([100000]), pol,
+                                jnp.asarray(True), CFG)
+    assert abs(float(p[0]) / 256.0 - 1.0 / 16) < 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000_000))
+def test_thrash_table_roundtrip(page):
+    from repro.core.state import ThrashTable
+    slots = 64
+    table = ThrashTable(page=jnp.full((slots,), -1, jnp.int32),
+                        tick=jnp.zeros((slots,), jnp.int32))
+    t = jnp.asarray(5, jnp.int32)
+    pages = jnp.asarray([page], jnp.int32)
+    mask = jnp.asarray([True])
+    table = P.thrash_record_promotions(table, pages, mask, t)
+    # demotion shortly after -> exactly one thrash event for the owner
+    hits = P.thrash_check_demotions(table, pages, mask,
+                                    jnp.asarray([1], jnp.int32),
+                                    t + 2, CFG, 4)
+    assert hits.tolist() == [0, 1, 0, 0]
+    # after t_resident, no event
+    hits2 = P.thrash_check_demotions(table, pages, mask,
+                                     jnp.asarray([1], jnp.int32),
+                                     t + CFG.t_resident + 1, CFG, 4)
+    assert hits2.tolist() == [0, 0, 0, 0]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(60, 240), min_size=2, max_size=4),
+       st.integers(0, 3))
+def test_engine_conservation_properties(footprints, late_idx):
+    """Capacity never exceeded; usage equals live footprint; counters sane."""
+    n = len(footprints)
+    cfg = TieringConfig(
+        n_tenants=n, n_fast_pages=256, n_slow_pages=512,
+        lower_protection=tuple(256 // n for _ in range(n)),
+        upper_bound=(0,) * n)
+    tenants = [microbenchmark(f, arrival=(20 if i == late_idx % n else 0))
+               for i, f in enumerate(footprints)]
+    r = simulate(cfg, tenants, 80, mode="equilibria", k_max=64)
+    fast_total = r.fast_usage.sum(axis=1)
+    assert (fast_total <= 256).all()                 # capacity invariant
+    # after ramp, fast+slow == footprint for every tenant
+    for i, f in enumerate(footprints):
+        total = r.fast_usage[-1, i] + r.slow_usage[-1, i]
+        assert total == f, (i, total, f)
+    assert (r.promotions >= 0).all() and (r.demotions >= 0).all()
+    # thrash counter is monotone
+    assert (np.diff(r.thrash_events, axis=0) >= 0).all()
