@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite (default marks: slow excluded, ~3 min)
+# plus a fast fleet-observability smoke (clean fleet silent, injected noisy
+# neighbor flagged — the obs/ acceptance property).
+#
+#   scripts/check.sh          # default suite + obs smoke
+#   scripts/check.sh --full   # include slow-marked tests (full matrix)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+MARK=(-m "not slow")
+if [[ "${1:-}" == "--full" ]]; then
+    MARK=(-m "")
+fi
+
+echo "== tier-1 tests =="
+python -m pytest -x -q "${MARK[@]}"
+
+echo "== obs fleet smoke (4 hosts) =="
+python -m benchmarks.fleet_obs --smoke

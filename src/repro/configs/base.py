@@ -188,6 +188,10 @@ class TieringConfig:
     enable_upper_bound: bool = True
     enable_promo_throttle: bool = True
     enable_thrash_mitigation: bool = True
+    # observability (obs/, paper §IV-C): in-graph stats + migration ring
+    obs_ring_capacity: int = 4096     # migration events kept (newest wins)
+    obs_resid_buckets: int = 16       # log2 residency-histogram buckets
+    obs_window_decay: float = 0.9     # EWMA decay of windowed rates
 
     def with_(self, **kw) -> "TieringConfig":
         return dataclasses.replace(self, **kw)

@@ -25,6 +25,8 @@ from repro.configs.base import TieringConfig
 from repro.core import policy as P
 from repro.core.state import (TIER_FAST, TIER_NONE, TIER_SLOW, Counters,
                               TenantPolicy, TierState, init_state, make_policy)
+from repro.obs import stats as OS
+from repro.obs import trace as OT
 
 MODES = ("equilibria", "tpp", "memtis", "static")
 
@@ -39,6 +41,7 @@ class TickOutput(NamedTuple):
     promo_scale: jax.Array     # [T]
     thrash_events: jax.Array   # [T] cumulative
     fast_free: jax.Array       # scalar
+    attempted_promotions: jax.Array  # [T] candidates this tick (obs)
 
 
 def _select_per_tenant(score: jax.Array, masks: jax.Array, quotas: jax.Array,
@@ -92,6 +95,9 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
         # ---- 1. free dead pages -------------------------------------------
         died = (tier != TIER_NONE) & ~alive
         freed_t = owner_oh_i @ died.astype(jnp.int32)
+        # fast-resident pages that die end their residency here (obs)
+        stats = OS.record_fast_exits(state.stats, died & (tier == TIER_FAST),
+                                     owner_j, t)
         tier = jnp.where(died, TIER_NONE, tier)
 
         # ---- 2. allocate new pages ----------------------------------------
@@ -113,6 +119,7 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
         go_fast = elig & (grank < jnp.maximum(fast_free - wmark, 0))
         tier = jnp.where(go_fast, TIER_FAST, jnp.where(new, TIER_SLOW, tier))
         alloc_t = owner_oh_i @ new.astype(jnp.int32)
+        stats = OS.record_fast_entries(stats, go_fast, t)
 
         # ---- 3. hotness / recency -----------------------------------------
         hot = jnp.where(alive, cfg.hot_decay * state.hot + accesses, 0.0)
@@ -174,6 +181,9 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
         page_ids = jnp.arange(L, dtype=jnp.int32)
         thrash_new = P.thrash_check_demotions(
             state.table, page_ids, demoted, owner_j, t, cfg, T)
+        stats = OS.record_fast_exits(stats, demoted, owner_j, t)
+        ring = OT.ring_record(state.ring, demoted, page_ids, owner_j, hot,
+                              OT.DIR_DEMOTE, t)
         tier = jnp.where(demoted, TIER_SLOW, tier)
         fast_usage = fast_usage - demo_t
         fast_free = n_fast - fast_usage.sum()
@@ -182,11 +192,12 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
         # just-demoted pages are not promotion candidates this tick
         cand = (tier == TIER_SLOW) & (hot >= cfg.promo_hot_threshold) & alive & ~demoted
         cand_t = owner_oh_i @ cand.astype(jnp.int32)
+        throttled = jnp.zeros((T,), bool)
         if mode == "equilibria":
             p_base = jnp.full((T,), float(cfg.p_base), jnp.float32)
             if cfg.enable_promo_throttle:
-                p_scan, _ = P.eq2_promotion_scan(p_base, fast_usage, pol,
-                                                 contended, cfg)
+                p_scan, throttled = P.eq2_promotion_scan(p_base, fast_usage,
+                                                         pol, contended, cfg)
             else:
                 p_scan = p_base
             p_scan = p_scan * state.promo_scale        # thrash mitigation
@@ -219,6 +230,9 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
         promo_t = owner_oh_i @ promoted.astype(jnp.int32)
         tier = jnp.where(promoted, TIER_FAST, tier)
         table = P.thrash_record_promotions(state.table, page_ids, promoted, t)
+        stats = OS.record_fast_entries(stats, promoted, t)
+        ring = OT.ring_record(ring, promoted, page_ids, owner_j, hot,
+                              OT.DIR_PROMOTE, t)
 
         # ---- 6b. synchronous upper-bound demotion (allocation path, §IV-D):
         # promotions that pushed a tenant past its bound are shed in the same
@@ -237,6 +251,9 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
             thr2 = P.thrash_check_demotions(table, page_ids, sync_dem,
                                             owner_j, t, cfg, T)
             thrash_new = thrash_new + thr2
+            stats = OS.record_fast_exits(stats, sync_dem, owner_j, t)
+            ring = OT.ring_record(ring, sync_dem, page_ids, owner_j, hot,
+                                  OT.DIR_DEMOTE, t)
             tier = jnp.where(sync_dem, TIER_SLOW, tier)
             sync2_t = owner_oh_i @ sync_dem.astype(jnp.int32)
             demo_t = demo_t + sync2_t
@@ -256,12 +273,28 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
         fast_usage = owner_oh_i @ (tier == TIER_FAST).astype(jnp.int32)
         slow_usage = owner_oh_i @ (tier == TIER_SLOW).astype(jnp.int32)
 
+        # ---- 7b. observability (obs/, §IV-C) --------------------------------
+        # tpp's quota is one global scan budget; split it evenly so
+        # demo_success_ratio stays comparable across modes
+        demo_att = (jnp.broadcast_to((quota + T - 1) // T, (T,))
+                    if quota.ndim == 0 else quota)
+        below_prot = OS.below_protection(fast_usage, slow_usage,
+                                         pol.lower_protection)
+        # sync upper-bound demotions (6b) bypass the step-5 quota; count them
+        # on both sides so demo_success_ratio stays <= 1
+        stats = OS.update_tick(
+            stats, promo_attempts=cand_t, promo_success=promo_t,
+            demo_attempts=jnp.minimum(demo_att, k_max) + sync2_t,
+            demo_success=demo_t,
+            thrash_new=thrash_new, contended=contended, throttled=throttled,
+            below_protection=below_prot, decay=cfg.obs_window_decay)
+
         new_state = TierState(
             tier=tier.astype(jnp.int8), hot=hot, last_access=last_access,
             counters=counters, promo_scale=state.promo_scale,
             thrash_prev=state.thrash_prev, usage_prev=state.usage_prev,
             freed_since=state.freed_since + freed_t, steady=state.steady,
-            table=table, t=t + 1)
+            table=table, stats=stats, ring=ring, t=t + 1)
 
         # ---- 8. periodic controller (§IV-F) ---------------------------------
         def run_ctrl(s: TierState) -> TierState:
@@ -291,7 +324,8 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
             promotions=promo_t, demotions=demo_t,
             throughput=thru, latency=lat, promo_scale=new_state.promo_scale,
             thrash_events=counters.thrash_events,
-            fast_free=n_fast - fast_usage.sum())
+            fast_free=n_fast - fast_usage.sum(),
+            attempted_promotions=cand_t)
         return new_state, out
 
     return tick

@@ -8,7 +8,7 @@ Fig. 2: 252ns CXL vs ~100ns local, ~0.1 bandwidth ratio).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -16,6 +16,9 @@ import numpy as np
 from repro.configs.base import TieringConfig
 from repro.core.engine import TickOutput, run_engine
 from repro.core.workloads import TenantWorkload, build_trace
+from repro.obs.pathology import Pathology, detect_all
+from repro.obs.stats import stats_summary
+from repro.obs.trace import decode_ring
 
 
 @dataclass
@@ -29,6 +32,12 @@ class SimResult:
     latency: np.ndarray         # [ticks, T]
     promo_scale: np.ndarray     # [ticks, T]
     thrash_events: np.ndarray   # [ticks, T] cumulative
+    attempted: np.ndarray = None        # [ticks, T] promotion candidates
+    # observability (obs/): decoded from the final engine state
+    tier_stats: Optional[dict] = None   # obs.stats.stats_summary output
+    migrations: Optional[np.ndarray] = None  # obs.trace.EVENT_DTYPE records
+    migrations_dropped: int = 0
+    lower_protection: tuple = ()
 
     def steady_window(self, frac: float = 0.5) -> slice:
         n = self.fast_usage.shape[0]
@@ -54,12 +63,22 @@ class SimResult:
         w = window or self.steady_window()
         return (self.promotions[w] + self.demotions[w]).mean(axis=0)
 
+    def pathologies(self, **kw) -> List[Pathology]:
+        """Run the offline obs.pathology detectors over this run."""
+        return detect_all(
+            self.fast_usage, self.slow_usage, self.promotions,
+            self.demotions, self.latency, self.thrash_events,
+            attempted=self.attempted,
+            lower_protection=self.lower_protection, **kw)
+
 
 def simulate(cfg: TieringConfig, tenants: List[TenantWorkload], ticks: int,
              mode: str = "equilibria", k_max: int = 256) -> SimResult:
     owner, accesses, alive = build_trace(tenants, ticks)
     cfg = cfg.with_(n_tenants=len(tenants))
-    _, outs = run_engine(cfg, owner, accesses, alive, mode=mode, k_max=k_max)
+    final, outs = run_engine(cfg, owner, accesses, alive, mode=mode,
+                             k_max=k_max)
+    events, dropped = decode_ring(final.ring)
     return SimResult(
         mode=mode,
         fast_usage=np.asarray(outs.fast_usage),
@@ -70,6 +89,11 @@ def simulate(cfg: TieringConfig, tenants: List[TenantWorkload], ticks: int,
         latency=np.asarray(outs.latency),
         promo_scale=np.asarray(outs.promo_scale),
         thrash_events=np.asarray(outs.thrash_events),
+        attempted=np.asarray(outs.attempted_promotions),
+        tier_stats=stats_summary(final.stats),
+        migrations=events,
+        migrations_dropped=dropped,
+        lower_protection=tuple(cfg.lower_protection[:cfg.n_tenants]),
     )
 
 

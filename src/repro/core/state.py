@@ -17,6 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import TieringConfig
+from repro.obs.stats import TierStats, init_stats, stats_export
+from repro.obs.trace import MigrationRing, init_ring
 
 TIER_NONE = -1
 TIER_FAST = 0
@@ -61,6 +63,9 @@ class TierState(NamedTuple):
     freed_since: jax.Array        # int32: pages freed since last controller run
     steady: jax.Array             # bool: steady-state flag (set by controller)
     table: ThrashTable
+    # observability (obs/, §IV-C): in-graph stats + migration event ring
+    stats: TierStats
+    ring: MigrationRing
     t: jax.Array                  # scalar int32 tick
 
 
@@ -83,6 +88,8 @@ def init_state(cfg: TieringConfig, n_pages: int) -> TierState:
         steady=jnp.zeros((T,), bool),
         table=ThrashTable(page=jnp.full((cfg.thrash_table_slots,), -1, jnp.int32),
                           tick=jnp.zeros((cfg.thrash_table_slots,), jnp.int32)),
+        stats=init_stats(T, (n_pages,), cfg.obs_resid_buckets),
+        ring=init_ring(cfg.obs_ring_capacity),
         t=jnp.zeros((), jnp.int32),
     )
 
@@ -106,10 +113,15 @@ def tenant_usage(state: TierState, owner_onehot: jax.Array):
 
 
 def tier_stat(state: TierState, owner_onehot: jax.Array, page_bytes: int = 1 << 24):
-    """Observability export — the cgroup `memory.tier_stat` analogue (§IV-C)."""
+    """Observability export — the cgroup `memory.tier_stat` analogue (§IV-C).
+
+    Cumulative counters come from ``Counters``; the distributional and
+    windowed fields (residency histogram/percentiles, attempt-vs-success
+    ratios, occupancy fractions) come from the in-graph ``obs.TierStats``.
+    """
     fast, slow = tenant_usage(state, owner_onehot)
     c = state.counters
-    return {
+    stat = {
         "local_usage_bytes": fast * page_bytes,
         "cxl_usage_bytes": slow * page_bytes,
         "pgpromote": c.promotions,
@@ -122,3 +134,5 @@ def tier_stat(state: TierState, owner_onehot: jax.Array, page_bytes: int = 1 << 
         "promo_rate_scale": state.promo_scale,
         "steady_state": state.steady,
     }
+    stat.update(stats_export(state.stats))  # pure jnp: jit/vmap-safe
+    return stat

@@ -1,3 +1,16 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Custom Pallas kernels for the compute hot-spots the paper optimizes
+# (tiered attention, page migration, flash attention, SSD scan), plus
+# shared TPU-lowering compatibility shims.
+"""Kernel package utilities shared by all Pallas kernels."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed ``TPUCompilerParams`` to ``CompilerParams`` (jax >= 0.5);
+# resolve whichever this jax exposes so kernels build on both.
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None)
+if _COMPILER_PARAMS_CLS is None:
+    _COMPILER_PARAMS_CLS = pltpu.TPUCompilerParams
+
+
+def tpu_compiler_params(dimension_semantics, **kw):
+    """Version-portable ``compiler_params`` for ``pl.pallas_call``."""
+    return _COMPILER_PARAMS_CLS(dimension_semantics=dimension_semantics, **kw)

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _mig_kernel(src_idx_ref, dst_idx_ref, sel_ref, src_ref, dst_in_ref,
                 dst_ref):
@@ -53,8 +55,7 @@ def migrate_pages_tpu(src_pool, dst_pool, src_idx, dst_idx, sel, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(dst_pool.shape, dst_pool.dtype),
         input_output_aliases={4: 0},   # dst_pool (3 scalars + src = idx 4) -> out
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
         interpret=interpret,
     )(jnp.maximum(src_idx, 0), jnp.maximum(dst_idx, 0),
       sel.astype(jnp.int32), src_pool, dst_pool)

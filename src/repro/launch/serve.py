@@ -69,8 +69,9 @@ def main():
           f"{args.steps} tokens x {args.batch} seqs in {dt:.2f}s "
           f"({args.batch * args.steps / dt:.1f} tok/s)")
     if "kv" in state:
+        from repro.obs.stats import format_tier_stat, stats_summary
+        from repro.obs.trace import decode_ring
         kv = state["kv"]
-        print("\nper-tenant tier_stat (cgroup-style observability, §IV-C):")
         fast = np.zeros(args.tenants, int)
         slow = np.zeros(args.tenants, int)
         ten = np.asarray(kv.tenant)
@@ -80,12 +81,30 @@ def main():
             fast[ten[b]] += fp[b]
             slow[ten[b]] += sp[b]
         c = kv.counters
+        from repro.memtier.kvcache import kv_layer_count
+        # one page slot holds k+v for every KV layer (pools are [L, B, Mf, ...])
+        page_bytes = (2 * args.page_tokens * cfg.num_kv_heads
+                      * cfg.resolved_head_dim * 2 * kv_layer_count(cfg))
+        stat = {
+            "local_usage_bytes": fast * page_bytes,
+            "cxl_usage_bytes": slow * page_bytes,
+            "pgpromote": c.promotions, "pgdemote": c.demotions,
+            "pgpromote_attempted": c.attempted_promotions,
+            "pgalloc": c.allocations, "thrash_events": c.thrash_events,
+        }
+        summary = stats_summary(kv.stats)
+        print("\nper-tenant tier_stat (cgroup-style observability, §IV-C):")
         for t in range(args.tenants):
-            print(f"  tenant{t}: fast_pages={fast[t]} slow_pages={slow[t]} "
-                  f"pgpromote={int(c.promotions[t])} "
-                  f"pgdemote={int(c.demotions[t])} "
-                  f"thrash={int(c.thrash_events[t])} "
-                  f"promo_scale={float(kv.promo_scale[t]):.3f}")
+            print(f"tenant{t} (promo_scale="
+                  f"{float(kv.promo_scale[t]):.3f}):")
+            print(format_tier_stat(stat, summary, t))
+        events, dropped = decode_ring(kv.ring)
+        print(f"\nmigration trace: {len(events)} events buffered "
+              f"({dropped} older events overwritten); last 5:")
+        for e in events[-5:]:
+            d = "promote" if e["direction"] == 0 else "demote"
+            print(f"  step={e['tick']} tenant={e['tenant']} "
+                  f"page={e['page']} {d} hotness={e['hotness']:.3f}")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,8 @@ import numpy as np
 from repro.configs.base import ModelConfig, TieringConfig
 from repro.core import policy as P
 from repro.core.state import Counters, TenantPolicy, ThrashTable, zero_counters
+from repro.obs.stats import TierStats, init_stats, record_fast_entries
+from repro.obs.trace import MigrationRing, init_ring
 
 NEG_INF = -1e30
 
@@ -54,6 +56,9 @@ class TieredKVCache(NamedTuple):
     thrash_prev: jax.Array  # [T] int32
     steady: jax.Array       # [T] bool
     table: ThrashTable
+    # observability (obs/, §IV-C): fast_since is per fast *slot* [B, Mf]
+    stats: TierStats
+    ring: MigrationRing
     t: jax.Array            # scalar int32 step
 
 
@@ -102,6 +107,13 @@ def init_cache(cfg: ModelConfig, tcfg: TieringConfig, batch: int, seq: int,
     tenant = (jax.ShapeDtypeStruct((batch,), jnp.int32) if abstract
               else jnp.arange(batch, dtype=jnp.int32) % T)
     z32 = functools.partial(arr, dtype=jnp.int32)
+
+    stats = init_stats(T, (batch, Mf), tcfg.obs_resid_buckets)
+    ring = init_ring(tcfg.obs_ring_capacity)
+    if abstract:
+        as_spec = lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)  # noqa: E731
+        stats = jax.tree_util.tree_map(as_spec, stats)
+        ring = jax.tree_util.tree_map(as_spec, ring)
     return TieredKVCache(
         fast_k=arr((L, batch, Mf, pt, K, D), dt),
         fast_v=arr((L, batch, Mf, pt, K, D), dt),
@@ -122,6 +134,7 @@ def init_cache(cfg: ModelConfig, tcfg: TieringConfig, batch: int, seq: int,
         steady=arr((T,), bool),
         table=ThrashTable(page=z32((tcfg.thrash_table_slots,), fill=-1),
                           tick=z32((tcfg.thrash_table_slots,))),
+        stats=stats, ring=ring,
         t=(jax.ShapeDtypeStruct((), jnp.int32) if abstract
            else jnp.zeros((), jnp.int32)),
     )
@@ -185,8 +198,14 @@ def alloc_page_for_append(cache: TieredKVCache, tcfg: TieringConfig,
         jnp.where(reuse_slow, apage, slow_page[barange, reuse_idx]))
     alloc_t = ten_oh.T @ (need_new & ~reuse).astype(jnp.int32)
 
+    # obs: new fast-tier placements start their residency clock (§IV-C)
+    entered = jnp.zeros_like(cache.fast_page, bool).at[
+        jnp.arange(B), fast_slot].set(take_fast)
+    stats = record_fast_entries(cache.stats, entered, cache.t)
+
     cache = cache._replace(page_tier=page_tier, page_idx=page_idx,
                            fast_page=fast_page, slow_page=slow_page,
+                           stats=stats,
                            counters=cache.counters._replace(
                                allocations=cache.counters.allocations + alloc_t))
     return cache, lpage

@@ -19,6 +19,8 @@ from repro.configs.base import TieringConfig
 from repro.core import policy as P
 from repro.core.state import Counters, TenantPolicy
 from repro.memtier.kvcache import TieredKVCache
+from repro.obs import stats as OS
+from repro.obs import trace as OT
 
 
 def _per_tenant_seq_select(score: jax.Array, eligible: jax.Array,
@@ -69,13 +71,14 @@ def equilibria_kv_step(cache: TieredKVCache, fast_mass: jax.Array,
     contended = (fast_budget - global_fast) < (wmark + slow_demand)
 
     # ---- quotas (paper Eq.1 / Eq.2, per tenant) ----
+    throttled = jnp.zeros((T,), bool)
     if mode == "equilibria":
         d_scan = P.eq1_demotion_scan(fast_usage, fast_usage, policy, contended)
         sync = P.upper_bound_demotion(fast_usage, policy)
         d_quota = jnp.minimum(d_scan.astype(jnp.int32) + sync, 4)
         p_base = jnp.full((T,), 4.0, jnp.float32)
-        p_scan, _ = P.eq2_promotion_scan(p_base, fast_usage, policy,
-                                         contended, tcfg)
+        p_scan, throttled = P.eq2_promotion_scan(p_base, fast_usage, policy,
+                                                 contended, tcfg)
         p_quota = jnp.maximum((p_scan * cache.promo_scale), 0.0).astype(jnp.int32)
         bound_room = jnp.where(policy.upper_bound > 0,
                                jnp.maximum(policy.upper_bound - fast_usage, 0),
@@ -104,6 +107,14 @@ def equilibria_kv_step(cache: TieredKVCache, fast_mass: jax.Array,
     gpage_d = barange * (1 << 20) + jnp.maximum(apage_d, 0)        # stable identity
     thrash_new = P.thrash_check_demotions(
         cache.table, gpage_d, demote_sel, cache.tenant, t, tcfg, T)
+
+    # obs: residency ends for the demoted fast slots; trace the event
+    B_, Mf_ = cache.fast_page.shape
+    exit_mask = jnp.zeros((B_, Mf_), bool).at[barange, src_f].set(demote_sel)
+    slot_owner = jnp.broadcast_to(cache.tenant[:, None], (B_, Mf_))
+    stats = OS.record_fast_exits(cache.stats, exit_mask, slot_owner, t)
+    ring = OT.ring_record(cache.ring, demote_sel, gpage_d, cache.tenant,
+                          fast_hot[barange, src_f], OT.DIR_DEMOTE, t)
 
     def move(dst_pool, src_pool, dst_idx, src_idx, sel):
         # dst/src pools: [L, B, Mp, pt, K, D]; move one page per selected seq
@@ -164,18 +175,35 @@ def equilibria_kv_step(cache: TieredKVCache, fast_mass: jax.Array,
     gpage_p = barange * (1 << 20) + jnp.maximum(apage_p, 0)
     table = P.thrash_record_promotions(cache.table, gpage_p, promote_sel, t)
 
+    # obs: promoted pages start a fast-tier residency; trace the event
+    enter_mask = jnp.zeros((B_, Mf_), bool).at[barange, dst_f].set(promote_sel)
+    stats = OS.record_fast_entries(stats, enter_mask, t)
+    ring = OT.ring_record(ring, promote_sel, gpage_p, cache.tenant,
+                          fast_hot[barange, dst_f], OT.DIR_PROMOTE, t)
+
     # ---- counters & thrash controller ----
     promo_t = ten_oh.T @ promote_sel.astype(jnp.int32)
     demo_t = ten_oh.T @ demote_sel.astype(jnp.int32)
+    att_t = ten_oh.T @ hot_enough.astype(jnp.int32)
     c = cache.counters
     counters = Counters(
         promotions=c.promotions + promo_t,
         demotions=c.demotions + demo_t,
-        attempted_promotions=c.attempted_promotions
-        + ten_oh.T @ hot_enough.astype(jnp.int32),
+        attempted_promotions=c.attempted_promotions + att_t,
         reclaims=c.reclaims, allocations=c.allocations,
         thrash_events=c.thrash_events + thrash_new,
         sync_demotions=c.sync_demotions)
+
+    # obs: per-step tiering_stat roll-forward (§IV-C)
+    fast_usage_now = ten_oh.T @ (fast_page >= 0).sum(axis=1)
+    slow_usage_now = ten_oh.T @ (slow_page >= 0).sum(axis=1)
+    below_prot = OS.below_protection(fast_usage_now, slow_usage_now,
+                                     policy.lower_protection)
+    stats = OS.update_tick(
+        stats, promo_attempts=att_t, promo_success=promo_t,
+        demo_attempts=d_quota, demo_success=demo_t, thrash_new=thrash_new,
+        contended=contended, throttled=throttled,
+        below_protection=below_prot, decay=tcfg.obs_window_decay)
 
     period = tcfg.controller_period
 
@@ -206,4 +234,5 @@ def equilibria_kv_step(cache: TieredKVCache, fast_mass: jax.Array,
         fast_hot=fast_hot, slow_hot=slow_hot,
         page_tier=page_tier, page_idx=page_idx,
         counters=counters, promo_scale=promo_scale,
-        thrash_prev=thrash_prev, steady=steady, table=table, t=t + 1)
+        thrash_prev=thrash_prev, steady=steady, table=table,
+        stats=stats, ring=ring, t=t + 1)

@@ -1,0 +1,28 @@
+"""Observability & fleet telemetry — the paper's third pillar (§IV-C).
+
+Everything under ``obs/`` splits into two halves:
+
+  in-graph   — ``stats.TierStats`` (per-tenant tiering_stat-style metrics)
+               and ``trace.MigrationRing`` (fixed-capacity migration event
+               buffer). Both are pytrees of jnp arrays updated inside the
+               compiled tick / serve step, so collection costs no host
+               round-trips and works under jit, scan and vmap.
+  host-side  — ``stats.stats_summary`` / ``trace.decode_ring`` decoders,
+               ``pathology`` offline detectors for the paper's failure
+               modes, and the ``fleet`` harness that vmaps the engine
+               across simulated hosts and rolls telemetry up fleet-wide.
+"""
+from repro.obs.stats import (TierStats, below_protection, init_stats,
+                             record_fast_entries, record_fast_exits,
+                             residency_bucket, stats_export, stats_summary,
+                             update_tick)
+from repro.obs.trace import (DIR_DEMOTE, DIR_PROMOTE, MigrationRing,
+                             decode_ring, init_ring, ring_record)
+
+__all__ = [
+    "TierStats", "below_protection", "init_stats", "record_fast_entries",
+    "record_fast_exits", "residency_bucket", "stats_export", "stats_summary",
+    "update_tick",
+    "MigrationRing", "init_ring", "ring_record", "decode_ring",
+    "DIR_PROMOTE", "DIR_DEMOTE",
+]

@@ -1,0 +1,203 @@
+"""Fleet telemetry harness: the engine tick ``vmap``-ed across N simulated
+hosts with heterogeneous tenant mixes.
+
+This is the ROADMAP's fleet-scale evaluation vehicle: one compiled program
+advances every host's tiering state in lockstep (hosts share the static
+ownership layout; heterogeneity comes from per-host workload patterns,
+arrivals and hotness), and the in-graph obs state (TierStats + migration
+ring) is collected per host with zero extra tracing work — ``vmap`` batches
+the scatter/adds along the host axis. Host-side, per-host telemetry is
+decoded and rolled up fleet-wide: latency percentiles, migration rates, and
+pathology counts from ``obs.pathology``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TieringConfig
+from repro.core.engine import make_tick
+from repro.core.state import init_state
+from repro.core.workloads import (TenantWorkload, build_trace, cache_like,
+                                  ci_like, microbenchmark, spark_like,
+                                  thrasher, web_like)
+from repro.obs.pathology import Pathology, count_by_kind, detect_all
+from repro.obs.stats import stats_summary
+from repro.obs.trace import decode_ring
+
+# stable-pattern menu for clean hosts (hot sets that mostly fit fast tier)
+MIX_MENU = ("web", "cache", "micro", "ci", "spark")
+
+
+def heterogeneous_mixes(footprints: Sequence[int], n_hosts: int,
+                        seed: int = 0, menu: Sequence[str] = MIX_MENU,
+                        stagger: int = 8) -> List[List[TenantWorkload]]:
+    """One tenant mix per host. Footprints are fixed per tenant *slot* (every
+    host shares the static page-ownership layout the engine needs); the
+    workload pattern and arrival of each slot vary per host."""
+    rng = np.random.default_rng(seed)
+    mk = {
+        "web": lambda f, a: web_like(f, arrival=a),
+        "cache": lambda f, a: cache_like(f, arrival=a),
+        "micro": lambda f, a: microbenchmark(f, arrival=a),
+        "ci": lambda f, a: ci_like(f, arrival=a),
+        "spark": lambda f, a: spark_like(f, arrival=a),
+    }
+    mixes = []
+    for _ in range(n_hosts):
+        mix = []
+        for f in footprints:
+            kind = menu[int(rng.integers(len(menu)))]
+            arrival = int(rng.integers(0, stagger + 1))
+            mix.append(mk[kind](f, arrival))
+        mixes.append(mix)
+    return mixes
+
+
+def inject_noisy_neighbor(mixes: List[List[TenantWorkload]], tenant: int,
+                          fast_share: int,
+                          hosts: Optional[Sequence[int]] = None,
+                          arrival: Optional[int] = None
+                          ) -> List[List[TenantWorkload]]:
+    """Replace ``tenant``'s workload with a thrasher (promotion-hot pages
+    never re-accessed before demotion — the §V-B5 noisy neighbor) on the
+    given hosts (default: all). Footprint is preserved so the fleet keeps a
+    common ownership layout. A late ``arrival`` gives detectors a clean
+    baseline window before the noise starts."""
+    hosts = set(range(len(mixes))) if hosts is None else set(hosts)
+    out = []
+    for h, mix in enumerate(mixes):
+        mix = list(mix)
+        if h in hosts:
+            a = mix[tenant].arrival if arrival is None else arrival
+            mix[tenant] = thrasher(mix[tenant].footprint, fast_share,
+                                   arrival=a)
+        out.append(mix)
+    return out
+
+
+@dataclass
+class FleetResult:
+    mode: str
+    n_hosts: int
+    # [H, ticks, T] each
+    fast_usage: np.ndarray
+    slow_usage: np.ndarray
+    promotions: np.ndarray
+    demotions: np.ndarray
+    throughput: np.ndarray
+    latency: np.ndarray
+    thrash_events: np.ndarray
+    attempted: np.ndarray
+    lower_protection: tuple
+    # per-host decoded telemetry
+    stats: List[dict] = field(default_factory=list)   # stats_summary per host
+    pathologies: List[List[Pathology]] = field(default_factory=list)
+    _final_state: object = None
+
+    def steady_window(self, frac: float = 0.5) -> slice:
+        n = self.latency.shape[1]
+        return slice(int(n * (1 - frac)), n)
+
+    def host_migrations(self, host: int):
+        """Decode one host's migration ring -> (events, n_dropped)."""
+        ring = jax.tree_util.tree_map(lambda x: x[host],
+                                      self._final_state.ring)
+        return decode_ring(ring)
+
+    def pathology_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for ps in self.pathologies:
+            for k, v in count_by_kind(ps).items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    def tenants_flagged(self, kind: Optional[str] = None) -> set:
+        """(host, tenant) pairs flagged, optionally for one pathology kind."""
+        out = set()
+        for h, ps in enumerate(self.pathologies):
+            for p in ps:
+                if kind is None or p.kind == kind:
+                    out.add((h, p.tenant))
+        return out
+
+    def rollup(self) -> dict:
+        """Fleet-wide operator summary."""
+        w = self.steady_window()
+        lat = self.latency[:, w]
+        mig = self.promotions[:, w] + self.demotions[:, w]
+        hosts_bad = sum(1 for ps in self.pathologies if ps)
+        return {
+            "hosts": self.n_hosts,
+            "ticks": self.latency.shape[1],
+            "tenants": self.latency.shape[2],
+            "latency_p50": float(np.percentile(lat, 50)),
+            "latency_p99": float(np.percentile(lat, 99)),
+            "latency_worst_host_p99": float(
+                np.percentile(lat, 99, axis=(1, 2)).max()),
+            "throughput_mean": float(self.throughput[:, w].mean()),
+            "migrations_per_tick": float(mig.sum(axis=2).mean()),
+            "thrash_total": int(self.thrash_events[:, -1].sum()),
+            "pathology_counts": self.pathology_counts(),
+            "hosts_with_pathology": hosts_bad,
+        }
+
+
+def run_fleet(cfg: TieringConfig, host_mixes: List[List[TenantWorkload]],
+              ticks: int, mode: str = "equilibria", k_max: int = 64,
+              detect: bool = True) -> FleetResult:
+    """Run every host's trace through one vmapped engine; collect telemetry.
+
+    All hosts must share the tenant footprint layout (same owner vector);
+    ``heterogeneous_mixes`` guarantees that by construction.
+    """
+    traces = [build_trace(mix, ticks) for mix in host_mixes]
+    owner = traces[0][0]
+    for o, _, _ in traces[1:]:
+        if not np.array_equal(o, owner):
+            raise ValueError("all hosts must share the footprint layout "
+                             "(same per-tenant page counts)")
+    cfg = cfg.with_(n_tenants=len(host_mixes[0]))
+    H = len(host_mixes)
+    accesses = jnp.asarray(np.stack([t[1] for t in traces]), jnp.float32)
+    alive = jnp.asarray(np.stack([t[2] for t in traces]), bool)
+
+    tick = make_tick(cfg, owner, mode, k_max)
+    state0 = init_state(cfg, owner.shape[0])
+    states = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (H,) + x.shape), state0)
+
+    @jax.jit
+    @jax.vmap
+    def run_host(state, acc, alv):
+        return jax.lax.scan(tick, state, (acc, alv))
+
+    finals, outs = run_host(states, accesses, alive)
+
+    res = FleetResult(
+        mode=mode, n_hosts=H,
+        fast_usage=np.asarray(outs.fast_usage),
+        slow_usage=np.asarray(outs.slow_usage),
+        promotions=np.asarray(outs.promotions),
+        demotions=np.asarray(outs.demotions),
+        throughput=np.asarray(outs.throughput),
+        latency=np.asarray(outs.latency),
+        thrash_events=np.asarray(outs.thrash_events),
+        attempted=np.asarray(outs.attempted_promotions),
+        lower_protection=tuple(cfg.lower_protection[:cfg.n_tenants]),
+        _final_state=finals)
+    res.stats = [stats_summary(jax.tree_util.tree_map(lambda x: x[h],
+                                                      finals.stats))
+                 for h in range(H)]
+    if detect:
+        res.pathologies = [
+            detect_all(res.fast_usage[h], res.slow_usage[h],
+                       res.promotions[h], res.demotions[h], res.latency[h],
+                       res.thrash_events[h], attempted=res.attempted[h],
+                       lower_protection=res.lower_protection)
+            for h in range(H)]
+    return res

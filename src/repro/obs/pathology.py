@@ -1,0 +1,198 @@
+"""Offline pathology detectors over collected telemetry (paper §IV-C: the
+observability that lets operators "diagnose performance pathologies at
+scale").
+
+Each detector consumes per-tick per-tenant numpy arrays (as produced by
+``core.simulator.SimResult`` or the fleet harness) plus the static policy,
+and returns ``Pathology`` records. Detectors are pure host-side numpy —
+they run after collection, never in the compiled graph.
+
+Detected pathologies (names follow the paper's failure-mode discussion):
+  chronic_thrashing     — sustained promote->demote churn (§IV-F signature)
+  protection_violation  — a tenant with demand above its lower protection is
+                          held below it (§IV-B invariant broken)
+  noisy_neighbor        — one tenant's migration traffic dominates while
+                          neighbors' latency degrades (§III-F)
+  promotion_stall       — promotion demand exists but success ratio stays
+                          ~zero (misconfigured bound / starved promoter)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Pathology:
+    kind: str
+    tenant: int
+    severity: float              # >= 1.0 means "over threshold"
+    evidence: Dict[str, float] = field(default_factory=dict)
+
+    def __str__(self):
+        ev = " ".join(f"{k}={v:.3g}" for k, v in self.evidence.items())
+        return (f"[{self.kind}] tenant{self.tenant} "
+                f"severity={self.severity:.2f} {ev}")
+
+
+def _steady(n_ticks: int, frac: float = 0.5) -> slice:
+    return slice(int(n_ticks * (1 - frac)), n_ticks)
+
+
+def detect_chronic_thrashing(thrash_events: np.ndarray, window: int = 20,
+                             rate_threshold: float = 4.0,
+                             frac_threshold: float = 0.5) -> List[Pathology]:
+    """thrash_events: [ticks, T] *cumulative*. Flags tenants whose per-window
+    thrash rate exceeds ``rate_threshold`` in >= ``frac_threshold`` of the
+    steady-half windows — transient churn at arrival does not count."""
+    ticks, T = thrash_events.shape
+    w = _steady(ticks)
+    ev = thrash_events[w]
+    if ev.shape[0] < 2 * window:
+        window = max(ev.shape[0] // 4, 1)
+    out: List[Pathology] = []
+    idxs = np.arange(0, ev.shape[0], window)  # partial tail window dropped
+    if idxs.shape[0] < 2:
+        return out
+    rates = np.diff(ev[idxs], axis=0).astype(np.float64)  # events per window
+    for t in range(T):
+        bad = float((rates[:, t] > rate_threshold).mean())
+        if bad >= frac_threshold:
+            out.append(Pathology(
+                "chronic_thrashing", t, severity=bad / frac_threshold,
+                evidence={"mean_rate": float(rates[:, t].mean()),
+                          "bad_window_frac": bad,
+                          "rate_threshold": rate_threshold}))
+    return out
+
+
+def detect_protection_violation(fast_usage: np.ndarray,
+                                slow_usage: np.ndarray,
+                                lower_protection: Sequence[int],
+                                attempted: Optional[np.ndarray] = None,
+                                demotions: Optional[np.ndarray] = None,
+                                tolerance: float = 0.05,
+                                frac_threshold: float = 0.25
+                                ) -> List[Pathology]:
+    """fast/slow_usage: [ticks, T]. A tenant violates its lower protection
+    when its total footprint covers the protection but its fast-tier share
+    sits below protection*(1-tolerance) — for >= ``frac_threshold`` of the
+    steady window. Tenants that simply don't demand that much are exempt;
+    when ``attempted``/``demotions`` [ticks, T] are given, ticks where the
+    tenant neither sought promotion nor was demoted don't count either (a
+    cold tenant sitting in the slow tier by its own access pattern is not a
+    policy violation)."""
+    ticks, T = fast_usage.shape
+    w = _steady(ticks)
+    prot = np.asarray(lower_protection, np.float64)
+    out: List[Pathology] = []
+    for t in range(T):
+        if t >= prot.shape[0] or prot[t] <= 0:
+            continue
+        demand = fast_usage[w, t] + slow_usage[w, t] >= prot[t]
+        held_below = fast_usage[w, t] < prot[t] * (1 - tolerance)
+        viol = demand & held_below
+        if attempted is not None or demotions is not None:
+            wants = np.zeros(viol.shape, bool)
+            if attempted is not None:
+                wants |= attempted[w, t] > 0
+            if demotions is not None:
+                wants |= demotions[w, t] > 0
+            viol &= wants
+        frac = float(viol.mean())
+        if frac >= frac_threshold:
+            out.append(Pathology(
+                "protection_violation", t, severity=frac / frac_threshold,
+                evidence={"violation_frac": frac,
+                          "mean_fast": float(fast_usage[w, t].mean()),
+                          "protection": float(prot[t])}))
+    return out
+
+
+def detect_noisy_neighbor(promotions: np.ndarray, demotions: np.ndarray,
+                          latency: np.ndarray,
+                          dominance_threshold: float = 0.5,
+                          degrade_threshold: float = 1.10
+                          ) -> List[Pathology]:
+    """[ticks, T] each. Flags a tenant whose share of total migration traffic
+    exceeds ``dominance_threshold`` over the steady window while at least one
+    *other* tenant's steady latency exceeds its own early-run baseline by
+    ``degrade_threshold``x — migrations stall everyone (§III-F)."""
+    ticks, T = promotions.shape
+    if T < 2:
+        return []
+    w = _steady(ticks)
+    base_w = slice(0, max(ticks // 4, 1))
+    mig = (promotions[w] + demotions[w]).sum(axis=0).astype(np.float64)  # [T]
+    total = mig.sum()
+    out: List[Pathology] = []
+    if total <= 0:
+        return out
+    lat_now = latency[w].mean(axis=0)
+    lat_base = np.maximum(latency[base_w].mean(axis=0), 1e-9)
+    degrade = lat_now / lat_base
+    for t in range(T):
+        share = mig[t] / total
+        others = np.delete(degrade, t)
+        worst = float(others.max()) if others.size else 0.0
+        if share > dominance_threshold and worst > degrade_threshold:
+            out.append(Pathology(
+                "noisy_neighbor", t,
+                severity=(share / dominance_threshold)
+                * (worst / degrade_threshold),
+                evidence={"migration_share": float(share),
+                          "worst_neighbor_degrade": worst}))
+    return out
+
+
+def detect_promotion_stall(attempted: np.ndarray, promotions: np.ndarray,
+                           min_attempts_per_tick: float = 1.0,
+                           success_threshold: float = 0.02
+                           ) -> List[Pathology]:
+    """[ticks, T] per-tick attempts vs successes. Flags tenants with sustained
+    promotion demand in the steady window whose success ratio is ~zero."""
+    ticks, T = attempted.shape
+    w = _steady(ticks)
+    out: List[Pathology] = []
+    for t in range(T):
+        att = float(attempted[w, t].sum())
+        n = attempted[w, t].shape[0]
+        if att < min_attempts_per_tick * n:
+            continue
+        ratio = float(promotions[w, t].sum()) / max(att, 1.0)
+        if ratio < success_threshold:
+            out.append(Pathology(
+                "promotion_stall", t,
+                severity=success_threshold / max(ratio, 1e-9),
+                evidence={"attempts_per_tick": att / n,
+                          "success_ratio": ratio}))
+    return out
+
+
+def detect_all(fast_usage: np.ndarray, slow_usage: np.ndarray,
+               promotions: np.ndarray, demotions: np.ndarray,
+               latency: np.ndarray, thrash_events: np.ndarray,
+               attempted: Optional[np.ndarray] = None,
+               lower_protection: Sequence[int] = (),
+               thrash_rate_threshold: float = 4.0) -> List[Pathology]:
+    """Run every detector over one host's collected telemetry."""
+    found = detect_chronic_thrashing(
+        thrash_events, rate_threshold=thrash_rate_threshold)
+    if len(lower_protection):
+        found += detect_protection_violation(fast_usage, slow_usage,
+                                             lower_protection,
+                                             attempted=attempted,
+                                             demotions=demotions)
+    found += detect_noisy_neighbor(promotions, demotions, latency)
+    if attempted is not None:
+        found += detect_promotion_stall(attempted, promotions)
+    return found
+
+
+def count_by_kind(pathologies: Sequence[Pathology]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for p in pathologies:
+        out[p.kind] = out.get(p.kind, 0) + 1
+    return out

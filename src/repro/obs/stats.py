@@ -1,0 +1,230 @@
+"""In-graph per-tenant tiering statistics — the cgroup ``tiering_stat``
+analogue of paper §IV-C, collected inside the compiled tick.
+
+``TierStats`` rides in the engine/serving state pytree and is updated with
+pure scatter/adds, so it works identically under ``jax.lax.scan`` (trace
+engine), inside the jitted serve step, and under ``jax.vmap`` (fleet
+harness). Cumulative totals live in ``core.state.Counters``; this module
+adds the *distributional* and *windowed* metrics operators need to diagnose
+pathologies: log-bucketed fast-tier residency histograms, attempt-vs-success
+migration counters, contention / watermark / throttle state occupancy, and
+EWMA-windowed thrash and migration rates.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+N_RESID_BUCKETS = 16         # log2 buckets: [0,2), [2,4), [4,8), ... ticks
+WINDOW_DECAY = 0.9           # EWMA decay for windowed rates (per tick)
+
+
+class TierStats(NamedTuple):
+    """Per-tenant tiering_stat metrics. All [T]-leading unless noted."""
+    # distribution: fast-tier residency time at demotion/free, log2 buckets
+    resid_hist: jax.Array          # [T, N_RESID_BUCKETS] int32
+    # attempt vs success (cumulative)
+    promo_attempts: jax.Array      # [T] int32 candidates offered to promoter
+    promo_success: jax.Array       # [T] int32 pages actually promoted
+    demo_attempts: jax.Array       # [T] int32 demotion quota issued
+    demo_success: jax.Array        # [T] int32 pages actually demoted
+    # state occupancy (ticks spent in each condition, cumulative)
+    contended_ticks: jax.Array     # [T] int32 local memory contended
+    throttled_ticks: jax.Array     # [T] int32 promotion-throttled (Eq.2)
+    below_protection_ticks: jax.Array  # [T] int32 held under lower protection
+    # windowed rates (EWMA over ticks; rate ~ events per 1/(1-decay) ticks)
+    thrash_rate: jax.Array         # [T] f32
+    promo_rate: jax.Array          # [T] f32
+    demo_rate: jax.Array           # [T] f32
+    # aux: tick each fast-resident page/slot entered the fast tier (-1 = not
+    # fast). Engine shape [L] (logical pages); serving shape [B, Mf] (slots).
+    fast_since: jax.Array          # int32
+    ticks: jax.Array               # scalar int32 ticks observed
+
+
+def init_stats(n_tenants: int, fast_since_shape,
+               n_buckets: int = N_RESID_BUCKETS) -> TierStats:
+    z = jnp.zeros((n_tenants,), jnp.int32)
+    f = jnp.zeros((n_tenants,), jnp.float32)
+    return TierStats(
+        resid_hist=jnp.zeros((n_tenants, n_buckets), jnp.int32),
+        promo_attempts=z, promo_success=z, demo_attempts=z, demo_success=z,
+        contended_ticks=z, throttled_ticks=z, below_protection_ticks=z,
+        thrash_rate=f, promo_rate=f, demo_rate=f,
+        fast_since=jnp.full(fast_since_shape, -1, jnp.int32),
+        ticks=jnp.zeros((), jnp.int32))
+
+
+def residency_bucket(age: jax.Array, n_buckets: int = N_RESID_BUCKETS
+                     ) -> jax.Array:
+    """log2 bucket of a residency age (ticks): 0/1 -> 0, 2-3 -> 1, 4-7 -> 2,
+    ...; clipped to the last bucket."""
+    a = jnp.maximum(age, 1).astype(jnp.float32)
+    b = jnp.floor(jnp.log2(a)).astype(jnp.int32)
+    return jnp.clip(b, 0, n_buckets - 1)
+
+
+def bucket_edges(n_buckets: int = N_RESID_BUCKETS) -> np.ndarray:
+    """Host-side: inclusive lower edge of each bucket, in ticks."""
+    return np.concatenate([[0], 2 ** np.arange(1, n_buckets)])
+
+
+def below_protection(fast_usage: jax.Array, slow_usage: jax.Array,
+                     lower_protection: jax.Array) -> jax.Array:
+    """[T] bool: tenant's footprint covers its lower protection but its
+    fast-tier share sits below it — the §IV-B invariant under strain. Shared
+    by both tick paths so the in-graph metric and the offline
+    protection-violation detector keep one definition."""
+    return ((lower_protection > 0)
+            & (fast_usage < lower_protection)
+            & (fast_usage + slow_usage >= lower_protection))
+
+
+def record_fast_entries(stats: TierStats, entered: jax.Array,
+                        t: jax.Array) -> TierStats:
+    """Stamp the entry tick of pages/slots that just became fast-resident.
+    entered: bool mask with the same shape as ``stats.fast_since``."""
+    return stats._replace(
+        fast_since=jnp.where(entered, t, stats.fast_since))
+
+
+def record_fast_exits(stats: TierStats, exited: jax.Array,
+                      owners: jax.Array, t: jax.Array) -> TierStats:
+    """Bucket residency time for pages/slots leaving the fast tier (demotion
+    or free) into the per-tenant histogram, and clear their entry stamps.
+    exited/owners: same shape as ``stats.fast_since``."""
+    exited = exited & (stats.fast_since >= 0)
+    age = t - stats.fast_since
+    bucket = residency_bucket(age, stats.resid_hist.shape[1])
+    hist = stats.resid_hist.at[owners.reshape(-1), bucket.reshape(-1)].add(
+        exited.reshape(-1).astype(jnp.int32))
+    return stats._replace(
+        resid_hist=hist,
+        fast_since=jnp.where(exited, -1, stats.fast_since))
+
+
+def update_tick(stats: TierStats, *,
+                promo_attempts: jax.Array, promo_success: jax.Array,
+                demo_attempts: jax.Array, demo_success: jax.Array,
+                thrash_new: jax.Array,
+                contended: jax.Array, throttled: Optional[jax.Array] = None,
+                below_protection: Optional[jax.Array] = None,
+                decay: float = WINDOW_DECAY) -> TierStats:
+    """Fold one tick's telemetry into the stats. All [T] except ``contended``
+    (scalar bool, broadcast to every tenant)."""
+    T = stats.promo_attempts.shape[0]
+    c = jnp.broadcast_to(contended.astype(jnp.int32), (T,))
+    thr = (jnp.zeros((T,), jnp.int32) if throttled is None
+           else throttled.astype(jnp.int32))
+    bp = (jnp.zeros((T,), jnp.int32) if below_protection is None
+          else below_protection.astype(jnp.int32))
+    return stats._replace(
+        promo_attempts=stats.promo_attempts + promo_attempts,
+        promo_success=stats.promo_success + promo_success,
+        demo_attempts=stats.demo_attempts + demo_attempts,
+        demo_success=stats.demo_success + demo_success,
+        contended_ticks=stats.contended_ticks + c,
+        throttled_ticks=stats.throttled_ticks + thr,
+        below_protection_ticks=stats.below_protection_ticks + bp,
+        thrash_rate=decay * stats.thrash_rate + thrash_new.astype(jnp.float32),
+        promo_rate=decay * stats.promo_rate + promo_success.astype(jnp.float32),
+        demo_rate=decay * stats.demo_rate + demo_success.astype(jnp.float32),
+        ticks=stats.ticks + 1)
+
+
+def _hist_percentile_j(hist: jax.Array, q: float) -> jax.Array:
+    """Pure-jnp per-tenant percentile (bucket lower edge) of residency."""
+    NB = hist.shape[1]
+    edges = jnp.asarray(bucket_edges(NB), jnp.float32)
+    cum = jnp.cumsum(hist, axis=1)
+    total = cum[:, -1:]
+    idx = jnp.argmax(cum >= q * total, axis=1)
+    return jnp.where(total[:, 0] > 0, edges[idx], 0.0)
+
+
+def stats_export(stats: TierStats) -> dict:
+    """Derived tiering_stat metrics as pure jnp — safe under jit/vmap (the
+    traced-state counterpart of ``stats_summary``)."""
+    ticks = jnp.maximum(stats.ticks, 1).astype(jnp.float32)
+    att_p = stats.promo_attempts.astype(jnp.float32)
+    att_d = stats.demo_attempts.astype(jnp.float32)
+    return {
+        "resid_p50": _hist_percentile_j(stats.resid_hist, 0.50),
+        "resid_p99": _hist_percentile_j(stats.resid_hist, 0.99),
+        "promo_success_ratio": jnp.where(
+            att_p > 0, stats.promo_success / jnp.maximum(att_p, 1.0), 1.0),
+        "demo_success_ratio": jnp.where(
+            att_d > 0, stats.demo_success / jnp.maximum(att_d, 1.0), 1.0),
+        "contended_frac": stats.contended_ticks / ticks,
+        "throttled_frac": stats.throttled_ticks / ticks,
+        "below_protection_frac": stats.below_protection_ticks / ticks,
+        "thrash_rate": stats.thrash_rate,
+    }
+
+
+# ------------------------------------------------------------ host side ----
+def _hist_percentile(hist: np.ndarray, q: float) -> np.ndarray:
+    """Per-tenant approximate percentile (bucket lower edge) of residency."""
+    T, NB = hist.shape
+    edges = bucket_edges(NB)
+    out = np.zeros(T)
+    for t in range(T):
+        total = hist[t].sum()
+        if total == 0:
+            continue
+        cum = np.cumsum(hist[t])
+        out[t] = edges[int(np.searchsorted(cum, q * total, side="left"))]
+    return out
+
+
+def stats_summary(stats: TierStats) -> dict:
+    """Decode a TierStats pytree to plain numpy, with derived ratios the
+    pathology detectors and reports consume."""
+    h = np.asarray(stats.resid_hist)
+    att_p = np.asarray(stats.promo_attempts).astype(np.float64)
+    suc_p = np.asarray(stats.promo_success).astype(np.float64)
+    att_d = np.asarray(stats.demo_attempts).astype(np.float64)
+    suc_d = np.asarray(stats.demo_success).astype(np.float64)
+    ticks = max(int(stats.ticks), 1)
+    return {
+        "resid_hist": h,
+        "resid_bucket_edges": bucket_edges(h.shape[1]),
+        "resid_p50": _hist_percentile(h, 0.50),
+        "resid_p99": _hist_percentile(h, 0.99),
+        "promo_attempts": att_p.astype(np.int64),
+        "promo_success": suc_p.astype(np.int64),
+        "promo_success_ratio": np.where(att_p > 0, suc_p / np.maximum(att_p, 1), 1.0),
+        "demo_attempts": att_d.astype(np.int64),
+        "demo_success": suc_d.astype(np.int64),
+        "demo_success_ratio": np.where(att_d > 0, suc_d / np.maximum(att_d, 1), 1.0),
+        "contended_frac": np.asarray(stats.contended_ticks) / ticks,
+        "throttled_frac": np.asarray(stats.throttled_ticks) / ticks,
+        "below_protection_frac": np.asarray(stats.below_protection_ticks) / ticks,
+        "thrash_rate": np.asarray(stats.thrash_rate),
+        "promo_rate": np.asarray(stats.promo_rate),
+        "demo_rate": np.asarray(stats.demo_rate),
+        "ticks": ticks,
+    }
+
+
+def format_tier_stat(stat: dict, summary: dict, tenant: int) -> str:
+    """One tenant's cgroup-file-style report line block (§IV-C)."""
+    lines = []
+    for key in ("local_usage_bytes", "cxl_usage_bytes", "pgpromote",
+                "pgdemote", "pgpromote_attempted", "pgreclaim", "pgalloc",
+                "thrash_events", "sync_demotions"):
+        if key in stat:
+            lines.append(f"  {key} {int(np.asarray(stat[key])[tenant])}")
+    lines.append(f"  promo_success_ratio "
+                 f"{summary['promo_success_ratio'][tenant]:.3f}")
+    lines.append(f"  resident_time_p50_ticks {summary['resid_p50'][tenant]:.0f}")
+    lines.append(f"  resident_time_p99_ticks {summary['resid_p99'][tenant]:.0f}")
+    lines.append(f"  thrash_rate_windowed {summary['thrash_rate'][tenant]:.2f}")
+    lines.append(f"  contended_frac {summary['contended_frac'][tenant]:.3f}")
+    lines.append(f"  throttled_frac {summary['throttled_frac'][tenant]:.3f}")
+    lines.append(f"  below_protection_frac "
+                 f"{summary['below_protection_frac'][tenant]:.3f}")
+    return "\n".join(lines)

@@ -1,0 +1,92 @@
+"""Fixed-capacity in-graph migration event ring buffer.
+
+Every promotion/demotion executed by the engine tick or the KV tiering step
+appends a (tick, tenant, page, direction, hotness-at-move) record. The ring
+is a pytree of parallel arrays updated with a cumsum/scatter (``mode="drop"``
+discards unselected lanes), so recording is branch-free and works under jit,
+scan and vmap; the newest ``capacity`` events survive, older ones are
+overwritten — exactly a kernel trace ring. ``decode_ring`` converts the
+on-device ring to structured numpy records host-side.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DIR_PROMOTE = 0
+DIR_DEMOTE = 1
+
+EVENT_DTYPE = np.dtype([("tick", np.int32), ("tenant", np.int32),
+                        ("page", np.int32), ("direction", np.int32),
+                        ("hotness", np.float32)])
+
+
+class MigrationRing(NamedTuple):
+    tick: jax.Array       # [C] int32, -1 = never written
+    tenant: jax.Array     # [C] int32
+    page: jax.Array       # [C] int32
+    direction: jax.Array  # [C] int32 (DIR_PROMOTE / DIR_DEMOTE)
+    hotness: jax.Array    # [C] f32 page hotness at the move
+    head: jax.Array       # scalar int32: total events ever recorded
+
+
+def init_ring(capacity: int) -> MigrationRing:
+    return MigrationRing(
+        tick=jnp.full((capacity,), -1, jnp.int32),
+        tenant=jnp.zeros((capacity,), jnp.int32),
+        page=jnp.zeros((capacity,), jnp.int32),
+        direction=jnp.zeros((capacity,), jnp.int32),
+        hotness=jnp.zeros((capacity,), jnp.float32),
+        head=jnp.zeros((), jnp.int32))
+
+
+def ring_record(ring: MigrationRing, mask: jax.Array, pages: jax.Array,
+                tenants: jax.Array, hotness: jax.Array, direction: int,
+                t: jax.Array) -> MigrationRing:
+    """Append all events where ``mask`` is set. mask/pages/tenants/hotness
+    share one shape (any rank); events land oldest-first at head..head+n."""
+    C = ring.tick.shape[0]
+    m = mask.reshape(-1)
+    offs = jnp.cumsum(m.astype(jnp.int32)) - 1          # slot among selected
+    total = offs[-1] + 1 if m.shape[0] else jnp.zeros((), jnp.int32)
+    # if one call selects more than C events, keep only the newest C — the
+    # window of C consecutive offsets keeps scatter indices unique (a
+    # duplicate-index set has an unspecified winner in XLA)
+    keep = m & (offs >= total - C)
+    idx = jnp.where(keep, (ring.head + offs) % C, C)    # C = OOB -> dropped
+    tickv = jnp.broadcast_to(t, m.shape).astype(jnp.int32)
+    dirv = jnp.full(m.shape, direction, jnp.int32)
+    return MigrationRing(
+        tick=ring.tick.at[idx].set(tickv, mode="drop"),
+        tenant=ring.tenant.at[idx].set(
+            tenants.reshape(-1).astype(jnp.int32), mode="drop"),
+        page=ring.page.at[idx].set(
+            pages.reshape(-1).astype(jnp.int32), mode="drop"),
+        direction=ring.direction.at[idx].set(dirv, mode="drop"),
+        hotness=ring.hotness.at[idx].set(
+            hotness.reshape(-1).astype(jnp.float32), mode="drop"),
+        head=ring.head + m.sum())
+
+
+def decode_ring(ring: MigrationRing) -> tuple[np.ndarray, int]:
+    """Host-side decode: (events, n_dropped). ``events`` is a structured
+    numpy array (EVENT_DTYPE) ordered oldest -> newest; ``n_dropped`` is how
+    many older events were overwritten by wraparound."""
+    C = int(np.asarray(ring.tick).shape[0])
+    head = int(ring.head)
+    n = min(head, C)
+    out = np.empty(n, EVENT_DTYPE)
+    if n == 0:
+        return out, 0
+    # oldest surviving event sits at head % C when the ring has wrapped
+    start = head % C if head > C else 0
+    order = (start + np.arange(n)) % C
+    out["tick"] = np.asarray(ring.tick)[order]
+    out["tenant"] = np.asarray(ring.tenant)[order]
+    out["page"] = np.asarray(ring.page)[order]
+    out["direction"] = np.asarray(ring.direction)[order]
+    out["hotness"] = np.asarray(ring.hotness)[order]
+    return out, max(head - C, 0)

@@ -5,5 +5,24 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+# One representative arch per family runs in the default suite; the
+# duplicate-family archs are `slow` (full sweep: pytest -m "").
+CORE_ARCHS = frozenset({
+    "llama32_1b",            # dense
+    "granite_moe_3b_a800m",  # moe
+    "mamba2_130m",           # ssm
+    "zamba2_7b",             # hybrid
+    "whisper_tiny",          # encdec
+    "llama32_vision_90b",    # vlm
+})
+
+
+def arch_params():
+    """ARCH_IDS with non-core archs marked slow, for parametrize sweeps."""
+    from repro.configs import ARCH_IDS
+    return [a if a in CORE_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+            for a in ARCH_IDS]

@@ -19,7 +19,8 @@ def _tol(dtype):
     (2, 2, 1, 64, 256, 64),      # decode-ish: short q, long kv
     (1, 4, 2, 256, 256, 48),     # non-128 head dim (pad path)
 ])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32, pytest.param(jnp.bfloat16, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
                                            (False, None)])
 def test_flash_attention(b, h, kh, sq, skv, d, dtype, causal, window):
@@ -42,7 +43,8 @@ def test_flash_attention(b, h, kh, sq, skv, d, dtype, causal, window):
     (3, 4, 4, 32, 8, 8, 4),
     (2, 16, 2, 64, 16, 16, 8),
 ])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32, pytest.param(jnp.bfloat16, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("window", [None, 40])
 def test_tiered_attention(b, h, kh, d, mf, ms, pt, dtype, window):
     from repro.kernels.tiered_attention.ops import tiered_attention
@@ -118,7 +120,8 @@ def test_migrate(l, b, msrc, mdst, pt, kh, d, dtype):
 # -------------------------------------------------------------- ssd scan ----
 @pytest.mark.parametrize("b,s,h,p,n,chunk", [
     (2, 64, 3, 16, 8, 16), (1, 128, 2, 32, 16, 32), (2, 32, 4, 8, 8, 8)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32, pytest.param(jnp.bfloat16, marks=pytest.mark.slow)])
 def test_ssd_scan(b, s, h, p, n, chunk, dtype):
     from repro.kernels.ssd_scan.ops import ssd_scan
     from repro.models.ssm import ssd_recurrent_ref

@@ -15,10 +15,12 @@ from repro.models.transformer import model_forward, model_specs
 from repro.optim.adamw import init_opt_state
 from repro.train.step import make_train_step
 
+from conftest import arch_params
+
 KEY = jax.random.PRNGKey(0)
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", arch_params())
 def test_forward_shapes_and_finite(arch):
     cfg = get_smoke_config(arch)
     params = init_params(KEY, model_specs(cfg))
@@ -30,7 +32,7 @@ def test_forward_shapes_and_finite(arch):
     assert bool(jnp.isfinite(aux))
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", arch_params())
 def test_train_step_decreases_loss_and_finite(arch):
     cfg = get_smoke_config(arch)
     tc = TrainConfig(learning_rate=5e-3, warmup_steps=1, total_steps=20,

@@ -7,12 +7,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, get_smoke_config
+from repro.configs import get_smoke_config
 from repro.configs.base import TieringConfig
 from repro.models.params import init_params
 from repro.models.transformer import encode_frames, model_forward, model_specs
 from repro.serve.decode import (build_serve_step, compute_cross_kv,
                                 init_serve_state)
+
+from conftest import arch_params
 
 KEY = jax.random.PRNGKey(0)
 TCFG = TieringConfig(n_tenants=2, page_tokens=4, thrash_table_slots=64,
@@ -28,7 +30,7 @@ def _decode_all(cfg, params, state, toks, tcfg=TCFG):
     return jnp.stack(outs, axis=1), state
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", arch_params())
 def test_decode_matches_forward_with_migrations(arch):
     cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32",
                               param_dtype="float32")
