@@ -9,12 +9,20 @@ model. Modes select the policy:
   static     — tier fixed at allocation, no migration
 
 Page ownership is static (tenant i owns a fixed logical range); liveness and
-tier are dynamic. All per-tenant reductions are matmuls against the static
-[T, L] ownership one-hot.
+tier are dynamic.
+
+The tick is tenant-batched (core/select.py): per-tenant selection is one
+batched padded-row top_k (contiguous layouts) or one composite-key sort
+(arbitrary layouts), per-tenant reductions are cumsum/boundary-gathers or
+scatter-adds, and migration accounting runs over the compact [T, k]
+candidate stream — so trace time, jaxpr size and kernel count are all
+constant in T and one compiled tick serves any tenant count (T=64+,
+L=256k+ supported). ``impl="unrolled"`` rebuilds the seed engine
+(per-tenant top_k loops + [T, L] one-hot matmuls) for equivalence tests
+and as the scale benchmark's baseline.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Tuple
 
 import jax
@@ -23,12 +31,14 @@ import numpy as np
 
 from repro.configs.base import TieringConfig
 from repro.core import policy as P
+from repro.core import select as SEL
 from repro.core.state import (TIER_FAST, TIER_NONE, TIER_SLOW, Counters,
                               TenantPolicy, TierState, init_state, make_policy)
 from repro.obs import stats as OS
 from repro.obs import trace as OT
 
 MODES = ("equilibria", "tpp", "memtis", "static")
+IMPLS = ("batched", "unrolled")
 
 
 class TickOutput(NamedTuple):
@@ -44,20 +54,6 @@ class TickOutput(NamedTuple):
     attempted_promotions: jax.Array  # [T] candidates this tick (obs)
 
 
-def _select_per_tenant(score: jax.Array, masks: jax.Array, quotas: jax.Array,
-                       k_max: int) -> jax.Array:
-    """Select up to quotas[t] highest-score pages per tenant. masks: [T, L]."""
-    T, L = masks.shape
-    sel = jnp.zeros((L,), jnp.int32)
-    k = min(k_max, L)
-    for ti in range(T):
-        s = jnp.where(masks[ti], score, -jnp.inf)
-        vals, idx = jax.lax.top_k(s, k)
-        take = (jnp.arange(k) < quotas[ti]) & jnp.isfinite(vals)
-        sel = sel.at[idx].max(take.astype(jnp.int32))
-    return sel.astype(bool)
-
-
 def _select_global(score: jax.Array, mask: jax.Array, quota: jax.Array,
                    k_max: int) -> jax.Array:
     L = score.shape[0]
@@ -68,33 +64,111 @@ def _select_global(score: jax.Array, mask: jax.Array, quota: jax.Array,
     return jnp.zeros((L,), bool).at[idx].set(take)
 
 
-def _masked_rank(mask: jax.Array) -> jax.Array:
-    """Rank of each True element among True elements (by index order)."""
-    return jnp.cumsum(mask.astype(jnp.int32)) - mask.astype(jnp.int32)
-
-
 def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
-              k_max: int = 256):
-    """Build the jittable tick. owner: [L] int (static tenant of each page)."""
+              k_max: int = 256, impl: str = "batched"):
+    """Build the jittable tick. owner: [L] int (static tenant of each page).
+
+    impl: "batched" (segmented selection + scatter-add reductions, trace-time
+    constant in T) or "unrolled" (the seed engine: per-tenant top_k loops and
+    [T, L] one-hot matmuls — kept for equivalence tests and benchmarks).
+    """
     assert mode in MODES, mode
+    assert impl in IMPLS, impl
     T = cfg.n_tenants
     L = owner.shape[0]
     owner_j = jnp.asarray(owner, jnp.int32)
-    owner_oh = jnp.asarray(
-        (owner[None, :] == np.arange(T)[:, None]).astype(np.float32))
-    owner_oh_i = owner_oh.astype(jnp.int32)
     n_fast = cfg.n_fast_pages
     wmark = max(int(np.ceil(n_fast * cfg.watermark_free)), 1)
     pol: TenantPolicy = make_policy(cfg)
+
+    if impl == "unrolled":
+        owner_oh = jnp.asarray(
+            (owner[None, :] == np.arange(T)[:, None]).astype(np.float32))
+        owner_oh_i = owner_oh.astype(jnp.int32)
+
+        def by_tenant(x: jax.Array) -> jax.Array:
+            m = owner_oh if jnp.issubdtype(x.dtype, jnp.floating) else owner_oh_i
+            return m @ x
+
+        def select_pt(score, active, quotas):
+            mask = SEL.select_top_quota_unrolled(
+                score, owner_oh.astype(bool) & active[None], quotas, k_max)
+            return SEL.Selection(mask, None, None, None)
+
+        def alloc_ranks(new):
+            return SEL.allocation_ranks_unrolled(new, owner_j, T)
+    elif (layout := SEL.plan_layout(owner, T)) is not None:
+        # contiguous ownership (build_trace's layout): padded-row top_k and
+        # cumsum/boundary-gather reductions — the fastest path by far
+        def by_tenant(x: jax.Array) -> jax.Array:
+            return SEL.by_tenant_contiguous(x, layout)
+
+        def select_pt(score, active, quotas):
+            return SEL.select_top_quota_rows(score, active, quotas, layout,
+                                             k_max)
+
+        def alloc_ranks(new):
+            return SEL.allocation_ranks_contiguous(new, layout)
+    else:
+        # arbitrary owner permutation: composite-sort ranks + scatter-adds
+        def by_tenant(x: jax.Array) -> jax.Array:
+            return SEL.by_tenant_scatter(x, owner_j, T)
+
+        def select_pt(score, active, quotas):
+            mask = SEL.select_top_quota(score, owner_j, active, quotas, T,
+                                        k_max)
+            return SEL.Selection(mask, None, None, None)
+
+        def alloc_ranks(new):
+            return SEL.allocation_ranks(new, owner_j, T)
 
     def tick(state: TierState, inputs) -> Tuple[TierState, TickOutput]:
         accesses, alive = inputs
         t = state.t
         tier = state.tier.astype(jnp.int32)
+        page_ids = jnp.arange(L, dtype=jnp.int32)
+
+        # Migration accounting (thrash table, residency histogram, event
+        # ring) runs over the selection's compact [T, k] candidate stream
+        # when available (contiguous batched path) — scatters over T*k lanes
+        # instead of L — and falls back to the full [L] masks otherwise.
+        def sel_counts(sel: SEL.Selection) -> jax.Array:
+            if sel.counts is not None:
+                return sel.counts
+            return by_tenant(sel.mask.astype(jnp.int32))
+
+        def sel_tenants(sel: SEL.Selection) -> jax.Array:
+            return jnp.broadcast_to(
+                jnp.arange(T, dtype=jnp.int32)[:, None], sel.take.shape)
+
+        def sel_thrash(tbl, sel: SEL.Selection) -> jax.Array:
+            if sel.pages is None:
+                return by_tenant(P.thrash_hits(
+                    tbl, page_ids, sel.mask, t, cfg).astype(jnp.int32))
+            hits = P.thrash_hits(tbl, sel.pages, sel.take, t, cfg)
+            return hits.sum(axis=1).astype(jnp.int32)
+
+        def sel_record_promos(tbl, sel: SEL.Selection):
+            if sel.pages is None:
+                return P.thrash_record_promotions(tbl, page_ids, sel.mask, t)
+            return P.thrash_record_promotions(tbl, sel.pages, sel.take, t)
+
+        def sel_exits(st, sel: SEL.Selection):
+            if sel.pages is None:
+                return OS.record_fast_exits(st, sel.mask, owner_j, t)
+            return OS.record_fast_exits_at(st, sel.pages, sel.take,
+                                           sel_tenants(sel), t)
+
+        def sel_ring(rg, sel: SEL.Selection, hotv, direction):
+            if sel.pages is None:
+                return OT.ring_record(rg, sel.mask, page_ids, owner_j, hotv,
+                                      direction, t)
+            return OT.ring_record(rg, sel.take, sel.pages, sel_tenants(sel),
+                                  hotv[sel.pages], direction, t)
 
         # ---- 1. free dead pages -------------------------------------------
         died = (tier != TIER_NONE) & ~alive
-        freed_t = owner_oh_i @ died.astype(jnp.int32)
+        freed_t = by_tenant(died.astype(jnp.int32))
         # fast-resident pages that die end their residency here (obs)
         stats = OS.record_fast_exits(state.stats, died & (tier == TIER_FAST),
                                      owner_j, t)
@@ -102,23 +176,20 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
 
         # ---- 2. allocate new pages ----------------------------------------
         new = alive & (tier == TIER_NONE)
-        fast_usage = owner_oh_i @ (tier == TIER_FAST).astype(jnp.int32)
+        fast_usage = by_tenant((tier == TIER_FAST).astype(jnp.int32))
         fast_free = n_fast - fast_usage.sum()
         # per-tenant upper bound gating of *fast* placement
         if mode in ("equilibria", "memtis") and cfg.enable_upper_bound:
-            ranks = jnp.zeros((L,), jnp.int32)
-            for ti in range(T):
-                m = new & (owner_j == ti)
-                ranks = jnp.where(m, _masked_rank(m), ranks)
+            ranks = alloc_ranks(new)
             bound = pol.upper_bound[owner_j]
             under_bound = (bound == 0) | (fast_usage[owner_j] + ranks < bound)
         else:
             under_bound = jnp.ones((L,), bool)
         elig = new & under_bound
-        grank = _masked_rank(elig)
+        grank = SEL.masked_rank(elig)
         go_fast = elig & (grank < jnp.maximum(fast_free - wmark, 0))
         tier = jnp.where(go_fast, TIER_FAST, jnp.where(new, TIER_SLOW, tier))
-        alloc_t = owner_oh_i @ new.astype(jnp.int32)
+        alloc_t = by_tenant(new.astype(jnp.int32))
         stats = OS.record_fast_entries(stats, go_fast, t)
 
         # ---- 3. hotness / recency -----------------------------------------
@@ -129,10 +200,10 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
         # Local memory is contended when free space cannot absorb both the
         # watermark and the pending promotion demand (kswapd-style: promotion
         # pressure drives background demotion, §IV-D).
-        fast_usage = owner_oh_i @ (tier == TIER_FAST).astype(jnp.int32)
+        fast_usage = by_tenant((tier == TIER_FAST).astype(jnp.int32))
         fast_free = n_fast - fast_usage.sum()
         cand_pre = (tier == TIER_SLOW) & (hot >= cfg.promo_hot_threshold) & alive
-        demand_t = jnp.minimum(owner_oh_i @ cand_pre.astype(jnp.int32), k_max)
+        demand_t = jnp.minimum(by_tenant(cand_pre.astype(jnp.int32)), k_max)
         promo_demand = jnp.minimum(demand_t.sum(), k_max)
         contended = fast_free < wmark + promo_demand
 
@@ -169,21 +240,20 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
         cold_score = age * 1e3 - hot          # LRU order, hotness tiebreak
         fast_mask = tier == TIER_FAST
         if mode == "tpp":
-            demoted = _select_global(cold_score, fast_mask, quota, k_max * T)
+            dsel = SEL.Selection(
+                _select_global(cold_score, fast_mask, quota, k_max * T),
+                None, None, None)
         elif mode == "static":
-            demoted = jnp.zeros((L,), bool)
+            dsel = SEL.Selection(jnp.zeros((L,), bool), None, None, None)
         else:
-            masks = owner_oh.astype(bool) & fast_mask[None]
-            demoted = _select_per_tenant(cold_score, masks, quota, k_max)
-        demo_t = owner_oh_i @ demoted.astype(jnp.int32)
+            dsel = select_pt(cold_score, fast_mask, quota)
+        demoted = dsel.mask
+        demo_t = sel_counts(dsel)
 
         # thrash detection on demotions (§IV-F)
-        page_ids = jnp.arange(L, dtype=jnp.int32)
-        thrash_new = P.thrash_check_demotions(
-            state.table, page_ids, demoted, owner_j, t, cfg, T)
-        stats = OS.record_fast_exits(stats, demoted, owner_j, t)
-        ring = OT.ring_record(state.ring, demoted, page_ids, owner_j, hot,
-                              OT.DIR_DEMOTE, t)
+        thrash_new = sel_thrash(state.table, dsel)
+        stats = sel_exits(stats, dsel)
+        ring = sel_ring(state.ring, dsel, hot, OT.DIR_DEMOTE)
         tier = jnp.where(demoted, TIER_SLOW, tier)
         fast_usage = fast_usage - demo_t
         fast_free = n_fast - fast_usage.sum()
@@ -191,7 +261,7 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
         # ---- 6. promotion ---------------------------------------------------
         # just-demoted pages are not promotion candidates this tick
         cand = (tier == TIER_SLOW) & (hot >= cfg.promo_hot_threshold) & alive & ~demoted
-        cand_t = owner_oh_i @ cand.astype(jnp.int32)
+        cand_t = by_tenant(cand.astype(jnp.int32))
         throttled = jnp.zeros((T,), bool)
         if mode == "equilibria":
             p_base = jnp.full((T,), float(cfg.p_base), jnp.float32)
@@ -221,18 +291,19 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
         p_quota = jnp.floor(p_quota.astype(jnp.float32) * scale).astype(jnp.int32)
 
         if mode == "tpp":
-            promoted = _select_global(hot, cand, p_quota.sum(), k_max * T)
+            psel = SEL.Selection(
+                _select_global(hot, cand, p_quota.sum(), k_max * T),
+                None, None, None)
         elif mode == "static":
-            promoted = jnp.zeros((L,), bool)
+            psel = SEL.Selection(jnp.zeros((L,), bool), None, None, None)
         else:
-            masks = owner_oh.astype(bool) & cand[None]
-            promoted = _select_per_tenant(hot, masks, p_quota, k_max)
-        promo_t = owner_oh_i @ promoted.astype(jnp.int32)
+            psel = select_pt(hot, cand, p_quota)
+        promoted = psel.mask
+        promo_t = sel_counts(psel)
         tier = jnp.where(promoted, TIER_FAST, tier)
-        table = P.thrash_record_promotions(state.table, page_ids, promoted, t)
+        table = sel_record_promos(state.table, psel)
         stats = OS.record_fast_entries(stats, promoted, t)
-        ring = OT.ring_record(ring, promoted, page_ids, owner_j, hot,
-                              OT.DIR_PROMOTE, t)
+        ring = sel_ring(ring, psel, hot, OT.DIR_PROMOTE)
 
         # ---- 6b. synchronous upper-bound demotion (allocation path, §IV-D):
         # promotions that pushed a tenant past its bound are shed in the same
@@ -240,22 +311,20 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
         # table immediately when they evict recently-promoted pages.
         sync2_t = jnp.zeros((T,), jnp.int32)
         if mode in ("equilibria", "memtis") and cfg.enable_upper_bound:
-            fast_usage2 = owner_oh_i @ (tier == TIER_FAST).astype(jnp.int32)
+            fast_usage2 = by_tenant((tier == TIER_FAST).astype(jnp.int32))
             over2 = jnp.where(pol.upper_bound > 0,
                               jnp.maximum(fast_usage2 - pol.upper_bound, 0), 0)
             over2 = jnp.minimum(over2, k_max)
             age2 = (t - last_access).astype(jnp.float32)
             cold2 = age2 * 1e3 - hot
-            masks2 = owner_oh.astype(bool) & (tier == TIER_FAST)[None]
-            sync_dem = _select_per_tenant(cold2, masks2, over2, k_max)
-            thr2 = P.thrash_check_demotions(table, page_ids, sync_dem,
-                                            owner_j, t, cfg, T)
+            ssel = select_pt(cold2, tier == TIER_FAST, over2)
+            sync_dem = ssel.mask
+            thr2 = sel_thrash(table, ssel)
             thrash_new = thrash_new + thr2
-            stats = OS.record_fast_exits(stats, sync_dem, owner_j, t)
-            ring = OT.ring_record(ring, sync_dem, page_ids, owner_j, hot,
-                                  OT.DIR_DEMOTE, t)
+            stats = sel_exits(stats, ssel)
+            ring = sel_ring(ring, ssel, hot, OT.DIR_DEMOTE)
             tier = jnp.where(sync_dem, TIER_SLOW, tier)
-            sync2_t = owner_oh_i @ sync_dem.astype(jnp.int32)
+            sync2_t = sel_counts(ssel)
             demo_t = demo_t + sync2_t
 
         # ---- 7. counters ----------------------------------------------------
@@ -270,8 +339,8 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
             sync_demotions=c.sync_demotions
             + jnp.minimum(sync_quota, demo_t) + sync2_t,
         )
-        fast_usage = owner_oh_i @ (tier == TIER_FAST).astype(jnp.int32)
-        slow_usage = owner_oh_i @ (tier == TIER_SLOW).astype(jnp.int32)
+        fast_usage = by_tenant((tier == TIER_FAST).astype(jnp.int32))
+        slow_usage = by_tenant((tier == TIER_SLOW).astype(jnp.int32))
 
         # ---- 7b. observability (obs/, §IV-C) --------------------------------
         # tpp's quota is one global scan budget; split it evenly so
@@ -294,6 +363,7 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
             counters=counters, promo_scale=state.promo_scale,
             thrash_prev=state.thrash_prev, usage_prev=state.usage_prev,
             freed_since=state.freed_since + freed_t, steady=state.steady,
+            mitigated_prev=state.mitigated_prev,
             table=table, stats=stats, ring=ring, t=t + 1)
 
         # ---- 8. periodic controller (§IV-F) ---------------------------------
@@ -302,15 +372,16 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
             return s._replace(promo_scale=out.promo_scale, steady=out.steady,
                               table=out.table, thrash_prev=out.thrash_prev,
                               usage_prev=out.usage_prev,
-                              freed_since=out.freed_since)
+                              freed_since=out.freed_since,
+                              mitigated_prev=out.mitigated_prev)
 
         new_state = jax.lax.cond(
             (t + 1) % cfg.controller_period == 0, run_ctrl, lambda s: s,
             new_state)
 
         # ---- 9. perf model ---------------------------------------------------
-        a_fast = owner_oh @ (accesses * (tier == TIER_FAST))
-        a_slow = owner_oh @ (accesses * (tier == TIER_SLOW))
+        a_fast = by_tenant(accesses * (tier == TIER_FAST))
+        a_slow = by_tenant(accesses * (tier == TIER_SLOW))
         a_tot = a_fast + a_slow
         migrations = (promo_t + demo_t).sum().astype(jnp.float32)
         lat = jnp.where(
@@ -333,9 +404,9 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
 
 def run_engine(cfg: TieringConfig, owner: np.ndarray, accesses: np.ndarray,
                alive: np.ndarray, mode: str = "equilibria",
-               k_max: int = 256) -> TickOutput:
+               k_max: int = 256, impl: str = "batched") -> TickOutput:
     """Run the full trace (scan over ticks). accesses/alive: [ticks, L]."""
-    tick = make_tick(cfg, owner, mode, k_max)
+    tick = make_tick(cfg, owner, mode, k_max, impl=impl)
     state = init_state(cfg, owner.shape[0])
 
     @jax.jit

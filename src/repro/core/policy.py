@@ -38,8 +38,16 @@ def upper_bound_demotion(fast_usage: jax.Array, policy: TenantPolicy) -> jax.Arr
     path); any overage past the bound is additionally forced (sync path).
     Returns [T] pages that must be demoted regardless of global pressure."""
     bound = policy.upper_bound
-    near = fast_usage >= (0.95 * bound).astype(jnp.int32)
-    gentle = jnp.maximum(fast_usage - (0.9 * bound).astype(jnp.int32), 0)
+    # thresholds in real arithmetic, not truncation: "near" means
+    # usage >= 0.95*bound, i.e. usage >= ceil(0.95*bound) for integer pages
+    # (truncating made small bounds trigger early: bound=10 demoted at 9);
+    # the gentle target is the nearest integer to 0.9*bound. The small
+    # epsilon absorbs f32 product dust around exact integers.
+    bf = bound.astype(jnp.float32)
+    near_thr = jnp.ceil(0.95 * bf - 1e-4).astype(jnp.int32)
+    target = jnp.round(0.9 * bf).astype(jnp.int32)
+    near = fast_usage >= near_thr
+    gentle = jnp.maximum(fast_usage - target, 0)
     over = jnp.maximum(fast_usage - bound, 0)
     quota = jnp.where(near, jnp.maximum(gentle, over), over)
     return jnp.where(bound > 0, quota, 0).astype(jnp.int32)
@@ -51,14 +59,18 @@ def eq2_promotion_scan(p_base: jax.Array, fast_usage: jax.Array,
     """Paper Eq. 2: p_scan = p_base * clip((n_prot/n_cgroup)^4, 1/16, 1).
 
     A tenant is "promotion throttled" (§IV-E) when either
-      (a) usage > lower protection AND local memory is fully utilized, or
-      (b) usage is approaching (>=95%) or exceeds its upper bound.
+      (a) a lower protection is configured, usage exceeds it, AND local
+          memory is fully utilized, or
+      (b) usage is approaching (>=95%) or exceeds its configured upper bound.
+    Tenants with neither knob set (prot=0, bound=0) are never throttled —
+    there is no configured fair share to be over, and the clip factor would
+    be 1.0 anyway (flagging them only polluted obs throttle occupancy).
     Returns (p_scan [T] f32, throttled [T] bool).
     """
     usage = fast_usage.astype(jnp.float32)
     prot = policy.lower_protection.astype(jnp.float32)
     bound = policy.upper_bound.astype(jnp.float32)
-    over_prot = (usage > prot) & contended
+    over_prot = (prot > 0) & (usage > prot) & contended
     near_bound = (bound > 0) & (usage >= 0.95 * bound)
     throttled = over_prot | near_bound
     # reference share for the ratio: the protection; when only the bound
@@ -73,7 +85,15 @@ def eq2_promotion_scan(p_base: jax.Array, fast_usage: jax.Array,
 # ------------------------------------------------------- thrash tracking ----
 def thrash_record_promotions(table: ThrashTable, promoted_pages: jax.Array,
                              promoted_mask: jax.Array, t: jax.Array) -> ThrashTable:
-    """Insert promoted pages into the direct-mapped table (slot = page % S)."""
+    """Insert promoted pages into the direct-mapped table (slot = page % S).
+
+    Two pages promoted in the SAME call can collide on a slot; the surviving
+    entry is whichever XLA's scatter keeps (unspecified, and dependent on
+    lane order — the batched engine feeds [T, k] lanes, the unrolled one
+    [L]). That is acceptable: collisions are the paper's 'sampling', and it
+    is the one place the batched/unrolled engines may diverge (the
+    equivalence suite uses page counts below the slot count, where no
+    same-tick collision is possible)."""
     slots = table.page.shape[0]
     idx = promoted_pages % slots
     idx = jnp.where(promoted_mask, idx, slots)  # dropped writes -> OOB
@@ -83,19 +103,27 @@ def thrash_record_promotions(table: ThrashTable, promoted_pages: jax.Array,
     return ThrashTable(page=page, tick=tick)
 
 
-def thrash_check_demotions(table: ThrashTable, demoted_pages: jax.Array,
-                           demoted_mask: jax.Array, owners: jax.Array,
-                           t: jax.Array, cfg: TieringConfig,
-                           n_tenants: int) -> jax.Array:
-    """Count demotions of pages promoted < t_resident ago. Returns [T] int32."""
+def thrash_hits(table: ThrashTable, demoted_pages: jax.Array,
+                demoted_mask: jax.Array, t: jax.Array,
+                cfg: TieringConfig) -> jax.Array:
+    """Per-lane thrash flag: demoted page was promoted < t_resident ago."""
     slots = table.page.shape[0]
     idx = demoted_pages % slots
     hit = (table.page[idx] == demoted_pages) & demoted_mask
     recent = (t - table.tick[idx]) < cfg.t_resident
-    is_thrash = hit & recent
-    oh = jax.nn.one_hot(jnp.where(is_thrash, owners, n_tenants),
-                        n_tenants + 1, dtype=jnp.int32)[:, :n_tenants]
-    return oh.sum(axis=0)
+    return hit & recent
+
+
+def thrash_check_demotions(table: ThrashTable, demoted_pages: jax.Array,
+                           demoted_mask: jax.Array, owners: jax.Array,
+                           t: jax.Array, cfg: TieringConfig,
+                           n_tenants: int) -> jax.Array:
+    """Count demotions of pages promoted < t_resident ago. Returns [T] int32.
+    Scatter-add, not a [L, T] one-hot: shape-polymorphic in both L and T
+    (the one-hot was an O(L*T) hot-path cost at scale)."""
+    is_thrash = thrash_hits(table, demoted_pages, demoted_mask, t, cfg)
+    return jnp.zeros((n_tenants,), jnp.int32).at[owners].add(
+        is_thrash.astype(jnp.int32))
 
 
 class ControllerOut(NamedTuple):
@@ -105,13 +133,21 @@ class ControllerOut(NamedTuple):
     thrash_prev: jax.Array
     usage_prev: jax.Array
     freed_since: jax.Array
+    mitigated_prev: jax.Array
 
 
 def thrash_controller(state: TierState, usage_total: jax.Array,
                       cfg: TieringConfig) -> ControllerOut:
     """Periodic controller (§IV-F, every `controller_period` ticks):
     steady-state detection, then halve/double promotion rates of thrashing
-    steady-state tenants; clear the table to start the next window."""
+    steady-state tenants; clear the table to start the next window.
+
+    Recovery (doubling back toward 1.0) requires a quiet window that was
+    *not* the window the mitigation itself fired in: a freshly-halved tenant
+    always looks quiet for one window — doubling on that evidence bounced a
+    mitigated tenant straight back into thrashing every other period. The
+    ``mitigated_prev`` flag makes recovery wait for a clean window first, so
+    the scale trajectory after mitigation is monotone."""
     thrash_rate = (state.counters.thrash_events - state.thrash_prev).astype(jnp.float32)
     # steady state: small rate-of-change of active pages AND small free rate
     u = usage_total.astype(jnp.float32)
@@ -123,7 +159,7 @@ def thrash_controller(state: TierState, usage_total: jax.Array,
 
     thrashing = thrash_rate > cfg.r_thrashing
     mitigate = steady & thrashing if cfg.enable_thrash_mitigation else jnp.zeros_like(steady)
-    recover = ~thrashing
+    recover = ~thrashing & ~state.mitigated_prev
     scale = state.promo_scale
     scale = jnp.where(mitigate, jnp.maximum(scale * 0.5, 1.0 / 64.0), scale)
     scale = jnp.where(recover, jnp.minimum(scale * 2.0, 1.0), scale)
@@ -135,4 +171,5 @@ def thrash_controller(state: TierState, usage_total: jax.Array,
         promo_scale=scale, steady=steady, table=cleared,
         thrash_prev=state.counters.thrash_events,
         usage_prev=usage_total,
-        freed_since=jnp.zeros_like(state.freed_since))
+        freed_since=jnp.zeros_like(state.freed_since),
+        mitigated_prev=mitigate)

@@ -9,13 +9,14 @@ Fig. 2: 252ns CXL vs ~100ns local, ~0.1 bandwidth ratio).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.configs.base import TieringConfig
 from repro.core.engine import TickOutput, run_engine
-from repro.core.workloads import TenantWorkload, build_trace
+from repro.core.workloads import (TenantWorkload, build_trace,
+                                  stacked_heterogeneous, suggest_policy)
 from repro.obs.pathology import Pathology, detect_all
 from repro.obs.stats import stats_summary
 from repro.obs.trace import decode_ring
@@ -73,11 +74,12 @@ class SimResult:
 
 
 def simulate(cfg: TieringConfig, tenants: List[TenantWorkload], ticks: int,
-             mode: str = "equilibria", k_max: int = 256) -> SimResult:
+             mode: str = "equilibria", k_max: int = 256,
+             impl: str = "batched") -> SimResult:
     owner, accesses, alive = build_trace(tenants, ticks)
     cfg = cfg.with_(n_tenants=len(tenants))
     final, outs = run_engine(cfg, owner, accesses, alive, mode=mode,
-                             k_max=k_max)
+                             k_max=k_max, impl=impl)
     events, dropped = decode_ring(final.ring)
     return SimResult(
         mode=mode,
@@ -100,3 +102,33 @@ def simulate(cfg: TieringConfig, tenants: List[TenantWorkload], ticks: int,
 def compare_modes(cfg: TieringConfig, tenants: List[TenantWorkload], ticks: int,
                   modes=("equilibria", "tpp")) -> Dict[str, SimResult]:
     return {m: simulate(cfg, tenants, ticks, mode=m) for m in modes}
+
+
+# ---------------------------------------------------------------- presets ----
+def _stacked(n_tenants: int) -> Tuple[TieringConfig, List[TenantWorkload]]:
+    """Stacked-heterogeneous host: n heterogeneous cgroups (cache/web/CI/
+    stream/bursty), fast tier sized to ~55% of the summed footprint, per-
+    tenant policy derived from workload shape (``suggest_policy``)."""
+    tenants = stacked_heterogeneous(n_tenants)
+    prot, bound = suggest_policy(tenants)
+    total = sum(w.footprint for w in tenants)
+    fast = (int(total * 0.55) // 64) * 64
+    cfg = TieringConfig(n_tenants=n_tenants, n_fast_pages=fast,
+                        n_slow_pages=total, lower_protection=prot,
+                        upper_bound=bound)
+    return cfg, tenants
+
+
+PRESETS: Dict[str, Callable[[], Tuple[TieringConfig, List[TenantWorkload]]]] = {
+    "stacked16": lambda: _stacked(16),
+    "stacked64": lambda: _stacked(64),
+}
+
+
+def simulate_preset(name: str, ticks: int = 300, mode: str = "equilibria",
+                    k_max: int = 128, **cfg_overrides) -> SimResult:
+    """Run a named scenario preset (see ``PRESETS``)."""
+    cfg, tenants = PRESETS[name]()
+    if cfg_overrides:
+        cfg = cfg.with_(**cfg_overrides)
+    return simulate(cfg, tenants, ticks, mode=mode, k_max=k_max)

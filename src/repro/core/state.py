@@ -62,6 +62,7 @@ class TierState(NamedTuple):
     usage_prev: jax.Array         # int32: total usage at last controller run
     freed_since: jax.Array        # int32: pages freed since last controller run
     steady: jax.Array             # bool: steady-state flag (set by controller)
+    mitigated_prev: jax.Array     # bool: mitigation fired at last controller run
     table: ThrashTable
     # observability (obs/, §IV-C): in-graph stats + migration event ring
     stats: TierStats
@@ -86,6 +87,7 @@ def init_state(cfg: TieringConfig, n_pages: int) -> TierState:
         usage_prev=jnp.zeros((T,), jnp.int32),
         freed_since=jnp.zeros((T,), jnp.int32),
         steady=jnp.zeros((T,), bool),
+        mitigated_prev=jnp.zeros((T,), bool),
         table=ThrashTable(page=jnp.full((cfg.thrash_table_slots,), -1, jnp.int32),
                           tick=jnp.zeros((cfg.thrash_table_slots,), jnp.int32)),
         stats=init_stats(T, (n_pages,), cfg.obs_resid_buckets),

@@ -145,3 +145,49 @@ def spark_like(footprint: int, arrival: int = 0) -> TenantWorkload:
     return TenantWorkload(footprint=footprint, arrival=arrival, pattern="bursty",
                           phase_len=30, burst_low=0.25, hot_frac=0.3,
                           hot_rate=1.5, cold_rate=0.05, ramp=8)
+
+
+def stream_like(footprint: int, arrival: int = 0) -> TenantWorkload:
+    """Sequential scanner (ETL/media style): a hot window sweeping the
+    footprint — pages get hot once, then cool. Unlike ``thrasher`` the window
+    is modest, so a bounded fast share serves it without churn."""
+    return TenantWorkload(
+        footprint=footprint, arrival=arrival, pattern="stream",
+        stream_window=max(footprint // 8, 4),
+        stream_step=max(footprint // 32, 1), hot_rate=3.0, cold_rate=0.05)
+
+
+# ----------------------------------------------- stacked-host scenarios ----
+def stacked_heterogeneous(n_tenants: int = 16,
+                          base_footprint: int = 96) -> List[TenantWorkload]:
+    """Equilibria's target deployment (§V): many heterogeneous cgroups
+    stacked on one host. Cycles cache/web/CI/stream/bursty generators with
+    staggered arrivals and varied footprints; deterministic in n_tenants."""
+    kinds = (cache_like, web_like, ci_like, stream_like, spark_like)
+    out = []
+    for i in range(n_tenants):
+        make = kinds[i % len(kinds)]
+        footprint = base_footprint + 8 * ((i * 5) % 7)
+        arrival = 6 * (i % 5)
+        out.append(make(footprint, arrival=arrival))
+    return out
+
+
+def suggest_policy(tenants: List[TenantWorkload]
+                   ) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Derive per-tenant (lower_protection, upper_bound) from workload shape,
+    the way operators would from profiling (paper §IV-B / §V-D): protect the
+    stable hot set of hot/cold workloads, cap sweeping streamers, leave
+    bursty analytics unconfigured (they donate when idle)."""
+    prot, bound = [], []
+    for w in tenants:
+        if w.pattern == "hotcold":
+            prot.append(int(w.footprint * w.hot_frac * 0.8))
+            bound.append(0)
+        elif w.pattern == "stream":
+            prot.append(0)
+            bound.append(max(2 * w.stream_window, 16))
+        else:                      # bursty / uniform: no knobs configured
+            prot.append(0)
+            bound.append(0)
+    return tuple(prot), tuple(bound)

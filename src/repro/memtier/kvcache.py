@@ -55,6 +55,7 @@ class TieredKVCache(NamedTuple):
     promo_scale: jax.Array  # [T] f32
     thrash_prev: jax.Array  # [T] int32
     steady: jax.Array       # [T] bool
+    mitigated_prev: jax.Array  # [T] bool: mitigation fired at last controller run
     table: ThrashTable
     # observability (obs/, §IV-C): fast_since is per fast *slot* [B, Mf]
     stats: TierStats
@@ -132,6 +133,7 @@ def init_cache(cfg: ModelConfig, tcfg: TieringConfig, batch: int, seq: int,
         promo_scale=arr((T,), jnp.float32, fill=1),
         thrash_prev=z32((T,)),
         steady=arr((T,), bool),
+        mitigated_prev=arr((T,), bool),
         table=ThrashTable(page=z32((tcfg.thrash_table_slots,), fill=-1),
                           tick=z32((tcfg.thrash_table_slots,))),
         stats=stats, ring=ring,

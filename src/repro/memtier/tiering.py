@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.configs.base import TieringConfig
 from repro.core import policy as P
+from repro.core.select import select_top_quota
 from repro.core.state import Counters, TenantPolicy
 from repro.memtier.kvcache import TieredKVCache
 from repro.obs import stats as OS
@@ -27,17 +28,11 @@ def _per_tenant_seq_select(score: jax.Array, eligible: jax.Array,
                            tenant: jax.Array, quota: jax.Array, n_tenants: int,
                            k_per_tenant: int = 4) -> jax.Array:
     """Pick up to quota[t] sequences per tenant with the highest score.
-    score/eligible/tenant: [B]; quota: [T]. Returns selected [B] bool."""
+    score/eligible/tenant: [B]; quota: [T]. Returns selected [B] bool.
+    Tenant-batched (core/select.py): one sort of B, constant in T."""
     B = score.shape[0]
-    sel = jnp.zeros((B,), jnp.int32)
-    k = min(k_per_tenant, B)
-    for ti in range(n_tenants):
-        m = eligible & (tenant == ti)
-        s = jnp.where(m, score, -jnp.inf)
-        vals, idx = jax.lax.top_k(s, k)
-        take = (jnp.arange(k) < quota[ti]) & jnp.isfinite(vals)
-        sel = sel.at[idx].max(take.astype(jnp.int32))
-    return sel.astype(bool)
+    return select_top_quota(score, tenant, eligible, quota, n_tenants,
+                            min(k_per_tenant, B))
 
 
 def equilibria_kv_step(cache: TieredKVCache, fast_mass: jax.Array,
@@ -208,25 +203,28 @@ def equilibria_kv_step(cache: TieredKVCache, fast_mass: jax.Array,
     period = tcfg.controller_period
 
     def run_ctrl(args):
-        scale, table_in, prev = args
+        scale, table_in, prev, mit_prev = args
         rate = (counters.thrash_events - prev).astype(jnp.float32)
         # decode is steady-state by construction after warmup
         steady = jnp.full((T,), t > 2 * period, bool)
         thrashing = rate > tcfg.r_thrashing
         mitigate = steady & thrashing
+        # recovery needs a quiet window that isn't the mitigation's own
+        # (same guard as core/policy.thrash_controller)
         scale = jnp.where(mitigate, jnp.maximum(scale * 0.5, 1 / 64), scale)
-        scale = jnp.where(~thrashing, jnp.minimum(scale * 2.0, 1.0), scale)
+        scale = jnp.where(~thrashing & ~mit_prev,
+                          jnp.minimum(scale * 2.0, 1.0), scale)
         slots = table_in.page.shape[0]
         cleared = table_in._replace(page=jnp.full((slots,), -1, jnp.int32))
-        return scale, cleared, counters.thrash_events, steady
+        return scale, cleared, counters.thrash_events, steady, mitigate
 
     def no_ctrl(args):
-        scale, table_in, prev = args
-        return scale, table_in, prev, cache.steady
+        scale, table_in, prev, mit_prev = args
+        return scale, table_in, prev, cache.steady, mit_prev
 
-    promo_scale, table, thrash_prev, steady = jax.lax.cond(
+    promo_scale, table, thrash_prev, steady, mitigated_prev = jax.lax.cond(
         (t + 1) % period == 0, run_ctrl, no_ctrl,
-        (cache.promo_scale, table, cache.thrash_prev))
+        (cache.promo_scale, table, cache.thrash_prev, cache.mitigated_prev))
 
     return cache._replace(
         fast_k=fast_k, fast_v=fast_v, slow_k=slow_k, slow_v=slow_v,
@@ -234,5 +232,6 @@ def equilibria_kv_step(cache: TieredKVCache, fast_mass: jax.Array,
         fast_hot=fast_hot, slow_hot=slow_hot,
         page_tier=page_tier, page_idx=page_idx,
         counters=counters, promo_scale=promo_scale,
-        thrash_prev=thrash_prev, steady=steady, table=table,
+        thrash_prev=thrash_prev, steady=steady,
+        mitigated_prev=mitigated_prev, table=table,
         stats=stats, ring=ring, t=t + 1)

@@ -106,6 +106,25 @@ def record_fast_exits(stats: TierStats, exited: jax.Array,
         fast_since=jnp.where(exited, -1, stats.fast_since))
 
 
+def record_fast_exits_at(stats: TierStats, pages: jax.Array,
+                         exited: jax.Array, owners: jax.Array,
+                         t: jax.Array) -> TierStats:
+    """Compact variant of ``record_fast_exits`` for a 1-D ``fast_since``:
+    ``pages`` indexes into it, ``exited``/``owners`` share ``pages``' shape.
+    Lets callers that already hold a small candidate stream (e.g. the
+    engine's [T, k] selection output) pay scatters over T*k lanes, not L."""
+    L = stats.fast_since.shape[0]
+    fs = stats.fast_since[pages]
+    exited = exited & (fs >= 0)
+    bucket = residency_bucket(t - fs, stats.resid_hist.shape[1])
+    hist = stats.resid_hist.at[owners.reshape(-1), bucket.reshape(-1)].add(
+        exited.reshape(-1).astype(jnp.int32))
+    clear = jnp.where(exited, pages, L).reshape(-1)    # L = OOB -> dropped
+    return stats._replace(
+        resid_hist=hist,
+        fast_since=stats.fast_since.at[clear].set(-1, mode="drop"))
+
+
 def update_tick(stats: TierStats, *,
                 promo_attempts: jax.Array, promo_success: jax.Array,
                 demo_attempts: jax.Array, demo_success: jax.Array,

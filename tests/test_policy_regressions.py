@@ -1,0 +1,144 @@
+"""Regression tests for hot-path policy fixes:
+
+1. eq2_promotion_scan no longer flags unconfigured tenants (prot=0, bound=0)
+   as throttled — the clip factor was 1.0 but obs throttle occupancy read
+   ~100% under contention.
+2. upper_bound_demotion uses rounded thresholds — truncation made small
+   bounds trigger the gentle path early and overshoot the target.
+3. thrash_controller recovery waits out the mitigation's own quiet window —
+   doubling after a single quiet window bounced a mitigated tenant straight
+   back into thrashing each controller period.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TieringConfig
+from repro.core import policy as P
+from repro.core.simulator import simulate
+from repro.core.state import TenantPolicy, init_state
+from repro.core.workloads import microbenchmark
+
+CFG = TieringConfig()
+
+
+def _policy(prot, bound):
+    return TenantPolicy(jnp.asarray(prot, jnp.int32),
+                        jnp.asarray(bound, jnp.int32))
+
+
+# ---------------------------------------------------------------- eq2 ----
+class TestEq2UnconfiguredTenants:
+    def test_unconfigured_tenant_never_throttled(self):
+        pol = _policy([0, 0, 500], [0, 0, 0])
+        p_base = jnp.full((3,), 256.0)
+        usage = jnp.asarray([800, 1, 600], jnp.int32)
+        p, throttled = P.eq2_promotion_scan(p_base, usage, pol,
+                                            jnp.asarray(True), CFG)
+        # no protection and no bound -> not throttled, full scan rate
+        assert throttled.tolist() == [False, False, True]
+        np.testing.assert_allclose(np.asarray(p)[:2], [256.0, 256.0])
+
+    def test_bound_only_tenant_still_throttled_near_bound(self):
+        pol = _policy([0], [100])
+        p, throttled = P.eq2_promotion_scan(
+            jnp.array([256.0]), jnp.asarray([96], jnp.int32), pol,
+            jnp.asarray(False), CFG)
+        assert bool(throttled[0])          # (b): approaching its upper bound
+        assert float(p[0]) == 256.0        # factor 1.0 until over the bound
+        p2, throttled2 = P.eq2_promotion_scan(
+            jnp.array([256.0]), jnp.asarray([110], jnp.int32), pol,
+            jnp.asarray(False), CFG)
+        assert bool(throttled2[0])
+        assert float(p2[0]) < 256.0        # over the bound: ratio^4 bites
+
+    def test_obs_throttle_occupancy_clean_for_unconfigured_fleet(self):
+        # heavy contention, but nobody configured protections/bounds:
+        # throttled_frac must stay 0 (the obs misreport this PR fixes)
+        cfg = TieringConfig(n_tenants=2, n_fast_pages=256, n_slow_pages=512,
+                            lower_protection=(0, 0), upper_bound=(0, 0))
+        r = simulate(cfg, [microbenchmark(300), microbenchmark(300)], 80,
+                     mode="equilibria", k_max=64)
+        assert float(np.asarray(r.tier_stats["contended_frac"]).max()) > 0
+        np.testing.assert_array_equal(
+            np.asarray(r.tier_stats["throttled_frac"]), 0.0)
+
+
+# -------------------------------------------------- upper-bound rounding ----
+class TestUpperBoundRounding:
+    def _quota(self, usage, bound):
+        q = P.upper_bound_demotion(jnp.asarray([usage], jnp.int32),
+                                   _policy([0], [bound]))
+        return int(q[0])
+
+    def test_small_bound_no_early_trigger(self):
+        # bound=10: 95% is 9.5, so usage 9 must NOT trigger the gentle path
+        # (truncated thresholds fired at 9 and demoted toward 8)
+        assert self._quota(9, 10) == 0
+        # at the bound, demote gently down to round(0.9*10) = 9
+        assert self._quota(10, 10) == 1
+
+    def test_tiny_bound_never_demotes_below_bound_range(self):
+        for usage in range(0, 4):
+            assert self._quota(usage, 3) == 0   # 3 <= bound stays resident
+        assert self._quota(4, 3) == 1           # only real overage is shed
+
+    def test_large_bounds_unchanged_semantics(self):
+        # bound=1000: near at 950, target 900 — classic gentle behaviour
+        assert self._quota(949, 1000) == 0
+        assert self._quota(950, 1000) == 50
+        assert self._quota(1005, 1000) == 105
+
+    def test_gentle_target_is_90pct(self):
+        for bound in (10, 17, 64, 320, 1000):
+            near = int(np.ceil(0.95 * bound - 1e-9))
+            target = int(round(0.9 * bound))
+            for usage in (near - 1, near, bound, bound + 7):
+                q = self._quota(usage, bound)
+                if usage < near:
+                    assert q == max(usage - bound, 0)
+                else:
+                    assert usage - q == min(usage, target)
+
+
+# ------------------------------------------------------ controller recovery ----
+class TestThrashControllerRecovery:
+    def _step(self, state, cfg, events, usage=100):
+        """One controller window: bump thrash counter by `events`, run."""
+        c = state.counters._replace(
+            thrash_events=state.counters.thrash_events + events)
+        state = state._replace(counters=c,
+                               usage_prev=jnp.asarray([usage], jnp.int32),
+                               freed_since=jnp.zeros((1,), jnp.int32))
+        out = P.thrash_controller(state, jnp.asarray([usage], jnp.int32), cfg)
+        return state._replace(
+            promo_scale=out.promo_scale, steady=out.steady, table=out.table,
+            thrash_prev=out.thrash_prev, usage_prev=out.usage_prev,
+            freed_since=out.freed_since,
+            mitigated_prev=out.mitigated_prev), out
+
+    def test_no_recovery_in_mitigation_window(self):
+        cfg = TieringConfig(n_tenants=1, r_thrashing=4.0)
+        state = init_state(cfg, 16)
+        state, out = self._step(state, cfg, events=10)    # thrashing: halve
+        assert float(out.promo_scale[0]) == 0.5
+        assert bool(out.mitigated_prev[0])
+        # quiet window right after the halving: must NOT double back yet
+        state, out = self._step(state, cfg, events=0)
+        assert float(out.promo_scale[0]) == 0.5
+        # a second clean window: now recovery may proceed
+        state, out = self._step(state, cfg, events=0)
+        assert float(out.promo_scale[0]) == 1.0
+
+    def test_monotone_recovery_after_mitigation(self):
+        cfg = TieringConfig(n_tenants=1, r_thrashing=4.0)
+        state = init_state(cfg, 16)
+        for _ in range(3):                                # drive scale to 1/8
+            state, out = self._step(state, cfg, events=10)
+        assert float(out.promo_scale[0]) == 0.125
+        scales = []
+        for _ in range(6):                                # quiet from now on
+            state, out = self._step(state, cfg, events=0)
+            scales.append(float(out.promo_scale[0]))
+        assert scales == sorted(scales)                   # monotone recovery
+        assert scales[0] == 0.125                         # no same-window bounce
+        assert scales[-1] == 1.0

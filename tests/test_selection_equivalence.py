@@ -1,0 +1,167 @@
+"""Equivalence suite: the tenant-batched selection engine (core/select.py,
+engine impl="batched") is pinned bit-exactly to the seed's per-tenant
+unrolled loops (impl="unrolled") — randomized scores, quotas (zero, partial,
+over-supply), masks, and tie cases, for T in {1, 3, 8} — plus trace-time
+T-independence of the batched tick's jaxpr."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TieringConfig
+from repro.core import select as S
+from repro.core.engine import make_tick, run_engine
+from repro.core.state import init_state
+from repro.core.workloads import build_trace, ci_like, microbenchmark
+
+L = 96  # fixed so every parametrized case reuses one compiled shape per T
+
+
+def _unrolled_select(score, owner, active, quotas, T, k_cap):
+    masks = jnp.asarray((owner[None] == np.arange(T)[:, None]) & active[None])
+    return S.select_top_quota_unrolled(jnp.asarray(score), masks,
+                                       jnp.asarray(quotas), k_cap)
+
+
+def _batched_select(score, owner, active, quotas, T, k_cap):
+    return S.select_top_quota(jnp.asarray(score), jnp.asarray(owner),
+                              jnp.asarray(active), jnp.asarray(quotas), T,
+                              k_cap)
+
+
+@pytest.mark.parametrize("T", [1, 3, 8])
+@pytest.mark.parametrize("seed", range(8))
+def test_select_randomized_bit_exact(T, seed):
+    rng = np.random.default_rng(1000 * T + seed)
+    owner = rng.integers(0, T, L).astype(np.int32)
+    # half the cases use integer-valued scores so duplicates force the
+    # top_k/stable-sort tie-break (lower index wins) to agree
+    if seed % 2 == 0:
+        score = rng.integers(-4, 4, L).astype(np.float32)
+    else:
+        score = rng.standard_normal(L).astype(np.float32)
+    active = rng.random(L) < rng.choice([0.2, 0.6, 1.0])
+    if T >= 3:
+        active &= owner != 1          # one tenant fully masked out
+    # quotas mix: zero, partial, and over-supply (more than active pages)
+    quotas = rng.integers(0, 2 * L, T).astype(np.int32)
+    quotas[rng.integers(0, T)] = 0
+    k_cap = int(rng.choice([3, 17, L + 8]))
+    a = _batched_select(score, owner, active, quotas, T, k_cap)
+    b = _unrolled_select(score, owner, active, quotas, T, k_cap)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("T", [1, 3, 8])
+@pytest.mark.parametrize("seed", range(8))
+def test_select_rows_contiguous_bit_exact(T, seed):
+    """The padded-rows strategy (contiguous layouts) vs the unrolled loop."""
+    rng = np.random.default_rng(7000 * T + seed)
+    counts = rng.integers(0, 2 * L // max(T, 1), T)
+    owner = np.repeat(np.arange(T), counts).astype(np.int32)
+    Lc = owner.shape[0]
+    if Lc == 0:
+        owner = np.zeros(1, np.int32)
+        Lc = 1
+    layout = S.plan_layout(owner, T)
+    assert layout is not None
+    score = (rng.integers(-3, 3, Lc) if seed % 2 == 0
+             else rng.standard_normal(Lc)).astype(np.float32)
+    active = rng.random(Lc) < rng.choice([0.3, 1.0])
+    quotas = rng.integers(0, Lc + 4, T).astype(np.int32)
+    k_cap = int(rng.choice([2, 19, Lc + 8]))
+    sel = S.select_top_quota_rows(jnp.asarray(score), jnp.asarray(active),
+                                  jnp.asarray(quotas), layout, k_cap)
+    masks = (owner[None] == np.arange(T)[:, None]) & active[None]
+    ref = S.select_top_quota_unrolled(jnp.asarray(score), jnp.asarray(masks),
+                                      jnp.asarray(quotas), k_cap)
+    np.testing.assert_array_equal(np.asarray(sel.mask), np.asarray(ref))
+    # the compact stream agrees with the mask
+    np.testing.assert_array_equal(np.asarray(sel.counts),
+                                  masks.astype(np.int64) @ np.asarray(ref))
+
+
+def test_plan_layout_rejects_non_contiguous():
+    assert S.plan_layout(np.array([0, 1, 0, 1], np.int32), 2) is None
+    assert S.plan_layout(np.array([1, 1, 0, 0], np.int32), 2) is None
+    assert S.plan_layout(np.array([0, 0, 1, 1], np.int32), 2) is not None
+    assert S.plan_layout(np.array([0, 0, 2, 2], np.int32), 3) is not None
+
+
+@pytest.mark.parametrize("T", [1, 3, 8])
+def test_allocation_ranks_match_unrolled(T):
+    rng = np.random.default_rng(T)
+    for seed in range(6):
+        owner = rng.integers(0, T, L).astype(np.int32)
+        new = rng.random(L) < rng.choice([0.0, 0.3, 1.0])
+        ra = S.allocation_ranks(jnp.asarray(new), jnp.asarray(owner), T)
+        rb = S.allocation_ranks_unrolled(jnp.asarray(new), jnp.asarray(owner),
+                                         T)
+        # ranks of non-new pages are unspecified in the batched version
+        np.testing.assert_array_equal(np.asarray(ra)[new], np.asarray(rb)[new])
+
+
+@pytest.mark.parametrize("mode", ["equilibria", "memtis", "tpp"])
+def test_engine_batched_matches_unrolled(mode):
+    """Whole-tick equivalence over a real trace: every integer output of the
+    batched engine is bit-equal to the seed's unrolled engine."""
+    cfg = TieringConfig(n_tenants=3, n_fast_pages=256, n_slow_pages=256,
+                        lower_protection=(96, 96, 0),
+                        upper_bound=(0, 120, 0))
+    tenants = [microbenchmark(150), microbenchmark(140, arrival=10),
+               ci_like(120, phase_len=20)]
+    owner, acc, alive = build_trace(tenants, 80)
+    _, a = run_engine(cfg, owner, acc, alive, mode=mode, k_max=64,
+                      impl="batched")
+    _, b = run_engine(cfg, owner, acc, alive, mode=mode, k_max=64,
+                      impl="unrolled")
+    for f in ("fast_usage", "slow_usage", "promotions", "demotions",
+              "thrash_events", "attempted_promotions", "fast_free",
+              "promo_scale"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+    # float perf model: scatter-add vs matmul reduction order may differ
+    np.testing.assert_allclose(np.asarray(a.latency), np.asarray(b.latency),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(a.throughput),
+                               np.asarray(b.throughput), rtol=1e-5)
+
+
+def _prim_counts(jaxpr) -> dict:
+    """Recursively count primitives (including sub-jaxprs of cond/scan)."""
+    counts = {}
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
+            for v in eqn.params.values():
+                vs = v if isinstance(v, (list, tuple)) else [v]
+                for item in vs:
+                    if hasattr(item, "jaxpr"):
+                        walk(item.jaxpr)
+
+    walk(jaxpr)
+    return counts
+
+
+def _tick_prims(T, impl):
+    Lp = 16 * T
+    owner = np.arange(Lp, dtype=np.int32) % T
+    cfg = TieringConfig(n_tenants=T, n_fast_pages=Lp // 2,
+                        lower_protection=(4,) * T, upper_bound=(8,) * T)
+    tick = make_tick(cfg, owner, "equilibria", k_max=8, impl=impl)
+    state = init_state(cfg, Lp)
+    jaxpr = jax.make_jaxpr(tick)(
+        state, (jnp.zeros((Lp,), jnp.float32), jnp.ones((Lp,), bool)))
+    return _prim_counts(jaxpr.jaxpr)
+
+
+def test_batched_tick_trace_is_T_independent():
+    """Jaxpr op counts of the batched tick are identical for T=2 and T=16
+    (no per-tenant unrolling, zero top_k ops); the unrolled tick grows."""
+    small, big = _tick_prims(2, "batched"), _tick_prims(16, "batched")
+    assert small == big
+    assert small.get("top_k", 0) == 0      # equilibria path: zero top_k ops
+    un_small, un_big = _tick_prims(2, "unrolled"), _tick_prims(16, "unrolled")
+    assert un_big.get("top_k", 0) > un_small.get("top_k", 0)
+    assert sum(un_big.values()) > sum(un_small.values())

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import TieringConfig
-from repro.core.simulator import simulate
+from repro.core.simulator import PRESETS, simulate, simulate_preset
 from repro.core.workloads import TenantWorkload, microbenchmark, thrasher
 
 
@@ -123,6 +123,27 @@ class TestFairnessVsTPP:
         r = simulate(cfg, [microbenchmark(480), microbenchmark(360),
                            microbenchmark(360)], 100, mode="static")
         assert r.promotions.sum() == 0 and r.demotions.sum() == 0
+
+
+class TestStackedScenario:
+    """§V at-scale deployment shape: many heterogeneous cgroups per host."""
+
+    def test_stacked16_preset(self):
+        cfg, tenants = PRESETS["stacked16"]()
+        assert cfg.n_tenants == len(tenants) == 16
+        r = simulate_preset("stacked16", ticks=120, k_max=64)
+        assert r.fast_usage.shape[1] == 16
+        # capacity invariant under the full heterogeneous stack
+        assert (r.fast_usage.sum(axis=1) <= cfg.n_fast_pages).all()
+        # every tenant got memory; protected tenants hold their hot share
+        assert (r.fast_usage[-1] + r.slow_usage[-1] > 0).all()
+        prot = np.asarray(cfg.lower_protection)
+        final = r.fast_usage[-20:].mean(0)
+        protected = prot > 0
+        assert (final[protected] >= prot[protected] * 0.75).all()
+        # obs rides along at T=16
+        assert r.tier_stats is not None
+        assert r.tier_stats["resid_hist"].shape[0] == 16
 
 
 class TestObservability:
