@@ -22,3 +22,6 @@ python -m benchmarks.fleet_obs --smoke
 
 echo "== scale smoke (T=16, L=16k, 50 ticks) =="
 python -m benchmarks.scale_sweep --smoke
+
+echo "== churn smoke (dynamic ownership, >=50 lifecycle events) =="
+python -m benchmarks.churn_sweep --smoke

@@ -166,6 +166,11 @@ class TieringConfig:
     # per-tenant policy (paper §IV-B): lower protection and upper bound, in pages.
     lower_protection: Tuple[int, ...] = ()
     upper_bound: Tuple[int, ...] = () # 0 entries mean "no bound"
+    # fair-share weights for churn-time policy re-partitioning: when active
+    # tenants' protections oversubscribe the fast tier, heavier slots keep
+    # more of their ask (empty = equal weights). Only the dynamic-ownership
+    # engine (core/churn.py) consumes these.
+    tenant_weights: Tuple[float, ...] = ()
     # demotion/promotion machinery
     watermark_free: float = 0.02      # keep this fraction of fast pages free
     p_base: int = 256                 # unthrottled promotion scan per tick (pages)

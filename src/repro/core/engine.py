@@ -52,16 +52,7 @@ class TickOutput(NamedTuple):
     thrash_events: jax.Array   # [T] cumulative
     fast_free: jax.Array       # scalar
     attempted_promotions: jax.Array  # [T] candidates this tick (obs)
-
-
-def _select_global(score: jax.Array, mask: jax.Array, quota: jax.Array,
-                   k_max: int) -> jax.Array:
-    L = score.shape[0]
-    k = min(k_max, L)
-    s = jnp.where(mask, score, -jnp.inf)
-    vals, idx = jax.lax.top_k(s, k)
-    take = (jnp.arange(k) < quota) & jnp.isfinite(vals)
-    return jnp.zeros((L,), bool).at[idx].set(take)
+    pool_free: jax.Array       # scalar: unallocated pages (churn: free pool)
 
 
 def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
@@ -241,7 +232,7 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
         fast_mask = tier == TIER_FAST
         if mode == "tpp":
             dsel = SEL.Selection(
-                _select_global(cold_score, fast_mask, quota, k_max * T),
+                SEL.select_global(cold_score, fast_mask, quota, k_max * T),
                 None, None, None)
         elif mode == "static":
             dsel = SEL.Selection(jnp.zeros((L,), bool), None, None, None)
@@ -292,7 +283,7 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
 
         if mode == "tpp":
             psel = SEL.Selection(
-                _select_global(hot, cand, p_quota.sum(), k_max * T),
+                SEL.select_global(hot, cand, p_quota.sum(), k_max * T),
                 None, None, None)
         elif mode == "static":
             psel = SEL.Selection(jnp.zeros((L,), bool), None, None, None)
@@ -360,6 +351,7 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
 
         new_state = TierState(
             tier=tier.astype(jnp.int8), hot=hot, last_access=last_access,
+            owner=state.owner,
             counters=counters, promo_scale=state.promo_scale,
             thrash_prev=state.thrash_prev, usage_prev=state.usage_prev,
             freed_since=state.freed_since + freed_t, steady=state.steady,
@@ -396,7 +388,8 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
             throughput=thru, latency=lat, promo_scale=new_state.promo_scale,
             thrash_events=counters.thrash_events,
             fast_free=n_fast - fast_usage.sum(),
-            attempted_promotions=cand_t)
+            attempted_promotions=cand_t,
+            pool_free=(tier == TIER_NONE).sum())
         return new_state, out
 
     return tick
@@ -407,7 +400,7 @@ def run_engine(cfg: TieringConfig, owner: np.ndarray, accesses: np.ndarray,
                k_max: int = 256, impl: str = "batched") -> TickOutput:
     """Run the full trace (scan over ticks). accesses/alive: [ticks, L]."""
     tick = make_tick(cfg, owner, mode, k_max, impl=impl)
-    state = init_state(cfg, owner.shape[0])
+    state = init_state(cfg, owner.shape[0], owner=owner)
 
     @jax.jit
     def run(state, accesses, alive):

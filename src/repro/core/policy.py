@@ -82,6 +82,32 @@ def eq2_promotion_scan(p_base: jax.Array, fast_usage: jax.Array,
     return p, throttled
 
 
+def repartition_policy(base: TenantPolicy, active: jax.Array,
+                       capacity, weights: jax.Array = None) -> TenantPolicy:
+    """Recompute the effective per-slot policy on a membership change
+    (churn engine, every tick — pure jnp so it runs in-graph).
+
+    Departed slots lose both knobs (a protection configured for a tenant
+    that left must not keep reserving fast pages). When the *active* slots'
+    protections oversubscribe ``capacity`` (fast tier minus watermark), they
+    are scaled down to fit — proportionally by default, or biased by
+    ``weights`` ([T] f32 fair-share weights: heavier slots keep more of
+    their configured ask). Upper bounds pass through for active slots.
+    """
+    prot = jnp.where(active, base.lower_protection, 0).astype(jnp.float32)
+    w = jnp.ones_like(prot) if weights is None else weights.astype(jnp.float32)
+    w = jnp.where(active, w, 0.0)
+    ask = w * prot
+    total_ask = jnp.maximum(ask.sum(), 1.0)
+    cap = jnp.asarray(capacity, jnp.float32)
+    over = prot.sum() > cap
+    scaled = jnp.floor(cap * ask / total_ask)
+    prot_eff = jnp.where(over, jnp.minimum(scaled, prot), prot)
+    bound_eff = jnp.where(active, base.upper_bound, 0)
+    return TenantPolicy(prot_eff.astype(jnp.int32),
+                        bound_eff.astype(jnp.int32))
+
+
 # ------------------------------------------------------- thrash tracking ----
 def thrash_record_promotions(table: ThrashTable, promoted_pages: jax.Array,
                              promoted_mask: jax.Array, t: jax.Array) -> ThrashTable:

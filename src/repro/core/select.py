@@ -18,7 +18,11 @@ Two batched strategies, chosen at trace time from the static owner vector:
   L=256k (XLA's TopK is O(L), its variadic sort is not).
 * **generic fallback** (arbitrary owner permutation): one stable
   lexicographic sort by (segment, key) — `segment_ranks` — and scatter-add
-  reductions. Still constant in T.
+  reductions. Still constant in T. Because the owner vector enters as a
+  runtime array (never a trace constant), this is also the path the
+  dynamic-ownership engine (core/churn.py) routes every churned layout
+  through: the same compiled sort serves any ownership the lifecycle events
+  produce.
 
 Tie-breaking matches `jax.lax.top_k` exactly in both strategies ("lower
 index wins" on equal scores), so results are bit-equal to the unrolled
@@ -159,6 +163,48 @@ def by_tenant_scatter(x: jax.Array, owner: jax.Array,
                       n_tenants: int) -> jax.Array:
     """Per-tenant sum for arbitrary owner vectors (scatter-add)."""
     return jnp.zeros((n_tenants,), x.dtype).at[owner].add(x)
+
+
+def by_tenant_pooled(x: jax.Array, owner: jax.Array,
+                     n_tenants: int) -> jax.Array:
+    """Per-tenant sum tolerant of the free-pool sentinel ``owner ==
+    n_tenants``: sentinel lanes land in a scratch bucket instead of being
+    clipped onto the last real tenant (XLA's default scatter mode clips
+    out-of-bounds indices)."""
+    return jnp.zeros((n_tenants + 1,), x.dtype).at[owner].add(x)[:n_tenants]
+
+
+def select_global(score: jax.Array, mask: jax.Array, quota: jax.Array,
+                  k_max: int) -> jax.Array:
+    """Tenant-blind top-quota select (the TPP baseline's global scan)."""
+    L = score.shape[0]
+    k = min(k_max, L)
+    s = jnp.where(mask, score, -jnp.inf)
+    vals, idx = jax.lax.top_k(s, k)
+    take = (jnp.arange(k) < quota) & jnp.isfinite(vals)
+    return jnp.zeros((L,), bool).at[idx].set(take)
+
+
+def pool_grant(free_mask: jax.Array, need: jax.Array) -> jax.Array:
+    """Partition the free pool among tenants requesting pages (churn grant).
+
+    free_mask: [L] bool — pages currently in the free pool; need: [T] int32
+    pages each tenant wants granted this tick. Free pages are ranked in index
+    order and tenant t receives the rank interval
+    ``[cumsum(need)[t-1], cumsum(need)[t])`` — deterministic, one pass,
+    constant in T. When the pool is over-subscribed the intervals simply run
+    off the end of the pool: lower slot ids win (admission priority),
+    trailing tenants get partial or empty grants.
+
+    Returns [L] int32: the granting tenant id per page, or ``n_tenants``
+    (the FREE sentinel) where no grant happens.
+    """
+    T = need.shape[0]
+    rank = masked_rank(free_mask)
+    cum = jnp.cumsum(need.astype(jnp.int32))
+    tenant = jnp.searchsorted(cum, rank, side="right").astype(jnp.int32)
+    granted = free_mask & (rank < cum[-1]) & (tenant < T)
+    return jnp.where(granted, tenant, T)
 
 
 def allocation_ranks(new: jax.Array, owner: jax.Array,

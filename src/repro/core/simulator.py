@@ -14,9 +14,12 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import TieringConfig
+from repro.core.churn import churn_events, run_churn_engine
 from repro.core.engine import TickOutput, run_engine
-from repro.core.workloads import (TenantWorkload, build_trace,
-                                  stacked_heterogeneous, suggest_policy)
+from repro.core.workloads import (ChurnSlot, TenantWorkload,
+                                  build_churn_schedule, build_trace,
+                                  churn_stacked, stacked_heterogeneous,
+                                  suggest_churn_policy, suggest_policy)
 from repro.obs.pathology import Pathology, detect_all
 from repro.obs.stats import stats_summary
 from repro.obs.trace import decode_ring
@@ -39,6 +42,10 @@ class SimResult:
     migrations: Optional[np.ndarray] = None  # obs.trace.EVENT_DTYPE records
     migrations_dropped: int = 0
     lower_protection: tuple = ()
+    # dynamic-ownership runs (core/churn.py): per-tick tenant activity and
+    # free-pool size; static runs derive activity from the trace
+    active: Optional[np.ndarray] = None      # [ticks, T] bool
+    pool_free: Optional[np.ndarray] = None   # [ticks] free/unallocated pages
 
     def steady_window(self, frac: float = 0.5) -> slice:
         n = self.fast_usage.shape[0]
@@ -66,11 +73,19 @@ class SimResult:
 
     def pathologies(self, **kw) -> List[Pathology]:
         """Run the offline obs.pathology detectors over this run."""
+        kw.setdefault("active", self.active)
         return detect_all(
             self.fast_usage, self.slow_usage, self.promotions,
             self.demotions, self.latency, self.thrash_events,
             attempted=self.attempted,
             lower_protection=self.lower_protection, **kw)
+
+
+def tenant_activity(owner: np.ndarray, alive: np.ndarray,
+                    n_tenants: int) -> np.ndarray:
+    """[ticks, T] bool: tenant has any live page this tick (static traces)."""
+    return np.stack([alive[:, owner == i].any(axis=1)
+                     for i in range(n_tenants)], axis=1)
 
 
 def simulate(cfg: TieringConfig, tenants: List[TenantWorkload], ticks: int,
@@ -96,6 +111,41 @@ def simulate(cfg: TieringConfig, tenants: List[TenantWorkload], ticks: int,
         migrations=events,
         migrations_dropped=dropped,
         lower_protection=tuple(cfg.lower_protection[:cfg.n_tenants]),
+        active=tenant_activity(owner, alive, cfg.n_tenants),
+        pool_free=np.asarray(outs.pool_free),
+    )
+
+
+def simulate_churn(cfg: TieringConfig, slots: List[ChurnSlot], ticks: int,
+                   mode: str = "equilibria", k_max: int = 256,
+                   n_pages: Optional[int] = None) -> SimResult:
+    """Run a dynamic-roster scenario through the churn engine
+    (core/churn.py): slots' lifecycle episodes become in-graph
+    arrival/departure/resize events; ownership and the free pool are engine
+    state. ``SimResult.active`` carries the per-tick roster for the
+    churn-aware pathology detectors; ``pool_free`` the free-pool depth."""
+    schedule = build_churn_schedule(slots, ticks)
+    cfg = cfg.with_(n_tenants=len(slots))
+    final, outs = run_churn_engine(cfg, schedule, mode=mode, k_max=k_max,
+                                   n_pages=n_pages)
+    events, dropped = decode_ring(final.ring)
+    return SimResult(
+        mode=mode,
+        fast_usage=np.asarray(outs.fast_usage),
+        slow_usage=np.asarray(outs.slow_usage),
+        promotions=np.asarray(outs.promotions),
+        demotions=np.asarray(outs.demotions),
+        throughput=np.asarray(outs.throughput),
+        latency=np.asarray(outs.latency),
+        promo_scale=np.asarray(outs.promo_scale),
+        thrash_events=np.asarray(outs.thrash_events),
+        attempted=np.asarray(outs.attempted_promotions),
+        tier_stats=stats_summary(final.stats),
+        migrations=events,
+        migrations_dropped=dropped,
+        lower_protection=tuple(cfg.lower_protection[:cfg.n_tenants]),
+        active=schedule.want > 0,
+        pool_free=np.asarray(outs.pool_free),
     )
 
 
@@ -119,15 +169,56 @@ def _stacked(n_tenants: int) -> Tuple[TieringConfig, List[TenantWorkload]]:
     return cfg, tenants
 
 
+def churn_roster_config(slots: List[ChurnSlot],
+                        fast_frac: float = 0.45) -> TieringConfig:
+    """Derive a host config from a churn roster: fast tier sized to
+    ``fast_frac`` of the summed slot capacity (rounded to 64 pages),
+    per-slot policy from workload shape — the engine re-partitions it on
+    every membership change. Shared by the churn presets and
+    ``benchmarks/churn_sweep.py`` so they stay one scenario."""
+    prot, bound = suggest_churn_policy(slots)
+    total = sum(s.capacity() for s in slots)
+    fast = max((int(total * fast_frac) // 64) * 64, 64)
+    return TieringConfig(n_tenants=len(slots), n_fast_pages=fast,
+                         n_slow_pages=total, lower_protection=prot,
+                         upper_bound=bound)
+
+
+def _churn_stacked(n_stable: int, n_poisson: int, n_serverless: int,
+                   ticks: int = 240
+                   ) -> Tuple[TieringConfig, List[ChurnSlot]]:
+    """Churned stacked host: a stable base plus Poisson and serverless slot
+    churn (≥50 lifecycle events at the churn16 scale)."""
+    slots = churn_stacked(n_stable, n_poisson, n_serverless, ticks=ticks)
+    return churn_roster_config(slots), slots
+
+
 PRESETS: Dict[str, Callable[[], Tuple[TieringConfig, List[TenantWorkload]]]] = {
     "stacked16": lambda: _stacked(16),
     "stacked64": lambda: _stacked(64),
 }
 
+# presets generate lifecycle episodes out to a 960-tick horizon; running
+# shorter simply truncates the schedule (build_churn_schedule clips)
+CHURN_PRESETS: Dict[str, Callable[[], Tuple[TieringConfig, List[ChurnSlot]]]] = {
+    "churn16": lambda: _churn_stacked(6, 6, 4, ticks=960),
+}
+
+
+def preset_churn_events(name: str, ticks: int = 240) -> Tuple[int, int]:
+    """(arrivals, departures) a churn preset schedules over ``ticks``."""
+    _, slots = CHURN_PRESETS[name]()
+    return churn_events(build_churn_schedule(slots, ticks).want)
+
 
 def simulate_preset(name: str, ticks: int = 300, mode: str = "equilibria",
                     k_max: int = 128, **cfg_overrides) -> SimResult:
-    """Run a named scenario preset (see ``PRESETS``)."""
+    """Run a named scenario preset (``PRESETS`` or ``CHURN_PRESETS``)."""
+    if name in CHURN_PRESETS:
+        cfg, slots = CHURN_PRESETS[name]()
+        if cfg_overrides:
+            cfg = cfg.with_(**cfg_overrides)
+        return simulate_churn(cfg, slots, ticks, mode=mode, k_max=k_max)
     cfg, tenants = PRESETS[name]()
     if cfg_overrides:
         cfg = cfg.with_(**cfg_overrides)

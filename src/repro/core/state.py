@@ -3,10 +3,13 @@
 Everything is a pytree of jnp arrays so the whole control plane is jittable
 and runs inside compiled steps (the TPU analogue of "in the kernel").
 
-Pages are *logical*: each tenant owns a static contiguous range of logical
-page ids (ownership is fixed; liveness and tier are dynamic). ``tier`` is the
-dynamic placement: 0 = fast (local DRAM / HBM analogue), 1 = slow (CXL
-analogue), -1 = not allocated.
+Pages are *logical*: in the static engine each tenant owns a fixed
+contiguous range of logical page ids; in the dynamic-ownership engine
+(core/churn.py) the ``owner`` vector is itself state — pages move between
+tenants and the free pool as tenants arrive, resize and depart. ``tier`` is
+the dynamic placement: 0 = fast (local DRAM / HBM analogue), 1 = slow (CXL
+analogue), -1 = not allocated. A page with ``owner == n_tenants`` (the FREE
+sentinel) belongs to the free pool.
 """
 from __future__ import annotations
 
@@ -55,6 +58,9 @@ class TierState(NamedTuple):
     tier: jax.Array               # int8: -1/0/1
     hot: jax.Array                # f32 EWMA access rate
     last_access: jax.Array        # int32 tick
+    owner: jax.Array              # int32 tenant id; n_tenants = free pool.
+    #                               Static engines carry it unchanged; the
+    #                               churn engine mutates it every tick.
     # tenant state [T]
     counters: Counters
     promo_scale: jax.Array        # f32: thrash-mitigation promotion multiplier
@@ -75,12 +81,18 @@ def zero_counters(n_tenants: int) -> Counters:
     return Counters(z, z, z, z, z, z, z)
 
 
-def init_state(cfg: TieringConfig, n_pages: int) -> TierState:
+def init_state(cfg: TieringConfig, n_pages: int,
+               owner=None) -> TierState:
+    """``owner``: [n_pages] int tenant ids, or None for an all-free pool
+    (the dynamic-ownership engine's starting point)."""
     T = cfg.n_tenants
+    owner_j = (jnp.full((n_pages,), T, jnp.int32) if owner is None
+               else jnp.asarray(owner, jnp.int32))
     return TierState(
         tier=jnp.full((n_pages,), TIER_NONE, jnp.int8),
         hot=jnp.zeros((n_pages,), jnp.float32),
         last_access=jnp.zeros((n_pages,), jnp.int32),
+        owner=owner_j,
         counters=zero_counters(T),
         promo_scale=jnp.ones((T,), jnp.float32),
         thrash_prev=jnp.zeros((T,), jnp.int32),

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.configs.base import TieringConfig
 from repro.core.engine import make_tick
+from repro.core.simulator import tenant_activity
 from repro.core.state import init_state
 from repro.core.workloads import (TenantWorkload, build_trace, cache_like,
                                   ci_like, microbenchmark, spark_like,
@@ -97,6 +98,9 @@ class FleetResult:
     # per-host decoded telemetry
     stats: List[dict] = field(default_factory=list)   # stats_summary per host
     pathologies: List[List[Pathology]] = field(default_factory=list)
+    # [H, ticks, T] bool per-host tenant roster (tenant has live pages);
+    # detectors and roll-ups use it to tolerate mid-window departures
+    active: Optional[np.ndarray] = None
     _final_state: object = None
 
     def steady_window(self, frac: float = 0.5) -> slice:
@@ -126,20 +130,32 @@ class FleetResult:
         return out
 
     def rollup(self) -> dict:
-        """Fleet-wide operator summary."""
+        """Fleet-wide operator summary. Latency/throughput aggregates cover
+        only resident tenant-ticks (``active``) so hosts with mid-window
+        departures don't dilute percentiles with the idle-slot constant."""
         w = self.steady_window()
         lat = self.latency[:, w]
         mig = self.promotions[:, w] + self.demotions[:, w]
         hosts_bad = sum(1 for ps in self.pathologies if ps)
+        if self.active is not None:
+            act = np.asarray(self.active[:, w], bool)
+            act = act if act.any() else np.ones_like(act)
+            lat_vals = lat[act]
+            thru_vals = self.throughput[:, w][act]
+            worst_host = max(
+                float(np.percentile(lat[h][act[h]], 99))
+                for h in range(self.n_hosts) if act[h].any())
+        else:
+            lat_vals, thru_vals = lat, self.throughput[:, w]
+            worst_host = float(np.percentile(lat, 99, axis=(1, 2)).max())
         return {
             "hosts": self.n_hosts,
             "ticks": self.latency.shape[1],
             "tenants": self.latency.shape[2],
-            "latency_p50": float(np.percentile(lat, 50)),
-            "latency_p99": float(np.percentile(lat, 99)),
-            "latency_worst_host_p99": float(
-                np.percentile(lat, 99, axis=(1, 2)).max()),
-            "throughput_mean": float(self.throughput[:, w].mean()),
+            "latency_p50": float(np.percentile(lat_vals, 50)),
+            "latency_p99": float(np.percentile(lat_vals, 99)),
+            "latency_worst_host_p99": worst_host,
+            "throughput_mean": float(thru_vals.mean()),
             "migrations_per_tick": float(mig.sum(axis=2).mean()),
             "thrash_total": int(self.thrash_events[:, -1].sum()),
             "pathology_counts": self.pathology_counts(),
@@ -167,7 +183,7 @@ def run_fleet(cfg: TieringConfig, host_mixes: List[List[TenantWorkload]],
     alive = jnp.asarray(np.stack([t[2] for t in traces]), bool)
 
     tick = make_tick(cfg, owner, mode, k_max)
-    state0 = init_state(cfg, owner.shape[0])
+    state0 = init_state(cfg, owner.shape[0], owner=owner)
     states = jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x[None], (H,) + x.shape), state0)
 
@@ -189,6 +205,8 @@ def run_fleet(cfg: TieringConfig, host_mixes: List[List[TenantWorkload]],
         thrash_events=np.asarray(outs.thrash_events),
         attempted=np.asarray(outs.attempted_promotions),
         lower_protection=tuple(cfg.lower_protection[:cfg.n_tenants]),
+        active=np.stack([tenant_activity(owner, np.asarray(tr[2]),
+                                         cfg.n_tenants) for tr in traces]),
         _final_state=finals)
     res.stats = [stats_summary(jax.tree_util.tree_map(lambda x: x[h],
                                                       finals.stats))
@@ -198,6 +216,7 @@ def run_fleet(cfg: TieringConfig, host_mixes: List[List[TenantWorkload]],
             detect_all(res.fast_usage[h], res.slow_usage[h],
                        res.promotions[h], res.demotions[h], res.latency[h],
                        res.thrash_events[h], attempted=res.attempted[h],
-                       lower_protection=res.lower_protection)
+                       lower_protection=res.lower_protection,
+                       active=res.active[h])
             for h in range(H)]
     return res

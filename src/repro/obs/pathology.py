@@ -41,12 +41,37 @@ def _steady(n_ticks: int, frac: float = 0.5) -> slice:
     return slice(int(n_ticks * (1 - frac)), n_ticks)
 
 
+def _tenant_in_window(active: Optional[np.ndarray], w: slice, tenant: int,
+                      min_frac: float = 0.5) -> bool:
+    """Churn gate: with a per-tick roster (``active`` [ticks, T] bool), a
+    tenant is only judged over a window it meaningfully occupied — resident
+    for >= ``min_frac`` of the window AND still resident at its end. A
+    tenant that departed mid-window has no steady state to violate; judging
+    its truncated tail produces exactly the false positives the churn tests
+    pin (departure is not a protection violation or a promotion stall)."""
+    if active is None:
+        return True
+    a = np.asarray(active[w, tenant], bool)
+    if a.size == 0:
+        return False
+    return bool(a[-1]) and float(a.mean()) >= min_frac
+
+
 def detect_chronic_thrashing(thrash_events: np.ndarray, window: int = 20,
                              rate_threshold: float = 4.0,
-                             frac_threshold: float = 0.5) -> List[Pathology]:
+                             frac_threshold: float = 0.5,
+                             active: Optional[np.ndarray] = None
+                             ) -> List[Pathology]:
     """thrash_events: [ticks, T] *cumulative*. Flags tenants whose per-window
     thrash rate exceeds ``rate_threshold`` in >= ``frac_threshold`` of the
-    steady-half windows — transient churn at arrival does not count."""
+    steady-half windows — transient churn at arrival does not count.
+
+    Thrashing is *history*, so (unlike protection violation / promotion
+    stall) a tenant that departed mid-observation-window is still judged —
+    but only over the windows it fully resided in. Without the ``active``
+    roster, a departed thrasher's post-departure windows (rate 0) dilute
+    its bad-window fraction and it can slip under the threshold entirely (a
+    churn false *negative*, pinned by tests/test_churn.py)."""
     ticks, T = thrash_events.shape
     w = _steady(ticks)
     ev = thrash_events[w]
@@ -58,11 +83,19 @@ def detect_chronic_thrashing(thrash_events: np.ndarray, window: int = 20,
         return out
     rates = np.diff(ev[idxs], axis=0).astype(np.float64)  # events per window
     for t in range(T):
-        bad = float((rates[:, t] > rate_threshold).mean())
+        r_t = rates[:, t]
+        if active is not None:
+            a = np.asarray(active[w, t], bool)
+            resident = np.array([a[idxs[j]:idxs[j + 1]].all()
+                                 for j in range(len(idxs) - 1)])
+            if not resident.any():
+                continue
+            r_t = r_t[resident]
+        bad = float((r_t > rate_threshold).mean())
         if bad >= frac_threshold:
             out.append(Pathology(
                 "chronic_thrashing", t, severity=bad / frac_threshold,
-                evidence={"mean_rate": float(rates[:, t].mean()),
+                evidence={"mean_rate": float(r_t.mean()),
                           "bad_window_frac": bad,
                           "rate_threshold": rate_threshold}))
     return out
@@ -74,7 +107,8 @@ def detect_protection_violation(fast_usage: np.ndarray,
                                 attempted: Optional[np.ndarray] = None,
                                 demotions: Optional[np.ndarray] = None,
                                 tolerance: float = 0.05,
-                                frac_threshold: float = 0.25
+                                frac_threshold: float = 0.25,
+                                active: Optional[np.ndarray] = None
                                 ) -> List[Pathology]:
     """fast/slow_usage: [ticks, T]. A tenant violates its lower protection
     when its total footprint covers the protection but its fast-tier share
@@ -83,7 +117,9 @@ def detect_protection_violation(fast_usage: np.ndarray,
     when ``attempted``/``demotions`` [ticks, T] are given, ticks where the
     tenant neither sought promotion nor was demoted don't count either (a
     cold tenant sitting in the slow tier by its own access pattern is not a
-    policy violation)."""
+    policy violation). With a churn roster (``active`` [ticks, T]), tenants
+    that departed mid-window are skipped and non-resident ticks never count
+    as violations."""
     ticks, T = fast_usage.shape
     w = _steady(ticks)
     prot = np.asarray(lower_protection, np.float64)
@@ -91,9 +127,13 @@ def detect_protection_violation(fast_usage: np.ndarray,
     for t in range(T):
         if t >= prot.shape[0] or prot[t] <= 0:
             continue
+        if not _tenant_in_window(active, w, t):
+            continue
         demand = fast_usage[w, t] + slow_usage[w, t] >= prot[t]
         held_below = fast_usage[w, t] < prot[t] * (1 - tolerance)
         viol = demand & held_below
+        if active is not None:
+            viol &= np.asarray(active[w, t], bool)
         if attempted is not None or demotions is not None:
             wants = np.zeros(viol.shape, bool)
             if attempted is not None:
@@ -149,14 +189,19 @@ def detect_noisy_neighbor(promotions: np.ndarray, demotions: np.ndarray,
 
 def detect_promotion_stall(attempted: np.ndarray, promotions: np.ndarray,
                            min_attempts_per_tick: float = 1.0,
-                           success_threshold: float = 0.02
+                           success_threshold: float = 0.02,
+                           active: Optional[np.ndarray] = None
                            ) -> List[Pathology]:
     """[ticks, T] per-tick attempts vs successes. Flags tenants with sustained
-    promotion demand in the steady window whose success ratio is ~zero."""
+    promotion demand in the steady window whose success ratio is ~zero. A
+    tenant that departed mid-window (``active`` roster) is skipped — demand
+    that vanished with the tenant is churn, not a stalled promoter."""
     ticks, T = attempted.shape
     w = _steady(ticks)
     out: List[Pathology] = []
     for t in range(T):
+        if not _tenant_in_window(active, w, t):
+            continue
         att = float(attempted[w, t].sum())
         n = attempted[w, t].shape[0]
         if att < min_attempts_per_tick * n:
@@ -176,18 +221,26 @@ def detect_all(fast_usage: np.ndarray, slow_usage: np.ndarray,
                latency: np.ndarray, thrash_events: np.ndarray,
                attempted: Optional[np.ndarray] = None,
                lower_protection: Sequence[int] = (),
-               thrash_rate_threshold: float = 4.0) -> List[Pathology]:
-    """Run every detector over one host's collected telemetry."""
+               thrash_rate_threshold: float = 4.0,
+               active: Optional[np.ndarray] = None) -> List[Pathology]:
+    """Run every detector over one host's collected telemetry. ``active``
+    ([ticks, T] bool, optional) is the churn roster. Current-state
+    pathologies (protection violation, promotion stall) skip tenants that
+    departed mid-observation-window instead of misreading the truncated
+    tail; historical pathologies (chronic thrashing — judged over resident
+    windows — and noisy neighbor) still report tenants that have since
+    departed."""
     found = detect_chronic_thrashing(
-        thrash_events, rate_threshold=thrash_rate_threshold)
+        thrash_events, rate_threshold=thrash_rate_threshold, active=active)
     if len(lower_protection):
         found += detect_protection_violation(fast_usage, slow_usage,
                                              lower_protection,
                                              attempted=attempted,
-                                             demotions=demotions)
+                                             demotions=demotions,
+                                             active=active)
     found += detect_noisy_neighbor(promotions, demotions, latency)
     if attempted is not None:
-        found += detect_promotion_stall(attempted, promotions)
+        found += detect_promotion_stall(attempted, promotions, active=active)
     return found
 
 

@@ -1,0 +1,295 @@
+"""Dynamic-ownership subsystem tests (core/churn.py).
+
+Pins the tentpole properties: lifecycle events are scan data (one jaxpr
+serves any churn schedule), page-count conservation holds under arbitrary
+generated schedules, departed tenants own nothing, slot reuse resets
+controller state, policy re-partitioning respects capacity, and the
+pathology detectors tolerate mid-window departures.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from proputil import seeded_property
+
+from repro.configs.base import TieringConfig
+from repro.core import policy as P
+from repro.core.churn import (ChurnSchedule, churn_events, make_churn_tick,
+                              run_churn_engine)
+from repro.core.simulator import CHURN_PRESETS, simulate_churn, simulate_preset
+from repro.core.state import TenantPolicy, init_state
+from repro.core.workloads import (ChurnSlot, TenantWorkload,
+                                  build_churn_schedule, cache_like, web_like)
+from repro.obs import pathology as PATH
+
+# ------------------------------------------------- shared compiled runner ----
+# One fixed-shape runner for the property suite: hypothesis/fallback examples
+# vary only the schedule *data*, so jax compiles the scan exactly once.
+_T, _S, _L, _TICKS = 4, 24, 160, 24
+_RUNNER = {}
+
+
+def _runner():
+    if not _RUNNER:
+        cfg = TieringConfig(n_tenants=_T, n_fast_pages=48, n_slow_pages=112,
+                            lower_protection=(12, 12, 0, 0),
+                            upper_bound=(0, 20, 0, 0))
+        tick = make_churn_tick(cfg, _L, mode="equilibria", k_max=32)
+        _RUNNER.update(
+            cfg=cfg,
+            run=jax.jit(lambda s, r, w: jax.lax.scan(tick, s, (r, w))),
+            state=init_state(cfg, _L))
+    return _RUNNER
+
+
+def _random_schedule(seed: int) -> ChurnSchedule:
+    """Adversarial lifecycle schedule: per-slot on/off phases with the
+    footprint resized randomly every tick while resident."""
+    rng = np.random.default_rng(seed)
+    want = np.zeros((_TICKS, _T), np.int32)
+    for i in range(_T):
+        t = int(rng.integers(0, 6))
+        while t < _TICKS:
+            on = int(rng.integers(1, 12))
+            for k in range(t, min(t + on, _TICKS)):
+                want[k, i] = int(rng.integers(1, _S + 1))
+            t += on + int(rng.integers(1, 8))
+    rates = (rng.random((_TICKS, _T, _S)) * 5.0).astype(np.float32)
+    rates[rng.random(rates.shape) < 0.3] = 0.0
+    return ChurnSchedule(want=want, rates=rates)
+
+
+@seeded_property(n_fallback=20, max_examples=40)
+def test_conservation_under_generated_lifecycles(seed):
+    """Across any generated lifecycle schedule: fast + slow + free == L
+    every tick, a tenant's footprint tracks its target exactly (the pool
+    covers the roster here), departed tenants own zero pages, and the final
+    owner vector is consistent with the per-tenant counts."""
+    r = _runner()
+    sched = _random_schedule(seed)
+    final, outs = r["run"](r["state"], jnp.asarray(sched.rates),
+                           jnp.asarray(sched.want))
+    fast = np.asarray(outs.fast_usage)
+    slow = np.asarray(outs.slow_usage)
+    pool = np.asarray(outs.pool_free)
+    owned = fast + slow
+    # conservation: every page is fast, slow, or free — nothing leaks
+    np.testing.assert_array_equal(fast.sum(1) + slow.sum(1) + pool, _L)
+    # sum(want) <= L here, so grant/reclaim settle footprints exactly
+    np.testing.assert_array_equal(owned, sched.want)
+    assert (owned[sched.want == 0] == 0).all()
+    assert (fast >= 0).all() and (slow >= 0).all()
+    # final owner vector agrees with the counters; no page has an owner
+    # outside [0, T] and every owned page belongs to an active tenant
+    owner = np.asarray(final.owner)
+    assert owner.min() >= 0 and owner.max() <= _T
+    np.testing.assert_array_equal(np.bincount(owner, minlength=_T + 1)[:_T],
+                                  owned[-1])
+    active_final = sched.want[-1] > 0
+    assert active_final[owner[owner < _T]].all()
+    # thrash counters stay monotone through churn
+    assert (np.diff(np.asarray(outs.thrash_events), axis=0) >= 0).all()
+
+
+def test_oversubscribed_pool_truncates_in_slot_order():
+    """When the roster asks for more pages than the host has, grants are
+    truncated in slot-priority order and conservation still holds."""
+    cfg = TieringConfig(n_tenants=3, n_fast_pages=16, n_slow_pages=16,
+                        lower_protection=(), upper_bound=())
+    L = 32
+    want = np.tile(np.array([[20, 20, 20]], np.int32), (6, 1))
+    rates = np.full((6, 3, 20), 1.0, np.float32)
+    final, outs = run_churn_engine(cfg, ChurnSchedule(want, rates),
+                                   n_pages=L)
+    owned = np.asarray(outs.fast_usage) + np.asarray(outs.slow_usage)
+    assert (owned <= want).all()
+    np.testing.assert_array_equal(owned[-1], [20, 12, 0])   # slot priority
+    np.testing.assert_array_equal(
+        owned.sum(1) + np.asarray(outs.pool_free), L)
+
+
+def test_churn16_preset_acceptance():
+    """The churn16 preset schedules >= 50 arrival/departure events, all
+    served by one compiled tick, with conservation and clean departures."""
+    ticks = 240
+    cfg, slots = CHURN_PRESETS["churn16"]()
+    sched = build_churn_schedule(slots, ticks)
+    arrivals, departures = churn_events(sched.want)
+    assert arrivals + departures >= 50, (arrivals, departures)
+    r = simulate_preset("churn16", ticks=ticks)
+    L = cfg.n_fast_pages + cfg.n_slow_pages
+    np.testing.assert_array_equal(
+        r.fast_usage.sum(1) + r.slow_usage.sum(1) + r.pool_free, L)
+    owned = r.fast_usage + r.slow_usage
+    assert (owned[~r.active] == 0).all()
+    assert (owned <= sched.want).all()
+    assert (np.diff(r.thrash_events, axis=0) >= 0).all()
+
+
+def test_jaxpr_constant_in_churn_events():
+    """Lifecycle events are data, not structure: the tick jaxpr built for a
+    zero-churn schedule and for a 100+-event schedule are identical."""
+    r = _runner()
+    cfg = r["cfg"]
+    tick = make_churn_tick(cfg, _L, mode="equilibria", k_max=32)
+    quiet = ChurnSchedule(np.full((_TICKS, _T), 8, np.int32),
+                          np.ones((_TICKS, _T, _S), np.float32))
+    stormy = _random_schedule(3)
+    assert churn_events(quiet.want)[0] + churn_events(quiet.want)[1] == _T
+    a, d = churn_events(stormy.want)
+    assert a + d > _T
+    jx = [jax.make_jaxpr(tick)(
+        r["state"], (jnp.asarray(s.rates[0]), jnp.asarray(s.want[0])))
+        for s in (quiet, stormy)]
+    assert str(jx[0]) == str(jx[1])
+
+
+def test_lifecycle_grant_release_depart():
+    """Deterministic walk: arrival grants + allocates, shrink releases the
+    coldest pages, departure returns everything to the pool."""
+    cfg = TieringConfig(n_tenants=2, n_fast_pages=16, n_slow_pages=16)
+    L = 32
+    want = np.array([[4, 0], [4, 6], [2, 6], [0, 6]], np.int32)
+    rates = np.zeros((4, 2, 8), np.float32)
+    rates[:, 0, :2] = 4.0            # slot0 ranks 0-1 hot
+    rates[:, 0, 2:4] = 0.1           # slot0 ranks 2-3 cold
+    rates[:, 1, :6] = 1.0
+    final, outs = run_churn_engine(cfg, ChurnSchedule(want, rates),
+                                   n_pages=L)
+    owned = np.asarray(outs.fast_usage) + np.asarray(outs.slow_usage)
+    np.testing.assert_array_equal(owned, want)       # targets hit every tick
+    np.testing.assert_array_equal(np.asarray(outs.pool_free),
+                                  [28, 22, 24, 26])
+    c = jax.tree_util.tree_map(np.asarray, final.counters)
+    np.testing.assert_array_equal(c.allocations, [4, 6])
+    np.testing.assert_array_equal(c.reclaims, [4, 0])   # 2 (shrink) + 2 (depart)
+    owner = np.asarray(final.owner)
+    # slot0 (pages 0-3) fully reclaimed; the shrink released its two cold
+    # pages (tenant-local ranks 2,3 = physical 2,3) first
+    assert (owner[:4] == 2).all()                    # FREE sentinel == T == 2
+    np.testing.assert_array_equal(owner[4:10], [1] * 6)
+
+
+def test_slot_reuse_resets_controller_state():
+    """A fresh arrival in a previously-used slot starts with clean
+    controller state (promo_scale back to 1, steady/mitigation cleared)."""
+    cfg = TieringConfig(n_tenants=2, n_fast_pages=16, n_slow_pages=16)
+    tick = make_churn_tick(cfg, 32)
+    state = init_state(cfg, 32)
+    state = state._replace(promo_scale=jnp.asarray([0.25, 0.5]),
+                           steady=jnp.asarray([True, True]),
+                           mitigated_prev=jnp.asarray([True, True]))
+    rates = jnp.ones((2, 8), jnp.float32)
+    new_state, _ = tick(state, (rates, jnp.asarray([8, 0], jnp.int32)))
+    assert float(new_state.promo_scale[0]) == 1.0    # arrived: reset
+    assert float(new_state.promo_scale[1]) == 0.5    # untouched
+    assert not bool(new_state.steady[0])
+    assert not bool(new_state.mitigated_prev[0])
+
+
+def test_repartition_policy():
+    base = TenantPolicy(jnp.asarray([100, 100, 50], jnp.int32),
+                        jnp.asarray([0, 120, 60], jnp.int32))
+    # all active, capacity ample: unchanged
+    pol = P.repartition_policy(base, jnp.asarray([True, True, True]), 400)
+    np.testing.assert_array_equal(np.asarray(pol.lower_protection),
+                                  [100, 100, 50])
+    np.testing.assert_array_equal(np.asarray(pol.upper_bound), [0, 120, 60])
+    # departure drops both knobs; remaining fit => unscaled
+    pol = P.repartition_policy(base, jnp.asarray([True, False, True]), 400)
+    np.testing.assert_array_equal(np.asarray(pol.lower_protection),
+                                  [100, 0, 50])
+    np.testing.assert_array_equal(np.asarray(pol.upper_bound), [0, 0, 60])
+    # oversubscribed: proportional scale-down, never exceeding capacity
+    pol = P.repartition_policy(base, jnp.asarray([True, False, True]), 100)
+    prot = np.asarray(pol.lower_protection)
+    np.testing.assert_array_equal(prot, [66, 0, 33])
+    assert prot.sum() <= 100
+    # weights bias the squeeze toward heavy slots (and never exceed the ask)
+    pol = P.repartition_policy(base, jnp.asarray([True, False, True]), 100,
+                               weights=jnp.asarray([1.0, 1.0, 3.0]))
+    prot = np.asarray(pol.lower_protection)
+    np.testing.assert_array_equal(prot, [40, 0, 50])
+    assert prot.sum() <= 100
+
+
+# ----------------------------------- churn-aware pathology detectors ----
+def _departure_telemetry():
+    """Tenant 0 is squeezed below protection with real demand, then departs
+    at tick 75 — inside the detectors' steady window [50, 100)."""
+    ticks, T = 100, 2
+    fast = np.zeros((ticks, T))
+    slow = np.zeros((ticks, T))
+    attempted = np.zeros((ticks, T))
+    promotions = np.zeros((ticks, T))
+    active = np.ones((ticks, T), bool)
+    fast[:75, 0] = 10
+    slow[:75, 0] = 50                 # footprint 60 >= protection 50
+    attempted[:75, 0] = 5             # sustained promotion demand
+    active[75:, 0] = False
+    fast[:, 1] = 40
+    return fast, slow, attempted, promotions, active
+
+
+def test_departed_tenant_is_not_a_protection_violation():
+    fast, slow, attempted, _, active = _departure_telemetry()
+    # roster-blind view misreads the truncated window as a violation...
+    assert PATH.detect_protection_violation(fast, slow, (50, 0),
+                                            attempted=attempted)
+    # ...the churn-aware view knows tenant 0 departed mid-window
+    assert PATH.detect_protection_violation(fast, slow, (50, 0),
+                                            attempted=attempted,
+                                            active=active) == []
+
+
+def test_departed_tenant_is_not_a_promotion_stall():
+    _, _, attempted, promotions, active = _departure_telemetry()
+    assert PATH.detect_promotion_stall(attempted, promotions)
+    assert PATH.detect_promotion_stall(attempted, promotions,
+                                       active=active) == []
+
+
+def test_departed_thrasher_still_caught():
+    """Chronic thrashing is history: a thrasher that departed mid-window is
+    still reported — and the roster actually *recovers* it. Roster-blind,
+    the post-departure zero-rate windows dilute the bad-window fraction
+    below threshold (a churn false negative); judged only over the windows
+    the tenant fully resided in, it is flagged."""
+    ticks, T = 160, 2
+    thrash = np.zeros((ticks, T))
+    active = np.ones((ticks, T), bool)
+    thrash[:, 0] = np.minimum(np.arange(ticks), 100) * 5.0   # departs @100
+    active[100:, 0] = False
+    # steady window [80, 160): windows 80-100 (thrashing), 100-120, 120-140
+    # (flat) -> diluted to 1/3 bad roster-blind, under the 0.5 threshold
+    assert PATH.detect_chronic_thrashing(thrash) == []
+    found = PATH.detect_chronic_thrashing(thrash, active=active)
+    assert [p.tenant for p in found] == [0]
+
+
+def test_cold_tenant_stays_exempt():
+    """A tenant below protection with zero demand is not a violation —
+    with or without the churn roster."""
+    fast, slow, *_ = _departure_telemetry()
+    attempted = np.zeros_like(fast)
+    assert PATH.detect_protection_violation(fast, slow, (50, 0),
+                                            attempted=attempted,
+                                            demotions=np.zeros_like(fast)) == []
+
+
+def test_churn_run_detectors_tolerate_departure():
+    """End-to-end: a protected tenant with live demand departs mid-window in
+    a churn run; the SimResult-integrated detectors stay silent for it."""
+    slots = [
+        ChurnSlot(web_like(48), [(0, 150)]),          # departs mid-window
+        ChurnSlot(cache_like(64), [(0, 960)]),
+        ChurnSlot(cache_like(64), [(2, 960)]),
+    ]
+    cfg = TieringConfig(n_tenants=3, n_fast_pages=64, n_slow_pages=176,
+                        lower_protection=(24, 24, 24), upper_bound=())
+    r = simulate_churn(cfg, slots, 200)
+    assert r.active is not None and not r.active[-1, 0]
+    for p in r.pathologies():
+        assert not (p.tenant == 0
+                    and p.kind in ("protection_violation",
+                                   "promotion_stall")), str(p)

@@ -1,0 +1,121 @@
+"""Golden-trace regression fixtures: small deterministic runs (one static,
+one churn) are serialized — cumulative counters, ``tier_stat``-level
+summary metrics, and the decoded migration ring — into tests/golden/*.json
+and diffed in tier-1, so *silent telemetry drift* (a counter that stops
+incrementing, a ring record that changes meaning, a histogram that moves)
+fails CI even when no behavioral test notices.
+
+Regeneration (after an intentional behavior change):
+
+    REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_golden_trace.py
+
+then commit the updated fixtures with a note on why the telemetry moved.
+"""
+import json
+import os
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.configs.base import TieringConfig
+from repro.core.simulator import simulate, simulate_churn
+from repro.core.workloads import (ChurnSlot, ci_like, microbenchmark,
+                                  serverless_bursts, web_like)
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+REGEN = os.environ.get("REPRO_REGEN_GOLDEN") == "1"
+RING_HEAD = 40          # decoded migration events pinned from each end
+
+
+def _static_small():
+    cfg = TieringConfig(n_tenants=3, n_fast_pages=128, n_slow_pages=256,
+                        lower_protection=(48, 48, 0),
+                        upper_bound=(0, 64, 0))
+    tenants = [microbenchmark(80), web_like(90, arrival=8),
+               ci_like(70, phase_len=16)]
+    return simulate(cfg, tenants, 60, k_max=32)
+
+
+def _churn_small():
+    slots = [ChurnSlot(web_like(40), [(0, 80)]),
+             ChurnSlot(microbenchmark(32, ramp=3), [(4, 30), (40, 70)]),
+             *serverless_bursts(2, 80, footprint=24, seed=3)]
+    cfg = TieringConfig(n_tenants=4, n_fast_pages=64, n_slow_pages=120,
+                        lower_protection=(16, 8, 0, 0),
+                        upper_bound=(0, 24, 0, 0))
+    return simulate_churn(cfg, slots, 80, k_max=32)
+
+
+SCENARIOS = {"static_small": _static_small, "churn_small": _churn_small}
+
+
+def _events_to_lists(ev) -> list:
+    return [[int(e["tick"]), int(e["tenant"]), int(e["page"]),
+             int(e["direction"]), round(float(e["hotness"]), 5)]
+            for e in ev]
+
+
+def _collect(r) -> dict:
+    """Everything an operator-facing telemetry surface reports."""
+    ts = r.tier_stats
+    out = {
+        "final_fast_usage": r.fast_usage[-1].tolist(),
+        "final_slow_usage": r.slow_usage[-1].tolist(),
+        "total_promotions": r.promotions.sum(0).tolist(),
+        "total_demotions": r.demotions.sum(0).tolist(),
+        "total_attempted": r.attempted.sum(0).tolist(),
+        "final_thrash_events": r.thrash_events[-1].tolist(),
+        "final_pool_free": int(r.pool_free[-1]),
+        "promo_attempts": ts["promo_attempts"].tolist(),
+        "promo_success": ts["promo_success"].tolist(),
+        "demo_attempts": ts["demo_attempts"].tolist(),
+        "demo_success": ts["demo_success"].tolist(),
+        "resid_hist": ts["resid_hist"].tolist(),
+        "resid_p50": ts["resid_p50"].tolist(),
+        "resid_p99": ts["resid_p99"].tolist(),
+        "contended_frac": [round(float(x), 6) for x in ts["contended_frac"]],
+        "throttled_frac": [round(float(x), 6) for x in ts["throttled_frac"]],
+        "below_protection_frac": [round(float(x), 6)
+                                  for x in ts["below_protection_frac"]],
+        "obs_ticks": int(ts["ticks"]),
+        "ring_events_decoded": len(r.migrations),
+        "ring_events_dropped": int(r.migrations_dropped),
+        "ring_head": _events_to_lists(r.migrations[:RING_HEAD]),
+        "ring_tail": _events_to_lists(r.migrations[-RING_HEAD:]),
+    }
+    return out
+
+
+def _diff(got, want, path=""):
+    """Exact on ints/strings, atol 1e-4 on floats, recursive on containers."""
+    if isinstance(want, list):
+        assert isinstance(got, list) and len(got) == len(want), \
+            f"{path}: length {len(got)} != {len(want)}"
+        for i, (g, w) in enumerate(zip(got, want)):
+            _diff(g, w, f"{path}[{i}]")
+    elif isinstance(want, bool) or isinstance(want, str):
+        assert got == want, f"{path}: {got!r} != {want!r}"
+    elif isinstance(want, int):
+        assert int(got) == want, f"{path}: {got} != {want}"
+    elif isinstance(want, float):
+        assert abs(float(got) - want) <= 1e-4, f"{path}: {got} != {want}"
+    else:
+        assert got == want, f"{path}: {got!r} != {want!r}"
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_golden_trace(name):
+    got = _collect(SCENARIOS[name]())
+    path = GOLDEN_DIR / f"{name}.json"
+    if REGEN:
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps(got, indent=1) + "\n")
+        return
+    assert path.exists(), (
+        f"missing golden fixture {path}; generate with "
+        f"REPRO_REGEN_GOLDEN=1 python -m pytest {__file__}")
+    want = json.loads(path.read_text())
+    assert sorted(want) == sorted(got), "telemetry key set drifted"
+    for key in sorted(want):
+        _diff(got[key], want[key], key)

@@ -1,0 +1,129 @@
+"""Property-based differential suite for the ``segment_ranks`` selection
+fallback — the path every churned (non-contiguous) ownership layout routes
+through. The contiguous rows path is already pinned by
+tests/test_selection_equivalence.py; this suite pins the generic path on
+exactly the layouts the churn engine produces: arbitrary owner
+permutations, free-pool sentinel holes, duplicate scores (tie-break must
+match top_k's lower-index-wins), and zero / partial / over-supply quotas —
+batched vs ``impl="unrolled"`` must agree bit-exactly.
+
+Runs under hypothesis when installed, seeded-parametrize otherwise
+(tests/proputil.py).
+"""
+import jax.numpy as jnp
+import numpy as np
+from proputil import seeded_property
+
+from repro.core import select as S
+
+L = 96
+
+
+def _case(seed):
+    """A random non-contiguous selection case: shuffled owners (with some
+    tenants empty and optional free-sentinel holes), duplicate-heavy or
+    continuous scores, adversarial quota mix, random k_cap."""
+    rng = np.random.default_rng(seed)
+    T = int(rng.integers(1, 9))
+    owner = rng.integers(0, T, L).astype(np.int32)
+    if T >= 3:
+        owner[owner == 1] = 0              # tenant 1 empty
+    rng.shuffle(owner)
+    if S.plan_layout(owner, T) is not None and T >= 2:
+        owner[0], owner[-1] = T - 1, 0     # force non-contiguity
+    if seed % 2 == 0:
+        score = rng.integers(-4, 4, L).astype(np.float32)   # dense ties
+    else:
+        score = rng.standard_normal(L).astype(np.float32)
+    active = rng.random(L) < rng.choice([0.2, 0.6, 1.0])
+    quotas = rng.integers(0, 2 * L, T).astype(np.int32)     # over-supply mix
+    quotas[rng.integers(0, T)] = 0
+    k_cap = int(rng.choice([3, 17, L + 8]))
+    return T, owner, score, active, quotas, k_cap
+
+
+@seeded_property(n_fallback=40)
+def test_fallback_bit_exact_noncontiguous(seed):
+    T, owner, score, active, quotas, k_cap = _case(seed)
+    got = S.select_top_quota(jnp.asarray(score), jnp.asarray(owner),
+                             jnp.asarray(active), jnp.asarray(quotas), T,
+                             k_cap)
+    masks = jnp.asarray((owner[None] == np.arange(T)[:, None]) & active[None])
+    ref = S.select_top_quota_unrolled(jnp.asarray(score), masks,
+                                      jnp.asarray(quotas), k_cap)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@seeded_property(n_fallback=24)
+def test_fallback_with_free_sentinel_holes(seed):
+    """Owner vectors containing the churn engine's FREE sentinel (== T):
+    sentinel pages are never selected, and the real tenants' selection is
+    unchanged versus masking those pages out explicitly."""
+    T, owner, score, active, quotas, k_cap = _case(seed)
+    rng = np.random.default_rng(seed + 1)
+    free = rng.random(L) < 0.3
+    owner_h = np.where(free, T, owner).astype(np.int32)
+    got = S.select_top_quota(jnp.asarray(score), jnp.asarray(owner_h),
+                             jnp.asarray(active & ~free),
+                             jnp.asarray(quotas), T, k_cap)
+    masks = jnp.asarray((owner[None] == np.arange(T)[:, None])
+                        & active[None] & ~free[None])
+    ref = S.select_top_quota_unrolled(jnp.asarray(score), masks,
+                                      jnp.asarray(quotas), k_cap)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert not np.asarray(got)[free].any()
+
+
+@seeded_property(n_fallback=24)
+def test_scatter_reductions_match_onehot(seed):
+    rng = np.random.default_rng(seed)
+    T = int(rng.integers(1, 9))
+    owner = rng.integers(0, T, L).astype(np.int32)
+    x = rng.integers(-5, 6, L).astype(np.int32)
+    oh = (owner[None] == np.arange(T)[:, None]).astype(np.int64)
+    ref = oh @ x
+    got = S.by_tenant_scatter(jnp.asarray(x), jnp.asarray(owner), T)
+    np.testing.assert_array_equal(np.asarray(got), ref)
+    # pooled variant: sentinel lanes must not leak onto tenant T-1
+    owner_h = owner.copy()
+    owner_h[rng.random(L) < 0.4] = T
+    oh2 = (owner_h[None] == np.arange(T)[:, None]).astype(np.int64)
+    got2 = S.by_tenant_pooled(jnp.asarray(x), jnp.asarray(owner_h), T)
+    np.testing.assert_array_equal(np.asarray(got2), oh2 @ x)
+
+
+@seeded_property(n_fallback=24)
+def test_allocation_ranks_noncontiguous(seed):
+    rng = np.random.default_rng(seed)
+    T = int(rng.integers(1, 9))
+    owner = rng.integers(0, T, L).astype(np.int32)
+    rng.shuffle(owner)
+    new = rng.random(L) < rng.choice([0.0, 0.3, 1.0])
+    ra = S.allocation_ranks(jnp.asarray(new), jnp.asarray(owner), T)
+    rb = S.allocation_ranks_unrolled(jnp.asarray(new), jnp.asarray(owner), T)
+    np.testing.assert_array_equal(np.asarray(ra)[new], np.asarray(rb)[new])
+
+
+@seeded_property(n_fallback=24)
+def test_pool_grant_properties(seed):
+    """Grant partition: grants only free pages, per-tenant grant counts are
+    min(ask, what the pool can still cover in slot-priority order), and the
+    granted pages are exactly the lowest-index free pages."""
+    rng = np.random.default_rng(seed)
+    T = int(rng.integers(1, 7))
+    free = rng.random(L) < rng.choice([0.1, 0.5, 0.9])
+    need = rng.integers(0, L, T).astype(np.int32)
+    got = np.asarray(S.pool_grant(jnp.asarray(free), jnp.asarray(need)))
+    granted = got < T
+    assert (free | ~granted).all()                   # only free pages granted
+    n_free = int(free.sum())
+    counts = np.bincount(got[granted], minlength=T)
+    remaining = n_free
+    for t in range(T):                               # slot-priority semantics
+        expect = min(int(need[t]), remaining)
+        assert counts[t] == expect, (t, counts, need, n_free)
+        remaining -= expect
+    # granted set = lowest-index free pages
+    free_idx = np.flatnonzero(free)
+    np.testing.assert_array_equal(np.flatnonzero(granted),
+                                  free_idx[:int(counts.sum())])
