@@ -25,3 +25,6 @@ python -m benchmarks.scale_sweep --smoke
 
 echo "== churn smoke (dynamic ownership, >=50 lifecycle events) =="
 python -m benchmarks.churn_sweep --smoke
+
+echo "== fleet smoke (128 mixed static+churn hosts, 10k-tick chunked rollout) =="
+python -m benchmarks.fleet_sweep --smoke

@@ -1,10 +1,12 @@
-"""Dynamic-ownership tiering engine: tenant lifecycle as in-graph events.
+"""Dynamic-ownership tiering engine: tenant lifecycle as in-graph events —
+a thin adapter over the unified tick core (core/tick.py).
 
 The static engine (core/engine.py) freezes the owner vector at trace time,
 so every scenario it can express is a fixed tenant roster. Equilibria's
 target deployment is the opposite: containers are stacked, arrive, resize
 and depart continuously (the serverless-CXL churn regime is exactly where
-tiering policies break). This module makes ownership *state*: the
+tiering policies break). The dynamic ownership provider
+(``core.tick.dynamic_ownership``) makes ownership *state*: the
 ``TierState.owner`` vector ([L] int32, ``n_tenants`` = FREE sentinel) is
 mutated inside the compiled tick by a per-tick schedule
 
@@ -13,32 +15,27 @@ mutated inside the compiled tick by a per-tick schedule
                          address space; S = max slot footprint)
 
 so one jaxpr handles an arbitrary churn schedule — the trace is constant in
-the number of lifecycle events (they are data, not structure). Each tick:
+the number of lifecycle events (they are data, not structure). Each tick the
+provider's lifecycle step runs before the shared pipeline:
 
   1. *reclaim* (departure / shrink): tenants over target release their
-     coldest pages — demote-and-free: fast-resident reclaims end their
-     residency in the obs histograms, then pages return to the free pool
-     (owner=FREE, tier=NONE, hotness cleared).
+     coldest pages — demote-and-free; stale thrash-table entries for
+     reclaimed pages are invalidated.
   2. *grant* (arrival / grow): tenants under target receive free pages via
      a rank-interval partition of the pool (``select.pool_grant``; lower
-     slot ids win admission when the pool is over-subscribed). Granted
-     pages start unallocated and flow through the normal allocation gate
-     (upper bound + watermark) in the same tick.
+     slot ids win admission when the pool is over-subscribed).
   3. *slot reuse reset*: a fresh arrival in a previously used slot starts
      with clean controller state (promo_scale=1, thrash window zeroed).
-  4. *policy re-partition*: effective protections/bounds are recomputed
-     from the active mask every tick (``policy.repartition_policy``) —
-     departed slots stop reserving fast pages; oversubscribed protections
-     scale (weight-aware) to fit the fast tier.
-  5. the regular engine pipeline (allocation, hotness, Eq.1/Eq.2-regulated
-     migration, thrash mitigation, §IV-C obs) — all selection routed
-     through the ``segment_ranks`` fallback, which takes the owner vector
-     as a runtime array.
+  4. *policy re-partition*: effective protections/bounds recomputed from
+     the active mask every tick (``policy.repartition_policy``).
+  5. per-page access rates from the tenant-local schedule: page l's rate is
+     ``rates[owner[l], rank(l)]`` — the tenant's address space stays stable
+     while membership is constant and compacts on shrink.
 
-Per-page access rates come from the tenant-local schedule: page l's rate is
-``rates[owner[l], rank(l)]`` where rank is the page's index-order position
-among its tenant's pages — the tenant's address space stays stable while
-membership is constant and compacts on shrink.
+then steps 2–9 (allocation, hotness, Eq.1/Eq.2-regulated migration, thrash
+mitigation, §IV-C obs, perf model) are the SAME code the static engine
+runs — ``tests/test_tick_unification.py`` pins that a constant roster
+produces identical trajectories through both adapters.
 
 Conservation invariants (pinned by tests/test_churn.py property suite):
 every page is owned by at most one tenant (structural: owner is a single
@@ -47,20 +44,19 @@ int per page), departed tenants own zero pages, and
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import TieringConfig
-from repro.core import policy as P
-from repro.core import select as SEL
-from repro.core.engine import MODES, TickOutput
-from repro.core.state import (TIER_FAST, TIER_NONE, TIER_SLOW, Counters,
-                              ThrashTable, TierState, init_state, make_policy)
-from repro.obs import stats as OS
-from repro.obs import trace as OT
+from repro.core.engine import MODES, TickOutput  # noqa: F401  (re-export)
+from repro.core.state import TierState, init_state
+from repro.core.tick import dynamic_ownership, make_tick_core
+
+__all__ = ["ChurnSchedule", "churn_events", "make_churn_tick",
+           "run_churn_engine", "MODES", "TickOutput"]
 
 
 class ChurnSchedule(NamedTuple):
@@ -86,301 +82,14 @@ def make_churn_tick(cfg: TieringConfig, n_pages: int, mode: str = "equilibria",
     n_pages: size of the physical page pool (fast + slow capacity). Inputs
     per tick: ``(rates [T, S] f32, want [T] int32)``.
     """
-    assert mode in MODES, mode
-    T = cfg.n_tenants
-    L = n_pages
-    FREE = T
-    n_fast = cfg.n_fast_pages
-    wmark = max(int(np.ceil(n_fast * cfg.watermark_free)), 1)
-    base_pol = make_policy(cfg)
-    weights = None
-    if cfg.tenant_weights:
-        w = np.ones(T, np.float32)
-        for i, v in enumerate(cfg.tenant_weights[:T]):
-            w[i] = v
-        weights = jnp.asarray(w)
-
-    def by_tenant(x: jax.Array, owner: jax.Array) -> jax.Array:
-        return SEL.by_tenant_pooled(x, owner, T)
-
-    def select_pt(score, owner, mask, quotas, k_cap=k_max):
-        return SEL.select_top_quota(score, owner, mask, quotas, T, k_cap)
-
-    def tick(state: TierState, inputs) -> Tuple[TierState, TickOutput]:
-        rates, want = inputs
-        S = rates.shape[1]
-        t = state.t
-        owner = state.owner
-        tier = state.tier.astype(jnp.int32)
-        hot = state.hot
-        stats = state.stats
-        ring = state.ring
-        page_ids = jnp.arange(L, dtype=jnp.int32)
-        want = want.astype(jnp.int32)
-        active = want > 0
-        owner_c = jnp.minimum(owner, T - 1)        # gather-safe owner index
-
-        # ---- 1. lifecycle: reclaim (departure & shrink), coldest-first ----
-        owned = owner < FREE
-        cnt = by_tenant(owned.astype(jnp.int32), owner)
-        delta = want - cnt
-        arrived = (cnt == 0) & (delta > 0)
-        release_q = jnp.minimum(jnp.maximum(-delta, 0), cnt)
-        cold0 = (t - state.last_access).astype(jnp.float32) * 1e3 - hot
-        # k_cap = L: a departing tenant frees its whole footprint this tick
-        reclaimed = select_pt(cold0, owner, owned, release_q, k_cap=L)
-        rec_fast = reclaimed & (tier == TIER_FAST)
-        stats = OS.record_fast_exits(stats, rec_fast, owner_c, t)
-        freed_t = by_tenant(reclaimed.astype(jnp.int32), owner)
-        owner = jnp.where(reclaimed, FREE, owner)
-        tier = jnp.where(reclaimed, TIER_NONE, tier)
-        hot = jnp.where(reclaimed, 0.0, hot)
-        # a reclaimed page's thrash-table entry is stale: without this, a
-        # page promoted by the old tenant and re-granted soon after would
-        # count a false thrash hit against its new owner
-        tp = state.table.page
-        stale = (tp >= 0) & reclaimed[jnp.maximum(tp, 0)]
-        table0 = ThrashTable(page=jnp.where(stale, -1, tp),
-                             tick=jnp.where(stale, 0, state.table.tick))
-
-        # ---- 1b. lifecycle: grant from the free pool --------------------
-        need = jnp.maximum(delta, 0)
-        grant_owner = SEL.pool_grant(owner == FREE, need)
-        granted = grant_owner < FREE
-        owner = jnp.where(granted, grant_owner, owner)
-        owner_c = jnp.minimum(owner, T - 1)
-        owned = owner < FREE
-        alive = owned                         # every owned page is live
-
-        # ---- 1c. slot reuse: fresh arrivals get clean controller state --
-        promo_scale0 = jnp.where(arrived, 1.0, state.promo_scale)
-        steady0 = jnp.where(arrived, False, state.steady)
-        mitigated0 = jnp.where(arrived, False, state.mitigated_prev)
-        thrash_prev0 = jnp.where(arrived, state.counters.thrash_events,
-                                 state.thrash_prev)
-        usage_prev0 = jnp.where(arrived, 0, state.usage_prev)
-        freed_since0 = jnp.where(arrived, 0, state.freed_since + freed_t)
-
-        # ---- 1d. per-page accesses from the tenant-local schedule -------
-        prank = SEL.segment_ranks(jnp.where(owned, owner, T),
-                                  jnp.zeros((L,), jnp.int32), T)
-        accesses = jnp.where(
-            owned, rates[owner_c, jnp.minimum(prank, S - 1)], 0.0)
-
-        # ---- 1e. policy re-partition on membership ----------------------
-        pol = P.repartition_policy(base_pol, active, n_fast - wmark, weights)
-
-        # ---- 2. allocate granted pages (engine step 2, dynamic owner) ---
-        new = alive & (tier == TIER_NONE)
-        fast_usage = by_tenant((tier == TIER_FAST).astype(jnp.int32), owner)
-        fast_free = n_fast - fast_usage.sum()
-        if mode in ("equilibria", "memtis") and cfg.enable_upper_bound:
-            ranks = SEL.allocation_ranks(new, owner, T)
-            bound = pol.upper_bound[owner_c]
-            under_bound = (bound == 0) | (fast_usage[owner_c] + ranks < bound)
-        else:
-            under_bound = jnp.ones((L,), bool)
-        elig = new & under_bound
-        grank = SEL.masked_rank(elig)
-        go_fast = elig & (grank < jnp.maximum(fast_free - wmark, 0))
-        tier = jnp.where(go_fast, TIER_FAST, jnp.where(new, TIER_SLOW, tier))
-        alloc_t = by_tenant(new.astype(jnp.int32), owner)
-        stats = OS.record_fast_entries(stats, go_fast, t)
-
-        # ---- 3. hotness / recency ---------------------------------------
-        hot = jnp.where(alive, cfg.hot_decay * hot + accesses, 0.0)
-        last_access = jnp.where(new | (accesses > 0), t, state.last_access)
-
-        # ---- 4. contention ----------------------------------------------
-        fast_usage = by_tenant((tier == TIER_FAST).astype(jnp.int32), owner)
-        fast_free = n_fast - fast_usage.sum()
-        cand_pre = (tier == TIER_SLOW) & (hot >= cfg.promo_hot_threshold) & alive
-        demand_t = jnp.minimum(by_tenant(cand_pre.astype(jnp.int32), owner),
-                               k_max)
-        promo_demand = jnp.minimum(demand_t.sum(), k_max)
-        contended = fast_free < wmark + promo_demand
-
-        # ---- 5. demotion -------------------------------------------------
-        sync_quota = jnp.zeros((T,), jnp.int32)
-        if mode == "equilibria":
-            d_scan = P.eq1_demotion_scan(fast_usage, fast_usage, pol, contended)
-            if not cfg.enable_protection:
-                d_scan = jnp.where(contended, fast_usage.astype(jnp.float32),
-                                   0.0)
-            demand_other = jnp.minimum(promo_demand - demand_t, k_max)
-            needed_t = jnp.maximum(wmark + demand_other - fast_free, 0)
-            total_scan = jnp.maximum(d_scan.sum(), 1.0)
-            share = jnp.ceil(d_scan * jnp.minimum(
-                needed_t.astype(jnp.float32) / total_scan, 1.0)).astype(jnp.int32)
-            if cfg.enable_upper_bound:
-                sync_quota = P.upper_bound_demotion(fast_usage, pol)
-            quota = jnp.minimum(share + sync_quota, k_max)
-        elif mode == "tpp":
-            needed = jnp.maximum(2 * wmark - fast_free, 0)
-            quota = jnp.minimum(needed, k_max * T)
-        elif mode == "memtis":
-            sync_quota = P.upper_bound_demotion(fast_usage, pol)
-            quota = jnp.minimum(sync_quota, k_max)
-        else:  # static
-            quota = jnp.zeros((T,), jnp.int32)
-
-        age = (t - last_access).astype(jnp.float32)
-        cold_score = age * 1e3 - hot
-        fast_mask = tier == TIER_FAST
-        if mode == "tpp":
-            demoted = SEL.select_global(cold_score, fast_mask, quota,
-                                        k_max * T)
-        elif mode == "static":
-            demoted = jnp.zeros((L,), bool)
-        else:
-            demoted = select_pt(cold_score, owner, fast_mask, quota)
-        demo_t = by_tenant(demoted.astype(jnp.int32), owner)
-
-        thrash_new = by_tenant(P.thrash_hits(
-            table0, page_ids, demoted, t, cfg).astype(jnp.int32), owner)
-        stats = OS.record_fast_exits(stats, demoted, owner_c, t)
-        ring = OT.ring_record(ring, demoted, page_ids, owner_c, hot,
-                              OT.DIR_DEMOTE, t)
-        tier = jnp.where(demoted, TIER_SLOW, tier)
-        fast_usage = fast_usage - demo_t
-        fast_free = n_fast - fast_usage.sum()
-
-        # ---- 6. promotion ------------------------------------------------
-        cand = ((tier == TIER_SLOW) & (hot >= cfg.promo_hot_threshold)
-                & alive & ~demoted)
-        cand_t = by_tenant(cand.astype(jnp.int32), owner)
-        throttled = jnp.zeros((T,), bool)
-        if mode == "equilibria":
-            p_base = jnp.full((T,), float(cfg.p_base), jnp.float32)
-            if cfg.enable_promo_throttle:
-                p_scan, throttled = P.eq2_promotion_scan(p_base, fast_usage,
-                                                         pol, contended, cfg)
-            else:
-                p_scan = p_base
-            p_scan = p_scan * promo_scale0
-            p_quota = jnp.minimum(p_scan.astype(jnp.int32), k_max)
-        elif mode in ("tpp", "memtis"):
-            p_quota = jnp.full((T,), cfg.p_base, jnp.int32)
-        else:
-            p_quota = jnp.zeros((T,), jnp.int32)
-
-        p_quota = jnp.minimum(p_quota, jnp.minimum(cand_t, k_max))
-        headroom = jnp.maximum(fast_free - wmark, 0)
-        total = p_quota.sum()
-        scale = jnp.where(total > headroom,
-                          headroom.astype(jnp.float32) / jnp.maximum(total, 1),
-                          1.0)
-        p_quota = jnp.floor(p_quota.astype(jnp.float32) * scale).astype(jnp.int32)
-
-        if mode == "tpp":
-            promoted = SEL.select_global(hot, cand, p_quota.sum(), k_max * T)
-        elif mode == "static":
-            promoted = jnp.zeros((L,), bool)
-        else:
-            promoted = select_pt(hot, owner, cand, p_quota)
-        promo_t = by_tenant(promoted.astype(jnp.int32), owner)
-        tier = jnp.where(promoted, TIER_FAST, tier)
-        table = P.thrash_record_promotions(table0, page_ids, promoted, t)
-        stats = OS.record_fast_entries(stats, promoted, t)
-        ring = OT.ring_record(ring, promoted, page_ids, owner_c, hot,
-                              OT.DIR_PROMOTE, t)
-
-        # ---- 6b. synchronous upper-bound demotion -----------------------
-        sync2_t = jnp.zeros((T,), jnp.int32)
-        if mode in ("equilibria", "memtis") and cfg.enable_upper_bound:
-            fast_usage2 = by_tenant((tier == TIER_FAST).astype(jnp.int32),
-                                    owner)
-            over2 = jnp.where(pol.upper_bound > 0,
-                              jnp.maximum(fast_usage2 - pol.upper_bound, 0), 0)
-            over2 = jnp.minimum(over2, k_max)
-            cold2 = (t - last_access).astype(jnp.float32) * 1e3 - hot
-            sync_dem = select_pt(cold2, owner, tier == TIER_FAST, over2)
-            thrash_new = thrash_new + by_tenant(P.thrash_hits(
-                table, page_ids, sync_dem, t, cfg).astype(jnp.int32), owner)
-            stats = OS.record_fast_exits(stats, sync_dem, owner_c, t)
-            ring = OT.ring_record(ring, sync_dem, page_ids, owner_c, hot,
-                                  OT.DIR_DEMOTE, t)
-            tier = jnp.where(sync_dem, TIER_SLOW, tier)
-            sync2_t = by_tenant(sync_dem.astype(jnp.int32), owner)
-            demo_t = demo_t + sync2_t
-
-        # ---- 7. counters -------------------------------------------------
-        c = state.counters
-        counters = Counters(
-            promotions=c.promotions + promo_t,
-            demotions=c.demotions + demo_t,
-            attempted_promotions=c.attempted_promotions + cand_t,
-            reclaims=c.reclaims + freed_t,
-            allocations=c.allocations + alloc_t,
-            thrash_events=c.thrash_events + thrash_new,
-            sync_demotions=c.sync_demotions
-            + jnp.minimum(sync_quota, demo_t) + sync2_t,
-        )
-        fast_usage = by_tenant((tier == TIER_FAST).astype(jnp.int32), owner)
-        slow_usage = by_tenant((tier == TIER_SLOW).astype(jnp.int32), owner)
-
-        # ---- 7b. observability ------------------------------------------
-        demo_att = (jnp.broadcast_to((quota + T - 1) // T, (T,))
-                    if quota.ndim == 0 else quota)
-        below_prot = OS.below_protection(fast_usage, slow_usage,
-                                         pol.lower_protection)
-        stats = OS.update_tick(
-            stats, promo_attempts=cand_t, promo_success=promo_t,
-            demo_attempts=jnp.minimum(demo_att, k_max) + sync2_t,
-            demo_success=demo_t,
-            thrash_new=thrash_new, contended=contended, throttled=throttled,
-            below_protection=below_prot, decay=cfg.obs_window_decay)
-
-        new_state = TierState(
-            tier=tier.astype(jnp.int8), hot=hot, last_access=last_access,
-            owner=owner,
-            counters=counters, promo_scale=promo_scale0,
-            thrash_prev=thrash_prev0, usage_prev=usage_prev0,
-            freed_since=freed_since0, steady=steady0,
-            mitigated_prev=mitigated0,
-            table=table, stats=stats, ring=ring, t=t + 1)
-
-        # ---- 8. periodic controller -------------------------------------
-        def run_ctrl(s: TierState) -> TierState:
-            out = P.thrash_controller(s, fast_usage + slow_usage, cfg)
-            return s._replace(promo_scale=out.promo_scale, steady=out.steady,
-                              table=out.table, thrash_prev=out.thrash_prev,
-                              usage_prev=out.usage_prev,
-                              freed_since=out.freed_since,
-                              mitigated_prev=out.mitigated_prev)
-
-        new_state = jax.lax.cond(
-            (t + 1) % cfg.controller_period == 0, run_ctrl, lambda s: s,
-            new_state)
-
-        # ---- 9. perf model ----------------------------------------------
-        a_fast = by_tenant(accesses * (tier == TIER_FAST), owner)
-        a_slow = by_tenant(accesses * (tier == TIER_SLOW), owner)
-        a_tot = a_fast + a_slow
-        migrations = (promo_t + demo_t).sum().astype(jnp.float32)
-        lat = jnp.where(
-            a_tot > 0,
-            (a_fast * cfg.lat_fast + a_slow * cfg.lat_slow)
-            / jnp.maximum(a_tot, 1e-9),
-            cfg.lat_fast) + migrations * cfg.migration_cost
-        thru = jnp.where(a_tot > 0, a_tot / lat, 0.0)
-
-        out = TickOutput(
-            fast_usage=fast_usage, slow_usage=slow_usage,
-            promotions=promo_t, demotions=demo_t,
-            throughput=thru, latency=lat, promo_scale=new_state.promo_scale,
-            thrash_events=counters.thrash_events,
-            fast_free=n_fast - fast_usage.sum(),
-            attempted_promotions=cand_t,
-            pool_free=(owner == FREE).sum())
-        return new_state, out
-
-    return tick
+    provider = dynamic_ownership(cfg, n_pages, k_max=k_max)
+    return make_tick_core(cfg, provider, mode=mode, k_max=k_max)
 
 
 def run_churn_engine(cfg: TieringConfig, schedule: ChurnSchedule,
                      mode: str = "equilibria", k_max: int = 256,
-                     n_pages: int = None) -> Tuple[TierState, TickOutput]:
+                     n_pages: Optional[int] = None
+                     ) -> Tuple[TierState, TickOutput]:
     """Run a full churn schedule (scan over ticks) from an all-free pool.
 
     The physical pool defaults to the configured capacity

@@ -1,6 +1,7 @@
-"""The tiering engine: one jittable `tick` implementing allocation, hotness
-tracking, regulated demotion/promotion, thrashing mitigation and the perf
-model. Modes select the policy:
+"""The static-ownership tiering engine: a thin adapter over the unified
+tick core (core/tick.py) for fixed tenant rosters.
+
+Modes select the policy:
 
   equilibria — the paper (Eq.1 + Eq.2 + upper bound + thrash mitigation)
   tpp        — baseline Linux/TPP: watermark-driven *global-LRU* demotion,
@@ -9,50 +10,36 @@ model. Modes select the policy:
   static     — tier fixed at allocation, no migration
 
 Page ownership is static (tenant i owns a fixed logical range); liveness and
-tier are dynamic.
+tier are dynamic. The pipeline itself — allocation, hotness, regulated
+demotion/promotion, thrash mitigation, §IV-C obs and the perf model — lives
+in ``core.tick.make_tick_core``; this module only binds the static
+ownership provider (``core.tick.static_ownership``), which selects the
+fastest selection strategy for the trace-constant owner vector:
 
-The tick is tenant-batched (core/select.py): per-tenant selection is one
-batched padded-row top_k (contiguous layouts) or one composite-key sort
-(arbitrary layouts), per-tenant reductions are cumsum/boundary-gathers or
-scatter-adds, and migration accounting runs over the compact [T, k]
-candidate stream — so trace time, jaxpr size and kernel count are all
-constant in T and one compiled tick serves any tenant count (T=64+,
-L=256k+ supported). ``impl="unrolled"`` rebuilds the seed engine
-(per-tenant top_k loops + [T, L] one-hot matmuls) for equivalence tests
-and as the scale benchmark's baseline.
+  * contiguous layouts (what ``build_trace`` produces): padded-row batched
+    top_k + cumsum/boundary-gather reductions — trace time, jaxpr size and
+    kernel count constant in T (T=64+, L=256k+ supported)
+  * arbitrary permutations: composite-key sort + scatter-add reductions
+  * ``impl="unrolled"``: the seed engine (per-tenant top_k loops + [T, L]
+    one-hot matmuls), kept for the equivalence suite and as the scale
+    benchmark's baseline
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import TieringConfig
-from repro.core import policy as P
-from repro.core import select as SEL
-from repro.core.state import (TIER_FAST, TIER_NONE, TIER_SLOW, Counters,
-                              TenantPolicy, TierState, init_state, make_policy)
-from repro.obs import stats as OS
-from repro.obs import trace as OT
+from repro.core.state import TierState, init_state
+from repro.core.tick import (MODES, TickOutput, make_tick_core,
+                             static_ownership)
 
-MODES = ("equilibria", "tpp", "memtis", "static")
 IMPLS = ("batched", "unrolled")
 
-
-class TickOutput(NamedTuple):
-    fast_usage: jax.Array      # [T] pages
-    slow_usage: jax.Array      # [T]
-    promotions: jax.Array      # [T] this tick
-    demotions: jax.Array       # [T]
-    throughput: jax.Array      # [T] accesses per latency-unit (1.0 = all-fast)
-    latency: jax.Array         # [T] mean access latency (units of lat_fast)
-    promo_scale: jax.Array     # [T]
-    thrash_events: jax.Array   # [T] cumulative
-    fast_free: jax.Array       # scalar
-    attempted_promotions: jax.Array  # [T] candidates this tick (obs)
-    pool_free: jax.Array       # scalar: unallocated pages (churn: free pool)
+__all__ = ["MODES", "IMPLS", "TickOutput", "make_tick", "run_engine"]
 
 
 def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
@@ -63,341 +50,15 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
     constant in T) or "unrolled" (the seed engine: per-tenant top_k loops and
     [T, L] one-hot matmuls — kept for equivalence tests and benchmarks).
     """
-    assert mode in MODES, mode
     assert impl in IMPLS, impl
-    T = cfg.n_tenants
-    L = owner.shape[0]
-    owner_j = jnp.asarray(owner, jnp.int32)
-    n_fast = cfg.n_fast_pages
-    wmark = max(int(np.ceil(n_fast * cfg.watermark_free)), 1)
-    pol: TenantPolicy = make_policy(cfg)
-
-    if impl == "unrolled":
-        owner_oh = jnp.asarray(
-            (owner[None, :] == np.arange(T)[:, None]).astype(np.float32))
-        owner_oh_i = owner_oh.astype(jnp.int32)
-
-        def by_tenant(x: jax.Array) -> jax.Array:
-            m = owner_oh if jnp.issubdtype(x.dtype, jnp.floating) else owner_oh_i
-            return m @ x
-
-        def select_pt(score, active, quotas):
-            mask = SEL.select_top_quota_unrolled(
-                score, owner_oh.astype(bool) & active[None], quotas, k_max)
-            return SEL.Selection(mask, None, None, None)
-
-        def alloc_ranks(new):
-            return SEL.allocation_ranks_unrolled(new, owner_j, T)
-    elif (layout := SEL.plan_layout(owner, T)) is not None:
-        # contiguous ownership (build_trace's layout): padded-row top_k and
-        # cumsum/boundary-gather reductions — the fastest path by far
-        def by_tenant(x: jax.Array) -> jax.Array:
-            return SEL.by_tenant_contiguous(x, layout)
-
-        def select_pt(score, active, quotas):
-            return SEL.select_top_quota_rows(score, active, quotas, layout,
-                                             k_max)
-
-        def alloc_ranks(new):
-            return SEL.allocation_ranks_contiguous(new, layout)
-    else:
-        # arbitrary owner permutation: composite-sort ranks + scatter-adds
-        def by_tenant(x: jax.Array) -> jax.Array:
-            return SEL.by_tenant_scatter(x, owner_j, T)
-
-        def select_pt(score, active, quotas):
-            mask = SEL.select_top_quota(score, owner_j, active, quotas, T,
-                                        k_max)
-            return SEL.Selection(mask, None, None, None)
-
-        def alloc_ranks(new):
-            return SEL.allocation_ranks(new, owner_j, T)
-
-    def tick(state: TierState, inputs) -> Tuple[TierState, TickOutput]:
-        accesses, alive = inputs
-        t = state.t
-        tier = state.tier.astype(jnp.int32)
-        page_ids = jnp.arange(L, dtype=jnp.int32)
-
-        # Migration accounting (thrash table, residency histogram, event
-        # ring) runs over the selection's compact [T, k] candidate stream
-        # when available (contiguous batched path) — scatters over T*k lanes
-        # instead of L — and falls back to the full [L] masks otherwise.
-        def sel_counts(sel: SEL.Selection) -> jax.Array:
-            if sel.counts is not None:
-                return sel.counts
-            return by_tenant(sel.mask.astype(jnp.int32))
-
-        def sel_tenants(sel: SEL.Selection) -> jax.Array:
-            return jnp.broadcast_to(
-                jnp.arange(T, dtype=jnp.int32)[:, None], sel.take.shape)
-
-        def sel_thrash(tbl, sel: SEL.Selection) -> jax.Array:
-            if sel.pages is None:
-                return by_tenant(P.thrash_hits(
-                    tbl, page_ids, sel.mask, t, cfg).astype(jnp.int32))
-            hits = P.thrash_hits(tbl, sel.pages, sel.take, t, cfg)
-            return hits.sum(axis=1).astype(jnp.int32)
-
-        def sel_record_promos(tbl, sel: SEL.Selection):
-            if sel.pages is None:
-                return P.thrash_record_promotions(tbl, page_ids, sel.mask, t)
-            return P.thrash_record_promotions(tbl, sel.pages, sel.take, t)
-
-        def sel_exits(st, sel: SEL.Selection):
-            if sel.pages is None:
-                return OS.record_fast_exits(st, sel.mask, owner_j, t)
-            return OS.record_fast_exits_at(st, sel.pages, sel.take,
-                                           sel_tenants(sel), t)
-
-        def sel_ring(rg, sel: SEL.Selection, hotv, direction):
-            if sel.pages is None:
-                return OT.ring_record(rg, sel.mask, page_ids, owner_j, hotv,
-                                      direction, t)
-            return OT.ring_record(rg, sel.take, sel.pages, sel_tenants(sel),
-                                  hotv[sel.pages], direction, t)
-
-        # ---- 1. free dead pages -------------------------------------------
-        died = (tier != TIER_NONE) & ~alive
-        freed_t = by_tenant(died.astype(jnp.int32))
-        # fast-resident pages that die end their residency here (obs)
-        stats = OS.record_fast_exits(state.stats, died & (tier == TIER_FAST),
-                                     owner_j, t)
-        tier = jnp.where(died, TIER_NONE, tier)
-
-        # ---- 2. allocate new pages ----------------------------------------
-        new = alive & (tier == TIER_NONE)
-        fast_usage = by_tenant((tier == TIER_FAST).astype(jnp.int32))
-        fast_free = n_fast - fast_usage.sum()
-        # per-tenant upper bound gating of *fast* placement
-        if mode in ("equilibria", "memtis") and cfg.enable_upper_bound:
-            ranks = alloc_ranks(new)
-            bound = pol.upper_bound[owner_j]
-            under_bound = (bound == 0) | (fast_usage[owner_j] + ranks < bound)
-        else:
-            under_bound = jnp.ones((L,), bool)
-        elig = new & under_bound
-        grank = SEL.masked_rank(elig)
-        go_fast = elig & (grank < jnp.maximum(fast_free - wmark, 0))
-        tier = jnp.where(go_fast, TIER_FAST, jnp.where(new, TIER_SLOW, tier))
-        alloc_t = by_tenant(new.astype(jnp.int32))
-        stats = OS.record_fast_entries(stats, go_fast, t)
-
-        # ---- 3. hotness / recency -----------------------------------------
-        hot = jnp.where(alive, cfg.hot_decay * state.hot + accesses, 0.0)
-        last_access = jnp.where(new | (accesses > 0), t, state.last_access)
-
-        # ---- 4. contention ------------------------------------------------
-        # Local memory is contended when free space cannot absorb both the
-        # watermark and the pending promotion demand (kswapd-style: promotion
-        # pressure drives background demotion, §IV-D).
-        fast_usage = by_tenant((tier == TIER_FAST).astype(jnp.int32))
-        fast_free = n_fast - fast_usage.sum()
-        cand_pre = (tier == TIER_SLOW) & (hot >= cfg.promo_hot_threshold) & alive
-        demand_t = jnp.minimum(by_tenant(cand_pre.astype(jnp.int32)), k_max)
-        promo_demand = jnp.minimum(demand_t.sum(), k_max)
-        contended = fast_free < wmark + promo_demand
-
-        # ---- 5. demotion ---------------------------------------------------
-        sync_quota = jnp.zeros((T,), jnp.int32)
-        if mode == "equilibria":
-            d_scan = P.eq1_demotion_scan(fast_usage, fast_usage, pol, contended)
-            if not cfg.enable_protection:
-                # ablation: proportional pressure without protection
-                d_scan = jnp.where(contended, fast_usage.astype(jnp.float32), 0.0)
-            # Eq.1 sets each tenant's *share* of reclaim work; the total is
-            # kswapd-style demand-driven: free enough for the watermark plus
-            # pending promotions, no more (work-conserving donation, §V-B3).
-            # A tenant's OWN promotion demand never drives its own demotion
-            # (that would be pure churn); only neighbors' demand evicts it.
-            demand_other = jnp.minimum(promo_demand - demand_t, k_max)
-            needed_t = jnp.maximum(wmark + demand_other - fast_free, 0)
-            total_scan = jnp.maximum(d_scan.sum(), 1.0)
-            share = jnp.ceil(d_scan * jnp.minimum(
-                needed_t.astype(jnp.float32) / total_scan, 1.0)).astype(jnp.int32)
-            if cfg.enable_upper_bound:
-                sync_quota = P.upper_bound_demotion(fast_usage, pol)
-            quota = jnp.minimum(share + sync_quota, k_max)
-        elif mode == "tpp":
-            needed = jnp.maximum(2 * wmark - fast_free, 0)
-            quota = jnp.minimum(needed, k_max * T)  # global
-        elif mode == "memtis":
-            sync_quota = P.upper_bound_demotion(fast_usage, pol)
-            quota = jnp.minimum(sync_quota, k_max)
-        else:  # static
-            quota = jnp.zeros((T,), jnp.int32)
-
-        age = (t - last_access).astype(jnp.float32)
-        cold_score = age * 1e3 - hot          # LRU order, hotness tiebreak
-        fast_mask = tier == TIER_FAST
-        if mode == "tpp":
-            dsel = SEL.Selection(
-                SEL.select_global(cold_score, fast_mask, quota, k_max * T),
-                None, None, None)
-        elif mode == "static":
-            dsel = SEL.Selection(jnp.zeros((L,), bool), None, None, None)
-        else:
-            dsel = select_pt(cold_score, fast_mask, quota)
-        demoted = dsel.mask
-        demo_t = sel_counts(dsel)
-
-        # thrash detection on demotions (§IV-F)
-        thrash_new = sel_thrash(state.table, dsel)
-        stats = sel_exits(stats, dsel)
-        ring = sel_ring(state.ring, dsel, hot, OT.DIR_DEMOTE)
-        tier = jnp.where(demoted, TIER_SLOW, tier)
-        fast_usage = fast_usage - demo_t
-        fast_free = n_fast - fast_usage.sum()
-
-        # ---- 6. promotion ---------------------------------------------------
-        # just-demoted pages are not promotion candidates this tick
-        cand = (tier == TIER_SLOW) & (hot >= cfg.promo_hot_threshold) & alive & ~demoted
-        cand_t = by_tenant(cand.astype(jnp.int32))
-        throttled = jnp.zeros((T,), bool)
-        if mode == "equilibria":
-            p_base = jnp.full((T,), float(cfg.p_base), jnp.float32)
-            if cfg.enable_promo_throttle:
-                p_scan, throttled = P.eq2_promotion_scan(p_base, fast_usage,
-                                                         pol, contended, cfg)
-            else:
-                p_scan = p_base
-            p_scan = p_scan * state.promo_scale        # thrash mitigation
-            p_quota = jnp.minimum(p_scan.astype(jnp.int32), k_max)
-        elif mode in ("tpp", "memtis"):
-            p_quota = jnp.full((T,), cfg.p_base, jnp.int32)  # unregulated
-        else:
-            p_quota = jnp.zeros((T,), jnp.int32)
-
-        # never overfill: cap total promotions by free fast capacity.
-        # NOTE: promotions may transiently exceed a tenant's upper bound —
-        # the allocating thread then demotes synchronously in the same tick
-        # (paper §IV-D); that promote->sync-demote cycle is exactly the
-        # thrashing signature §IV-F detects.
-        p_quota = jnp.minimum(p_quota, jnp.minimum(cand_t, k_max))
-        headroom = jnp.maximum(fast_free - wmark, 0)
-        total = p_quota.sum()
-        scale = jnp.where(total > headroom,
-                          headroom.astype(jnp.float32) / jnp.maximum(total, 1),
-                          1.0)
-        p_quota = jnp.floor(p_quota.astype(jnp.float32) * scale).astype(jnp.int32)
-
-        if mode == "tpp":
-            psel = SEL.Selection(
-                SEL.select_global(hot, cand, p_quota.sum(), k_max * T),
-                None, None, None)
-        elif mode == "static":
-            psel = SEL.Selection(jnp.zeros((L,), bool), None, None, None)
-        else:
-            psel = select_pt(hot, cand, p_quota)
-        promoted = psel.mask
-        promo_t = sel_counts(psel)
-        tier = jnp.where(promoted, TIER_FAST, tier)
-        table = sel_record_promos(state.table, psel)
-        stats = OS.record_fast_entries(stats, promoted, t)
-        ring = sel_ring(ring, psel, hot, OT.DIR_PROMOTE)
-
-        # ---- 6b. synchronous upper-bound demotion (allocation path, §IV-D):
-        # promotions that pushed a tenant past its bound are shed in the same
-        # tick by the "allocating thread" — these demotions hit the thrash
-        # table immediately when they evict recently-promoted pages.
-        sync2_t = jnp.zeros((T,), jnp.int32)
-        if mode in ("equilibria", "memtis") and cfg.enable_upper_bound:
-            fast_usage2 = by_tenant((tier == TIER_FAST).astype(jnp.int32))
-            over2 = jnp.where(pol.upper_bound > 0,
-                              jnp.maximum(fast_usage2 - pol.upper_bound, 0), 0)
-            over2 = jnp.minimum(over2, k_max)
-            age2 = (t - last_access).astype(jnp.float32)
-            cold2 = age2 * 1e3 - hot
-            ssel = select_pt(cold2, tier == TIER_FAST, over2)
-            sync_dem = ssel.mask
-            thr2 = sel_thrash(table, ssel)
-            thrash_new = thrash_new + thr2
-            stats = sel_exits(stats, ssel)
-            ring = sel_ring(ring, ssel, hot, OT.DIR_DEMOTE)
-            tier = jnp.where(sync_dem, TIER_SLOW, tier)
-            sync2_t = sel_counts(ssel)
-            demo_t = demo_t + sync2_t
-
-        # ---- 7. counters ----------------------------------------------------
-        c = state.counters
-        counters = Counters(
-            promotions=c.promotions + promo_t,
-            demotions=c.demotions + demo_t,
-            attempted_promotions=c.attempted_promotions + cand_t,
-            reclaims=c.reclaims + freed_t,
-            allocations=c.allocations + alloc_t,
-            thrash_events=c.thrash_events + thrash_new,
-            sync_demotions=c.sync_demotions
-            + jnp.minimum(sync_quota, demo_t) + sync2_t,
-        )
-        fast_usage = by_tenant((tier == TIER_FAST).astype(jnp.int32))
-        slow_usage = by_tenant((tier == TIER_SLOW).astype(jnp.int32))
-
-        # ---- 7b. observability (obs/, §IV-C) --------------------------------
-        # tpp's quota is one global scan budget; split it evenly so
-        # demo_success_ratio stays comparable across modes
-        demo_att = (jnp.broadcast_to((quota + T - 1) // T, (T,))
-                    if quota.ndim == 0 else quota)
-        below_prot = OS.below_protection(fast_usage, slow_usage,
-                                         pol.lower_protection)
-        # sync upper-bound demotions (6b) bypass the step-5 quota; count them
-        # on both sides so demo_success_ratio stays <= 1
-        stats = OS.update_tick(
-            stats, promo_attempts=cand_t, promo_success=promo_t,
-            demo_attempts=jnp.minimum(demo_att, k_max) + sync2_t,
-            demo_success=demo_t,
-            thrash_new=thrash_new, contended=contended, throttled=throttled,
-            below_protection=below_prot, decay=cfg.obs_window_decay)
-
-        new_state = TierState(
-            tier=tier.astype(jnp.int8), hot=hot, last_access=last_access,
-            owner=state.owner,
-            counters=counters, promo_scale=state.promo_scale,
-            thrash_prev=state.thrash_prev, usage_prev=state.usage_prev,
-            freed_since=state.freed_since + freed_t, steady=state.steady,
-            mitigated_prev=state.mitigated_prev,
-            table=table, stats=stats, ring=ring, t=t + 1)
-
-        # ---- 8. periodic controller (§IV-F) ---------------------------------
-        def run_ctrl(s: TierState) -> TierState:
-            out = P.thrash_controller(s, fast_usage + slow_usage, cfg)
-            return s._replace(promo_scale=out.promo_scale, steady=out.steady,
-                              table=out.table, thrash_prev=out.thrash_prev,
-                              usage_prev=out.usage_prev,
-                              freed_since=out.freed_since,
-                              mitigated_prev=out.mitigated_prev)
-
-        new_state = jax.lax.cond(
-            (t + 1) % cfg.controller_period == 0, run_ctrl, lambda s: s,
-            new_state)
-
-        # ---- 9. perf model ---------------------------------------------------
-        a_fast = by_tenant(accesses * (tier == TIER_FAST))
-        a_slow = by_tenant(accesses * (tier == TIER_SLOW))
-        a_tot = a_fast + a_slow
-        migrations = (promo_t + demo_t).sum().astype(jnp.float32)
-        lat = jnp.where(
-            a_tot > 0,
-            (a_fast * cfg.lat_fast + a_slow * cfg.lat_slow) / jnp.maximum(a_tot, 1e-9),
-            cfg.lat_fast) + migrations * cfg.migration_cost
-        thru = jnp.where(a_tot > 0, a_tot / lat, 0.0)
-
-        out = TickOutput(
-            fast_usage=fast_usage, slow_usage=slow_usage,
-            promotions=promo_t, demotions=demo_t,
-            throughput=thru, latency=lat, promo_scale=new_state.promo_scale,
-            thrash_events=counters.thrash_events,
-            fast_free=n_fast - fast_usage.sum(),
-            attempted_promotions=cand_t,
-            pool_free=(tier == TIER_NONE).sum())
-        return new_state, out
-
-    return tick
+    provider = static_ownership(cfg, owner, k_max=k_max, impl=impl)
+    return make_tick_core(cfg, provider, mode=mode, k_max=k_max)
 
 
 def run_engine(cfg: TieringConfig, owner: np.ndarray, accesses: np.ndarray,
                alive: np.ndarray, mode: str = "equilibria",
-               k_max: int = 256, impl: str = "batched") -> TickOutput:
+               k_max: int = 256, impl: str = "batched"
+               ) -> Tuple[TierState, TickOutput]:
     """Run the full trace (scan over ticks). accesses/alive: [ticks, L]."""
     tick = make_tick(cfg, owner, mode, k_max, impl=impl)
     state = init_state(cfg, owner.shape[0], owner=owner)

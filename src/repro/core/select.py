@@ -31,7 +31,7 @@ the scale benchmark's baseline).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -248,3 +248,94 @@ def allocation_ranks_unrolled(new: jax.Array, owner: jax.Array,
         m = new & (owner == ti)
         ranks = jnp.where(m, masked_rank(m), ranks)
     return ranks
+
+
+# ------------------------------------------------------------------------
+# Selection strategies: the seam between the unified tick core (core/tick.py)
+# and the per-tenant primitives above. A Strategy bundles the three
+# owner-dependent operations the tick needs; every callable takes the
+# *runtime* owner vector so one tick body serves both a trace-constant
+# ownership (static engine — the owner argument is ignored in favor of the
+# layout baked in at trace time) and ownership-as-state (churn engine).
+# ------------------------------------------------------------------------
+class Strategy(NamedTuple):
+    """Owner-parameterized selection/reduction strategy for one tick flavor.
+
+    by_tenant(x [L], owner [L]) -> [T] per-tenant sum
+    select(score [L], owner [L], active [L], quotas [T]) -> Selection
+    alloc_ranks(new [L], owner [L]) -> [L] index-order rank among the
+        tenant's ``new`` pages (values outside ``new`` unspecified)
+    """
+    by_tenant: Callable[[jax.Array, jax.Array], jax.Array]
+    select: Callable[..., Selection]
+    alloc_ranks: Callable[[jax.Array, jax.Array], jax.Array]
+
+
+def static_strategy(owner: np.ndarray, n_tenants: int, k_max: int,
+                    impl: str = "batched") -> Strategy:
+    """Strategy for a trace-constant owner vector. Picks the fastest
+    applicable primitive set (padded-row batched top_k for contiguous
+    layouts, composite-sort fallback for arbitrary permutations, or the
+    seed's unrolled per-tenant loops for the equivalence suite)."""
+    T = n_tenants
+    owner_j = jnp.asarray(owner, jnp.int32)
+    if impl == "unrolled":
+        owner_oh = jnp.asarray(
+            (owner[None, :] == np.arange(T)[:, None]).astype(np.float32))
+        owner_oh_i = owner_oh.astype(jnp.int32)
+
+        def by_tenant(x: jax.Array, _owner: jax.Array) -> jax.Array:
+            m = owner_oh if jnp.issubdtype(x.dtype, jnp.floating) else owner_oh_i
+            return m @ x
+
+        def select(score, _owner, active, quotas):
+            mask = select_top_quota_unrolled(
+                score, owner_oh.astype(bool) & active[None], quotas, k_max)
+            return Selection(mask, None, None, None)
+
+        def alloc_ranks(new, _owner):
+            return allocation_ranks_unrolled(new, owner_j, T)
+    elif (layout := plan_layout(owner, T)) is not None:
+        # contiguous ownership (build_trace's layout): padded-row top_k and
+        # cumsum/boundary-gather reductions — the fastest path by far
+        def by_tenant(x: jax.Array, _owner: jax.Array) -> jax.Array:
+            return by_tenant_contiguous(x, layout)
+
+        def select(score, _owner, active, quotas):
+            return select_top_quota_rows(score, active, quotas, layout, k_max)
+
+        def alloc_ranks(new, _owner):
+            return allocation_ranks_contiguous(new, layout)
+    else:
+        # arbitrary owner permutation: composite-sort ranks + scatter-adds
+        def by_tenant(x: jax.Array, _owner: jax.Array) -> jax.Array:
+            return by_tenant_scatter(x, owner_j, T)
+
+        def select(score, _owner, active, quotas):
+            return Selection(
+                select_top_quota(score, owner_j, active, quotas, T, k_max),
+                None, None, None)
+
+        def alloc_ranks(new, _owner):
+            return allocation_ranks(new, owner_j, T)
+    return Strategy(by_tenant, select, alloc_ranks)
+
+
+def dynamic_strategy(n_tenants: int, k_max: int) -> Strategy:
+    """Strategy for ownership-as-state: the owner vector is a runtime array
+    (never a trace constant), so every call routes through the segment-sort
+    fallback and the pool-sentinel-tolerant scatter reductions."""
+    T = n_tenants
+
+    def by_tenant(x: jax.Array, owner: jax.Array) -> jax.Array:
+        return by_tenant_pooled(x, owner, T)
+
+    def select(score, owner, active, quotas):
+        return Selection(
+            select_top_quota(score, owner, active, quotas, T, k_max),
+            None, None, None)
+
+    def alloc_ranks(new, owner):
+        return allocation_ranks(new, owner, T)
+
+    return Strategy(by_tenant, select, alloc_ranks)

@@ -8,7 +8,7 @@ Fig. 2: 252ns CXL vs ~100ns local, ~0.1 bandwidth ratio).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -27,25 +27,56 @@ from repro.obs.trace import decode_ring
 
 @dataclass
 class SimResult:
+    """One simulated run's collected telemetry (host-side numpy).
+
+    Fields
+    ------
+    mode : str
+        Engine mode the run used (``equilibria``/``tpp``/``memtis``/``static``).
+    fast_usage, slow_usage : np.ndarray
+        [ticks, T] per-tenant page counts in each tier.
+    promotions, demotions : np.ndarray
+        [ticks, T] migrations performed that tick.
+    throughput, latency : np.ndarray
+        [ticks, T] perf-model outputs (latency in units of ``lat_fast``).
+    promo_scale : np.ndarray
+        [ticks, T] thrash-mitigation promotion multiplier trajectory.
+    thrash_events : np.ndarray
+        [ticks, T] *cumulative* §IV-F thrash detections.
+    attempted : np.ndarray, optional
+        [ticks, T] promotion candidates scanned that tick (obs).
+    tier_stats : dict, optional
+        ``obs.stats.stats_summary`` export decoded from the final state.
+    migrations : np.ndarray, optional
+        Decoded migration event ring (``obs.trace.EVENT_DTYPE`` records).
+    migrations_dropped : int
+        Ring-capacity overflow count (events overwritten before decode).
+    lower_protection : tuple
+        The run's configured per-tenant protections (for the detectors).
+    active : np.ndarray, optional
+        [ticks, T] bool tenant roster. Churn runs take it from the
+        schedule; static runs derive it from trace liveness. The
+        churn-aware pathology detectors use it to tolerate mid-window
+        departures.
+    pool_free : np.ndarray, optional
+        [ticks] unallocated pages (the churn engine's free pool).
+    """
     mode: str
-    fast_usage: np.ndarray      # [ticks, T]
-    slow_usage: np.ndarray      # [ticks, T]
-    promotions: np.ndarray      # [ticks, T]
-    demotions: np.ndarray       # [ticks, T]
-    throughput: np.ndarray      # [ticks, T]
-    latency: np.ndarray         # [ticks, T]
-    promo_scale: np.ndarray     # [ticks, T]
-    thrash_events: np.ndarray   # [ticks, T] cumulative
-    attempted: np.ndarray = None        # [ticks, T] promotion candidates
-    # observability (obs/): decoded from the final engine state
-    tier_stats: Optional[dict] = None   # obs.stats.stats_summary output
-    migrations: Optional[np.ndarray] = None  # obs.trace.EVENT_DTYPE records
+    fast_usage: np.ndarray
+    slow_usage: np.ndarray
+    promotions: np.ndarray
+    demotions: np.ndarray
+    throughput: np.ndarray
+    latency: np.ndarray
+    promo_scale: np.ndarray
+    thrash_events: np.ndarray
+    attempted: Optional[np.ndarray] = None
+    tier_stats: Optional[dict] = None
+    migrations: Optional[np.ndarray] = None
     migrations_dropped: int = 0
     lower_protection: tuple = ()
-    # dynamic-ownership runs (core/churn.py): per-tick tenant activity and
-    # free-pool size; static runs derive activity from the trace
-    active: Optional[np.ndarray] = None      # [ticks, T] bool
-    pool_free: Optional[np.ndarray] = None   # [ticks] free/unallocated pages
+    active: Optional[np.ndarray] = None
+    pool_free: Optional[np.ndarray] = None
 
     def steady_window(self, frac: float = 0.5) -> slice:
         n = self.fast_usage.shape[0]
@@ -88,13 +119,12 @@ def tenant_activity(owner: np.ndarray, alive: np.ndarray,
                      for i in range(n_tenants)], axis=1)
 
 
-def simulate(cfg: TieringConfig, tenants: List[TenantWorkload], ticks: int,
-             mode: str = "equilibria", k_max: int = 256,
-             impl: str = "batched") -> SimResult:
-    owner, accesses, alive = build_trace(tenants, ticks)
-    cfg = cfg.with_(n_tenants=len(tenants))
-    final, outs = run_engine(cfg, owner, accesses, alive, mode=mode,
-                             k_max=k_max, impl=impl)
+def build_result(mode: str, cfg: TieringConfig, final, outs,
+                 active: Optional[np.ndarray]) -> SimResult:
+    """The one SimResult builder: decode the final engine state (stats
+    summary + migration ring) and pull the per-tick outputs to host. Both
+    ownership providers produce the same state/outputs structure, so one
+    builder serves static, churn and (per-host slices of) fleet runs."""
     events, dropped = decode_ring(final.ring)
     return SimResult(
         mode=mode,
@@ -111,9 +141,20 @@ def simulate(cfg: TieringConfig, tenants: List[TenantWorkload], ticks: int,
         migrations=events,
         migrations_dropped=dropped,
         lower_protection=tuple(cfg.lower_protection[:cfg.n_tenants]),
-        active=tenant_activity(owner, alive, cfg.n_tenants),
+        active=active,
         pool_free=np.asarray(outs.pool_free),
     )
+
+
+def simulate(cfg: TieringConfig, tenants: List[TenantWorkload], ticks: int,
+             mode: str = "equilibria", k_max: int = 256,
+             impl: str = "batched") -> SimResult:
+    owner, accesses, alive = build_trace(tenants, ticks)
+    cfg = cfg.with_(n_tenants=len(tenants))
+    final, outs = run_engine(cfg, owner, accesses, alive, mode=mode,
+                             k_max=k_max, impl=impl)
+    return build_result(mode, cfg, final, outs,
+                        tenant_activity(owner, alive, cfg.n_tenants))
 
 
 def simulate_churn(cfg: TieringConfig, slots: List[ChurnSlot], ticks: int,
@@ -128,25 +169,7 @@ def simulate_churn(cfg: TieringConfig, slots: List[ChurnSlot], ticks: int,
     cfg = cfg.with_(n_tenants=len(slots))
     final, outs = run_churn_engine(cfg, schedule, mode=mode, k_max=k_max,
                                    n_pages=n_pages)
-    events, dropped = decode_ring(final.ring)
-    return SimResult(
-        mode=mode,
-        fast_usage=np.asarray(outs.fast_usage),
-        slow_usage=np.asarray(outs.slow_usage),
-        promotions=np.asarray(outs.promotions),
-        demotions=np.asarray(outs.demotions),
-        throughput=np.asarray(outs.throughput),
-        latency=np.asarray(outs.latency),
-        promo_scale=np.asarray(outs.promo_scale),
-        thrash_events=np.asarray(outs.thrash_events),
-        attempted=np.asarray(outs.attempted_promotions),
-        tier_stats=stats_summary(final.stats),
-        migrations=events,
-        migrations_dropped=dropped,
-        lower_protection=tuple(cfg.lower_protection[:cfg.n_tenants]),
-        active=schedule.want > 0,
-        pool_free=np.asarray(outs.pool_free),
-    )
+    return build_result(mode, cfg, final, outs, schedule.want > 0)
 
 
 def compare_modes(cfg: TieringConfig, tenants: List[TenantWorkload], ticks: int,

@@ -108,6 +108,15 @@ def init_state(cfg: TieringConfig, n_pages: int,
     )
 
 
+def stack_states(state: TierState, n: int) -> TierState:
+    """Broadcast one host's TierState to a leading fleet axis: every leaf
+    ``x`` becomes ``[n, *x.shape]``. The fleet harness (obs/fleet.py) vmaps
+    the unified tick over this axis; ``shard_map``/``pmap`` shard it across
+    devices when more than one is available."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), state)
+
+
 def make_policy(cfg: TieringConfig) -> TenantPolicy:
     T = cfg.n_tenants
     prot = np.zeros(T, np.int32)

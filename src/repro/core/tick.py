@@ -1,0 +1,543 @@
+"""The unified tick core: ONE regulated promotion/demotion pipeline serving
+every deployment shape the paper targets.
+
+Equilibria's contribution is a single control plane (hotness -> Eq.1
+demotion scan -> Eq.2 promotion scan -> upper-bound sync demotion -> thrash
+mitigation -> §IV-C telemetry). Before this module the repo carried two
+near-identical copies of that pipeline — ``core/engine.py`` (static
+ownership) and ``core/churn.py`` (ownership-as-state) — which had already
+drifted once. Here the pipeline exists exactly once, parameterized by an
+**ownership provider**:
+
+  static ownership  — the owner vector is a trace-time constant; per-tick
+                      inputs are ``(accesses [L], alive [L])``; the
+                      lifecycle step frees pages whose tenant trace died;
+                      selection uses the fastest layout-aware primitives
+                      (``select.static_strategy``).
+  dynamic ownership — the owner vector is state (FREE sentinel = T); per-
+                      tick inputs are ``(rates [T, S], want [T])``; the
+                      lifecycle step reclaims/grants pages, resets reused
+                      slots and re-partitions policy; selection routes
+                      through the runtime-owner fallback
+                      (``select.dynamic_strategy``).
+
+The static trace is the degenerate case of the churn schedule (owner fixed
+after the first grant, free pool empty): ``tests/test_tick_unification.py``
+pins that a constant-roster scenario produces identical integer
+trajectories through both providers, so the two paths can never disagree on
+shared semantics again.
+
+A provider contributes only:
+
+  * ``prepare(state, inputs) -> Prepared`` — the ownership/lifecycle step
+    (tick step 1): which pages are live, what they are accessed at, the
+    effective policy, the controller carry-ins, and any lifecycle mutations
+    of tier/hot/table/stats.
+  * ``strategy`` — the three owner-parameterized selection/reduction ops
+    (``select.Strategy``).
+  * ``pool_free(owner, tier)`` — the provider's definition of "unused
+    pages" for telemetry.
+
+Everything downstream of step 1 — allocation gating, hotness, contention,
+Eq.1/Eq.2-regulated migration, sync upper-bound demotion, counters, obs,
+the periodic thrash controller and the perf model — is written once below
+and is bit-exact with the pre-unification engines (the golden-trace
+fixtures pass unregenerated).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TieringConfig
+from repro.core import policy as P
+from repro.core import select as SEL
+from repro.core.state import (TIER_FAST, TIER_NONE, TIER_SLOW, Counters,
+                              TenantPolicy, ThrashTable, TierState,
+                              make_policy)
+from repro.obs import stats as OS
+from repro.obs import trace as OT
+
+MODES = ("equilibria", "tpp", "memtis", "static")
+
+
+class TickOutput(NamedTuple):
+    fast_usage: jax.Array      # [T] pages
+    slow_usage: jax.Array      # [T]
+    promotions: jax.Array      # [T] this tick
+    demotions: jax.Array       # [T]
+    throughput: jax.Array      # [T] accesses per latency-unit (1.0 = all-fast)
+    latency: jax.Array         # [T] mean access latency (units of lat_fast)
+    promo_scale: jax.Array     # [T]
+    thrash_events: jax.Array   # [T] cumulative
+    fast_free: jax.Array       # scalar
+    attempted_promotions: jax.Array  # [T] candidates this tick (obs)
+    pool_free: jax.Array       # scalar: unallocated pages (churn: free pool)
+
+
+class Prepared(NamedTuple):
+    """Everything tick step 1 (the ownership/lifecycle step) hands to the
+    shared pipeline. Controller fields are the *carry-ins* for this tick —
+    the static provider passes state through (plus ``freed_since``
+    accumulation); the dynamic provider resets them for reused slots."""
+    owner: jax.Array          # [L] effective owner this tick
+    owner_c: jax.Array        # [L] gather-safe owner (sentinel clamped)
+    alive: jax.Array          # [L] bool
+    accesses: jax.Array       # [L] f32
+    tier: jax.Array           # [L] int32, post-lifecycle
+    hot: jax.Array            # [L] f32, post-lifecycle
+    table: ThrashTable        # post-invalidation
+    stats: object             # TierStats, lifecycle exits recorded
+    ring: object              # MigrationRing
+    pol: TenantPolicy         # effective policy this tick
+    freed_t: jax.Array        # [T] pages freed by the lifecycle step
+    promo_scale: jax.Array    # [T] controller carry-ins --------------------
+    steady: jax.Array
+    mitigated_prev: jax.Array
+    thrash_prev: jax.Array
+    usage_prev: jax.Array
+    freed_since: jax.Array
+
+
+class OwnershipProvider(NamedTuple):
+    """The seam between a deployment shape and the shared tick pipeline."""
+    n_pages: int
+    strategy: SEL.Strategy
+    prepare: Callable[[TierState, tuple], Prepared]
+    pool_free: Callable[[jax.Array, jax.Array], jax.Array]
+
+
+def static_ownership(cfg: TieringConfig, owner: np.ndarray, k_max: int,
+                     impl: str = "batched") -> OwnershipProvider:
+    """Fixed tenant roster: ``owner`` [L] is a trace-time constant, per-tick
+    inputs are ``(accesses [L] f32, alive [L] bool)`` from a prebuilt trace.
+    The lifecycle step only frees pages whose trace liveness ended."""
+    T = cfg.n_tenants
+    owner_j = jnp.asarray(owner, jnp.int32)
+    strategy = SEL.static_strategy(owner, T, k_max, impl=impl)
+    pol = make_policy(cfg)
+
+    def prepare(state: TierState, inputs) -> Prepared:
+        accesses, alive = inputs
+        t = state.t
+        tier = state.tier.astype(jnp.int32)
+        died = (tier != TIER_NONE) & ~alive
+        freed_t = strategy.by_tenant(died.astype(jnp.int32), owner_j)
+        # fast-resident pages that die end their residency here (obs)
+        stats = OS.record_fast_exits(state.stats,
+                                     died & (tier == TIER_FAST), owner_j, t)
+        tier = jnp.where(died, TIER_NONE, tier)
+        # carry the state's owner through (it never changes); gathers use
+        # the trace-time constant ``owner_j`` exactly as the seed engine did
+        return Prepared(
+            owner=state.owner, owner_c=owner_j, alive=alive, accesses=accesses,
+            tier=tier, hot=state.hot, table=state.table, stats=stats,
+            ring=state.ring, pol=pol, freed_t=freed_t,
+            promo_scale=state.promo_scale, steady=state.steady,
+            mitigated_prev=state.mitigated_prev,
+            thrash_prev=state.thrash_prev, usage_prev=state.usage_prev,
+            freed_since=state.freed_since + freed_t)
+
+    return OwnershipProvider(
+        n_pages=owner_j.shape[0], strategy=strategy, prepare=prepare,
+        pool_free=lambda owner_, tier_: (tier_ == TIER_NONE).sum())
+
+
+def dynamic_ownership(cfg: TieringConfig, n_pages: int,
+                      k_max: int) -> OwnershipProvider:
+    """Tenant lifecycle as in-graph events: ``TierState.owner`` is mutated
+    every tick by a ``(rates [T, S], want [T])`` schedule — reclaim
+    (departure/shrink, coldest-first demote-and-free), rank-interval pool
+    grants, slot-reuse controller resets and per-tick policy re-partition.
+    The static trace is this provider's degenerate case (constant ``want``,
+    empty pool after the first grant)."""
+    T = cfg.n_tenants
+    L = n_pages
+    FREE = T
+    n_fast = cfg.n_fast_pages
+    wmark = max(int(np.ceil(n_fast * cfg.watermark_free)), 1)
+    strategy = SEL.dynamic_strategy(T, k_max)
+    base_pol = make_policy(cfg)
+    weights = None
+    if cfg.tenant_weights:
+        w = np.ones(T, np.float32)
+        for i, v in enumerate(cfg.tenant_weights[:T]):
+            w[i] = v
+        weights = jnp.asarray(w)
+
+    def prepare(state: TierState, inputs) -> Prepared:
+        rates, want = inputs
+        S = rates.shape[1]
+        t = state.t
+        owner = state.owner
+        tier = state.tier.astype(jnp.int32)
+        hot = state.hot
+        want = want.astype(jnp.int32)
+        active = want > 0
+
+        # ---- reclaim (departure & shrink), coldest-first ----------------
+        owned = owner < FREE
+        cnt = strategy.by_tenant(owned.astype(jnp.int32), owner)
+        delta = want - cnt
+        arrived = (cnt == 0) & (delta > 0)
+        release_q = jnp.minimum(jnp.maximum(-delta, 0), cnt)
+        cold0 = (t - state.last_access).astype(jnp.float32) * 1e3 - hot
+        # k_cap = L: a departing tenant frees its whole footprint this tick
+        reclaimed = SEL.select_top_quota(cold0, owner, owned, release_q, T, L)
+        owner_c = jnp.minimum(owner, T - 1)
+        rec_fast = reclaimed & (tier == TIER_FAST)
+        stats = OS.record_fast_exits(state.stats, rec_fast, owner_c, t)
+        freed_t = strategy.by_tenant(reclaimed.astype(jnp.int32), owner)
+        owner = jnp.where(reclaimed, FREE, owner)
+        tier = jnp.where(reclaimed, TIER_NONE, tier)
+        hot = jnp.where(reclaimed, 0.0, hot)
+        # a reclaimed page's thrash-table entry is stale: without this, a
+        # page promoted by the old tenant and re-granted soon after would
+        # count a false thrash hit against its new owner
+        tp = state.table.page
+        stale = (tp >= 0) & reclaimed[jnp.maximum(tp, 0)]
+        table = ThrashTable(page=jnp.where(stale, -1, tp),
+                            tick=jnp.where(stale, 0, state.table.tick))
+
+        # ---- grant from the free pool -----------------------------------
+        need = jnp.maximum(delta, 0)
+        grant_owner = SEL.pool_grant(owner == FREE, need)
+        granted = grant_owner < FREE
+        owner = jnp.where(granted, grant_owner, owner)
+        owner_c = jnp.minimum(owner, T - 1)
+        owned = owner < FREE
+
+        # ---- slot reuse: fresh arrivals get clean controller state ------
+        promo_scale0 = jnp.where(arrived, 1.0, state.promo_scale)
+        steady0 = jnp.where(arrived, False, state.steady)
+        mitigated0 = jnp.where(arrived, False, state.mitigated_prev)
+        thrash_prev0 = jnp.where(arrived, state.counters.thrash_events,
+                                 state.thrash_prev)
+        usage_prev0 = jnp.where(arrived, 0, state.usage_prev)
+        freed_since0 = jnp.where(arrived, 0, state.freed_since + freed_t)
+
+        # ---- per-page accesses from the tenant-local schedule -----------
+        prank = SEL.segment_ranks(jnp.where(owned, owner, T),
+                                  jnp.zeros((L,), jnp.int32), T)
+        accesses = jnp.where(
+            owned, rates[owner_c, jnp.minimum(prank, S - 1)], 0.0)
+
+        # ---- policy re-partition on membership --------------------------
+        pol = P.repartition_policy(base_pol, active, n_fast - wmark, weights)
+
+        return Prepared(
+            owner=owner, owner_c=owner_c, alive=owned, accesses=accesses,
+            tier=tier, hot=hot, table=table, stats=stats, ring=state.ring,
+            pol=pol, freed_t=freed_t,
+            promo_scale=promo_scale0, steady=steady0,
+            mitigated_prev=mitigated0, thrash_prev=thrash_prev0,
+            usage_prev=usage_prev0, freed_since=freed_since0)
+
+    return OwnershipProvider(
+        n_pages=L, strategy=strategy, prepare=prepare,
+        pool_free=lambda owner_, tier_: (owner_ == FREE).sum())
+
+
+def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
+                   mode: str = "equilibria", k_max: int = 256):
+    """Build the jittable unified tick over an ownership provider.
+
+    One compiled tick per provider serves any schedule data: trace size,
+    jaxpr size and kernel count are constant in T (tenant-batched
+    selection) and in the number of lifecycle events (ownership is scan
+    data, not structure).
+    """
+    assert mode in MODES, mode
+    T = cfg.n_tenants
+    L = provider.n_pages
+    n_fast = cfg.n_fast_pages
+    wmark = max(int(np.ceil(n_fast * cfg.watermark_free)), 1)
+    by_tenant = provider.strategy.by_tenant
+    select_pt = provider.strategy.select
+    alloc_ranks = provider.strategy.alloc_ranks
+
+    def tick(state: TierState, inputs) -> Tuple[TierState, TickOutput]:
+        t = state.t
+        page_ids = jnp.arange(L, dtype=jnp.int32)
+
+        # ---- 1. ownership / lifecycle (the provider seam) -----------------
+        prep = provider.prepare(state, inputs)
+        owner, owner_c = prep.owner, prep.owner_c
+        alive, accesses = prep.alive, prep.accesses
+        tier, stats, ring = prep.tier, prep.stats, prep.ring
+        pol = prep.pol
+
+        # Migration accounting (thrash table, residency histogram, event
+        # ring) runs over the selection's compact [T, k] candidate stream
+        # when available (contiguous batched path) — scatters over T*k lanes
+        # instead of L — and falls back to the full [L] masks otherwise.
+        def sel_counts(sel: SEL.Selection) -> jax.Array:
+            if sel.counts is not None:
+                return sel.counts
+            return by_tenant(sel.mask.astype(jnp.int32), owner)
+
+        def sel_tenants(sel: SEL.Selection) -> jax.Array:
+            return jnp.broadcast_to(
+                jnp.arange(T, dtype=jnp.int32)[:, None], sel.take.shape)
+
+        def sel_thrash(tbl, sel: SEL.Selection) -> jax.Array:
+            if sel.pages is None:
+                return by_tenant(P.thrash_hits(
+                    tbl, page_ids, sel.mask, t, cfg).astype(jnp.int32), owner)
+            hits = P.thrash_hits(tbl, sel.pages, sel.take, t, cfg)
+            return hits.sum(axis=1).astype(jnp.int32)
+
+        def sel_record_promos(tbl, sel: SEL.Selection):
+            if sel.pages is None:
+                return P.thrash_record_promotions(tbl, page_ids, sel.mask, t)
+            return P.thrash_record_promotions(tbl, sel.pages, sel.take, t)
+
+        def sel_exits(st, sel: SEL.Selection):
+            if sel.pages is None:
+                return OS.record_fast_exits(st, sel.mask, owner_c, t)
+            return OS.record_fast_exits_at(st, sel.pages, sel.take,
+                                           sel_tenants(sel), t)
+
+        def sel_ring(rg, sel: SEL.Selection, hotv, direction):
+            if sel.pages is None:
+                return OT.ring_record(rg, sel.mask, page_ids, owner_c, hotv,
+                                      direction, t)
+            return OT.ring_record(rg, sel.take, sel.pages, sel_tenants(sel),
+                                  hotv[sel.pages], direction, t)
+
+        # ---- 2. allocate new pages ----------------------------------------
+        new = alive & (tier == TIER_NONE)
+        fast_usage = by_tenant((tier == TIER_FAST).astype(jnp.int32), owner)
+        fast_free = n_fast - fast_usage.sum()
+        # per-tenant upper bound gating of *fast* placement
+        if mode in ("equilibria", "memtis") and cfg.enable_upper_bound:
+            ranks = alloc_ranks(new, owner)
+            bound = pol.upper_bound[owner_c]
+            under_bound = (bound == 0) | (fast_usage[owner_c] + ranks < bound)
+        else:
+            under_bound = jnp.ones((L,), bool)
+        elig = new & under_bound
+        grank = SEL.masked_rank(elig)
+        go_fast = elig & (grank < jnp.maximum(fast_free - wmark, 0))
+        tier = jnp.where(go_fast, TIER_FAST, jnp.where(new, TIER_SLOW, tier))
+        alloc_t = by_tenant(new.astype(jnp.int32), owner)
+        stats = OS.record_fast_entries(stats, go_fast, t)
+
+        # ---- 3. hotness / recency -----------------------------------------
+        hot = jnp.where(alive, cfg.hot_decay * prep.hot + accesses, 0.0)
+        last_access = jnp.where(new | (accesses > 0), t, state.last_access)
+
+        # ---- 4. contention ------------------------------------------------
+        # Local memory is contended when free space cannot absorb both the
+        # watermark and the pending promotion demand (kswapd-style: promotion
+        # pressure drives background demotion, §IV-D).
+        fast_usage = by_tenant((tier == TIER_FAST).astype(jnp.int32), owner)
+        fast_free = n_fast - fast_usage.sum()
+        cand_pre = (tier == TIER_SLOW) & (hot >= cfg.promo_hot_threshold) & alive
+        demand_t = jnp.minimum(by_tenant(cand_pre.astype(jnp.int32), owner),
+                               k_max)
+        promo_demand = jnp.minimum(demand_t.sum(), k_max)
+        contended = fast_free < wmark + promo_demand
+
+        # ---- 5. demotion ---------------------------------------------------
+        sync_quota = jnp.zeros((T,), jnp.int32)
+        if mode == "equilibria":
+            d_scan = P.eq1_demotion_scan(fast_usage, fast_usage, pol, contended)
+            if not cfg.enable_protection:
+                # ablation: proportional pressure without protection
+                d_scan = jnp.where(contended, fast_usage.astype(jnp.float32),
+                                   0.0)
+            # Eq.1 sets each tenant's *share* of reclaim work; the total is
+            # kswapd-style demand-driven: free enough for the watermark plus
+            # pending promotions, no more (work-conserving donation, §V-B3).
+            # A tenant's OWN promotion demand never drives its own demotion
+            # (that would be pure churn); only neighbors' demand evicts it.
+            demand_other = jnp.minimum(promo_demand - demand_t, k_max)
+            needed_t = jnp.maximum(wmark + demand_other - fast_free, 0)
+            total_scan = jnp.maximum(d_scan.sum(), 1.0)
+            share = jnp.ceil(d_scan * jnp.minimum(
+                needed_t.astype(jnp.float32) / total_scan, 1.0)).astype(jnp.int32)
+            if cfg.enable_upper_bound:
+                sync_quota = P.upper_bound_demotion(fast_usage, pol)
+            quota = jnp.minimum(share + sync_quota, k_max)
+        elif mode == "tpp":
+            needed = jnp.maximum(2 * wmark - fast_free, 0)
+            quota = jnp.minimum(needed, k_max * T)  # global
+        elif mode == "memtis":
+            sync_quota = P.upper_bound_demotion(fast_usage, pol)
+            quota = jnp.minimum(sync_quota, k_max)
+        else:  # static
+            quota = jnp.zeros((T,), jnp.int32)
+
+        age = (t - last_access).astype(jnp.float32)
+        cold_score = age * 1e3 - hot          # LRU order, hotness tiebreak
+        fast_mask = tier == TIER_FAST
+        if mode == "tpp":
+            dsel = SEL.Selection(
+                SEL.select_global(cold_score, fast_mask, quota, k_max * T),
+                None, None, None)
+        elif mode == "static":
+            dsel = SEL.Selection(jnp.zeros((L,), bool), None, None, None)
+        else:
+            dsel = select_pt(cold_score, owner, fast_mask, quota)
+        demoted = dsel.mask
+        demo_t = sel_counts(dsel)
+
+        # thrash detection on demotions (§IV-F)
+        thrash_new = sel_thrash(prep.table, dsel)
+        stats = sel_exits(stats, dsel)
+        ring = sel_ring(ring, dsel, hot, OT.DIR_DEMOTE)
+        tier = jnp.where(demoted, TIER_SLOW, tier)
+        fast_usage = fast_usage - demo_t
+        fast_free = n_fast - fast_usage.sum()
+
+        # ---- 6. promotion ---------------------------------------------------
+        # just-demoted pages are not promotion candidates this tick
+        cand = ((tier == TIER_SLOW) & (hot >= cfg.promo_hot_threshold)
+                & alive & ~demoted)
+        cand_t = by_tenant(cand.astype(jnp.int32), owner)
+        throttled = jnp.zeros((T,), bool)
+        if mode == "equilibria":
+            p_base = jnp.full((T,), float(cfg.p_base), jnp.float32)
+            if cfg.enable_promo_throttle:
+                p_scan, throttled = P.eq2_promotion_scan(p_base, fast_usage,
+                                                         pol, contended, cfg)
+            else:
+                p_scan = p_base
+            p_scan = p_scan * prep.promo_scale        # thrash mitigation
+            p_quota = jnp.minimum(p_scan.astype(jnp.int32), k_max)
+        elif mode in ("tpp", "memtis"):
+            p_quota = jnp.full((T,), cfg.p_base, jnp.int32)  # unregulated
+        else:
+            p_quota = jnp.zeros((T,), jnp.int32)
+
+        # never overfill: cap total promotions by free fast capacity.
+        # NOTE: promotions may transiently exceed a tenant's upper bound —
+        # the allocating thread then demotes synchronously in the same tick
+        # (paper §IV-D); that promote->sync-demote cycle is exactly the
+        # thrashing signature §IV-F detects.
+        p_quota = jnp.minimum(p_quota, jnp.minimum(cand_t, k_max))
+        headroom = jnp.maximum(fast_free - wmark, 0)
+        total = p_quota.sum()
+        scale = jnp.where(total > headroom,
+                          headroom.astype(jnp.float32) / jnp.maximum(total, 1),
+                          1.0)
+        p_quota = jnp.floor(p_quota.astype(jnp.float32) * scale).astype(jnp.int32)
+
+        if mode == "tpp":
+            psel = SEL.Selection(
+                SEL.select_global(hot, cand, p_quota.sum(), k_max * T),
+                None, None, None)
+        elif mode == "static":
+            psel = SEL.Selection(jnp.zeros((L,), bool), None, None, None)
+        else:
+            psel = select_pt(hot, owner, cand, p_quota)
+        promoted = psel.mask
+        promo_t = sel_counts(psel)
+        tier = jnp.where(promoted, TIER_FAST, tier)
+        table = sel_record_promos(prep.table, psel)
+        stats = OS.record_fast_entries(stats, promoted, t)
+        ring = sel_ring(ring, psel, hot, OT.DIR_PROMOTE)
+
+        # ---- 6b. synchronous upper-bound demotion (allocation path, §IV-D):
+        # promotions that pushed a tenant past its bound are shed in the same
+        # tick by the "allocating thread" — these demotions hit the thrash
+        # table immediately when they evict recently-promoted pages.
+        sync2_t = jnp.zeros((T,), jnp.int32)
+        if mode in ("equilibria", "memtis") and cfg.enable_upper_bound:
+            fast_usage2 = by_tenant((tier == TIER_FAST).astype(jnp.int32),
+                                    owner)
+            over2 = jnp.where(pol.upper_bound > 0,
+                              jnp.maximum(fast_usage2 - pol.upper_bound, 0), 0)
+            over2 = jnp.minimum(over2, k_max)
+            age2 = (t - last_access).astype(jnp.float32)
+            cold2 = age2 * 1e3 - hot
+            ssel = select_pt(cold2, owner, tier == TIER_FAST, over2)
+            sync_dem = ssel.mask
+            thr2 = sel_thrash(table, ssel)
+            thrash_new = thrash_new + thr2
+            stats = sel_exits(stats, ssel)
+            ring = sel_ring(ring, ssel, hot, OT.DIR_DEMOTE)
+            tier = jnp.where(sync_dem, TIER_SLOW, tier)
+            sync2_t = sel_counts(ssel)
+            demo_t = demo_t + sync2_t
+
+        # ---- 7. counters ----------------------------------------------------
+        c = state.counters
+        counters = Counters(
+            promotions=c.promotions + promo_t,
+            demotions=c.demotions + demo_t,
+            attempted_promotions=c.attempted_promotions + cand_t,
+            reclaims=c.reclaims + prep.freed_t,
+            allocations=c.allocations + alloc_t,
+            thrash_events=c.thrash_events + thrash_new,
+            sync_demotions=c.sync_demotions
+            + jnp.minimum(sync_quota, demo_t) + sync2_t,
+        )
+        fast_usage = by_tenant((tier == TIER_FAST).astype(jnp.int32), owner)
+        slow_usage = by_tenant((tier == TIER_SLOW).astype(jnp.int32), owner)
+
+        # ---- 7b. observability (obs/, §IV-C) --------------------------------
+        # tpp's quota is one global scan budget; split it evenly so
+        # demo_success_ratio stays comparable across modes
+        demo_att = (jnp.broadcast_to((quota + T - 1) // T, (T,))
+                    if quota.ndim == 0 else quota)
+        below_prot = OS.below_protection(fast_usage, slow_usage,
+                                         pol.lower_protection)
+        # sync upper-bound demotions (6b) bypass the step-5 quota; count them
+        # on both sides so demo_success_ratio stays <= 1
+        stats = OS.update_tick(
+            stats, promo_attempts=cand_t, promo_success=promo_t,
+            demo_attempts=jnp.minimum(demo_att, k_max) + sync2_t,
+            demo_success=demo_t,
+            thrash_new=thrash_new, contended=contended, throttled=throttled,
+            below_protection=below_prot, decay=cfg.obs_window_decay)
+
+        new_state = TierState(
+            tier=tier.astype(jnp.int8), hot=hot, last_access=last_access,
+            owner=owner,
+            counters=counters, promo_scale=prep.promo_scale,
+            thrash_prev=prep.thrash_prev, usage_prev=prep.usage_prev,
+            freed_since=prep.freed_since, steady=prep.steady,
+            mitigated_prev=prep.mitigated_prev,
+            table=table, stats=stats, ring=ring, t=t + 1)
+
+        # ---- 8. periodic controller (§IV-F) ---------------------------------
+        def run_ctrl(s: TierState) -> TierState:
+            out = P.thrash_controller(s, fast_usage + slow_usage, cfg)
+            return s._replace(promo_scale=out.promo_scale, steady=out.steady,
+                              table=out.table, thrash_prev=out.thrash_prev,
+                              usage_prev=out.usage_prev,
+                              freed_since=out.freed_since,
+                              mitigated_prev=out.mitigated_prev)
+
+        new_state = jax.lax.cond(
+            (t + 1) % cfg.controller_period == 0, run_ctrl, lambda s: s,
+            new_state)
+
+        # ---- 9. perf model ---------------------------------------------------
+        a_fast = by_tenant(accesses * (tier == TIER_FAST), owner)
+        a_slow = by_tenant(accesses * (tier == TIER_SLOW), owner)
+        a_tot = a_fast + a_slow
+        migrations = (promo_t + demo_t).sum().astype(jnp.float32)
+        lat = jnp.where(
+            a_tot > 0,
+            (a_fast * cfg.lat_fast + a_slow * cfg.lat_slow)
+            / jnp.maximum(a_tot, 1e-9),
+            cfg.lat_fast) + migrations * cfg.migration_cost
+        thru = jnp.where(a_tot > 0, a_tot / lat, 0.0)
+
+        out = TickOutput(
+            fast_usage=fast_usage, slow_usage=slow_usage,
+            promotions=promo_t, demotions=demo_t,
+            throughput=thru, latency=lat, promo_scale=new_state.promo_scale,
+            thrash_events=counters.thrash_events,
+            fast_free=n_fast - fast_usage.sum(),
+            attempted_promotions=cand_t,
+            pool_free=provider.pool_free(owner, tier))
+        return new_state, out
+
+    return tick

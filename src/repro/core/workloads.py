@@ -199,6 +199,18 @@ class ChurnSlot:
         return self.workload.footprint
 
 
+def as_churn_slots(tenants: List[TenantWorkload],
+                   ticks: int) -> List[ChurnSlot]:
+    """Express a static tenant mix as single-episode churn slots — the
+    degenerate schedule the unified tick core treats identically to a
+    prebuilt static trace (owner fixed after the first grant, free pool
+    empty). This is how the mixed fleet harness (obs/fleet.py) runs static
+    and churned hosts side by side under one vmap."""
+    return [ChurnSlot(w, [(w.arrival,
+                           ticks if w.departure is None else w.departure)])
+            for w in tenants]
+
+
 def build_churn_schedule(slots: List["ChurnSlot"], ticks: int):
     """Compile a slot roster into the churn engine's per-tick schedule:
     (want [ticks, T] int32 target footprints, rates [ticks, T, S] f32

@@ -1,31 +1,52 @@
-"""Fleet telemetry harness: the engine tick ``vmap``-ed across N simulated
-hosts with heterogeneous tenant mixes.
+"""Fleet telemetry harness: the unified tick (core/tick.py) stacked across
+N simulated hosts.
 
-This is the ROADMAP's fleet-scale evaluation vehicle: one compiled program
-advances every host's tiering state in lockstep (hosts share the static
-ownership layout; heterogeneity comes from per-host workload patterns,
-arrivals and hotness), and the in-graph obs state (TierStats + migration
-ring) is collected per host with zero extra tracing work — ``vmap`` batches
-the scatter/adds along the host axis. Host-side, per-host telemetry is
-decoded and rolled up fleet-wide: latency percentiles, migration rates, and
-pathology counts from ``obs.pathology``.
+This is the ROADMAP's fleet-scale evaluation vehicle, rebuilt on the
+unified tick core so a fleet is a batch of *heterogeneous* hosts — static
+rosters and churned rosters side by side under ONE ``vmap`` (every host
+runs the dynamic-ownership provider; a static host is simply the
+degenerate schedule with constant ``want``). Three execution surfaces:
+
+  ``run_fleet``        — the original static-layout fleet (hosts share one
+                         owner vector; heterogeneity from workload data).
+                         Kept for the obs acceptance property and as the
+                         cheapest path when no host churns.
+  ``run_mixed_fleet``  — heterogeneous static+churn hosts under one vmap,
+                         full per-tick telemetry + pathology detection.
+  ``fleet_rollout``    — the long-horizon engine: chunked ``lax.scan``
+                         rollouts with donated carries (no host round-trips
+                         inside a chunk, O(chunk) not O(horizon) output
+                         memory), schedule archetypes gathered in-graph
+                         (hosts sharing a schedule cost one copy), tiled
+                         periodically so a 10k-tick horizon streams through
+                         a fixed-size schedule, and sharded across devices
+                         via ``pmap`` when more than one is available.
+
+In-graph obs state (TierStats + migration ring) is collected per host with
+zero extra tracing work — ``vmap`` batches the scatter/adds along the host
+axis. Host-side, telemetry is decoded per host and rolled up fleet-wide:
+latency percentiles, migration rates, pathology counts from
+``obs.pathology``.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import TieringConfig
+from repro.core.churn import ChurnSchedule, make_churn_tick
 from repro.core.engine import make_tick
 from repro.core.simulator import tenant_activity
-from repro.core.state import init_state
-from repro.core.workloads import (TenantWorkload, build_trace, cache_like,
-                                  ci_like, microbenchmark, spark_like,
-                                  thrasher, web_like)
+from repro.core.state import init_state, stack_states
+from repro.core.workloads import (ChurnSlot, TenantWorkload, as_churn_slots,
+                                  build_churn_schedule, build_trace,
+                                  cache_like, ci_like, microbenchmark,
+                                  spark_like, thrasher, web_like)
 from repro.obs.pathology import Pathology, count_by_kind, detect_all
 from repro.obs.stats import stats_summary
 from repro.obs.trace import decode_ring
@@ -38,7 +59,7 @@ def heterogeneous_mixes(footprints: Sequence[int], n_hosts: int,
                         seed: int = 0, menu: Sequence[str] = MIX_MENU,
                         stagger: int = 8) -> List[List[TenantWorkload]]:
     """One tenant mix per host. Footprints are fixed per tenant *slot* (every
-    host shares the static page-ownership layout the engine needs); the
+    host shares the static page-ownership layout ``run_fleet`` needs); the
     workload pattern and arrival of each slot vary per host."""
     rng = np.random.default_rng(seed)
     mk = {
@@ -163,37 +184,10 @@ class FleetResult:
         }
 
 
-def run_fleet(cfg: TieringConfig, host_mixes: List[List[TenantWorkload]],
-              ticks: int, mode: str = "equilibria", k_max: int = 64,
-              detect: bool = True) -> FleetResult:
-    """Run every host's trace through one vmapped engine; collect telemetry.
-
-    All hosts must share the tenant footprint layout (same owner vector);
-    ``heterogeneous_mixes`` guarantees that by construction.
-    """
-    traces = [build_trace(mix, ticks) for mix in host_mixes]
-    owner = traces[0][0]
-    for o, _, _ in traces[1:]:
-        if not np.array_equal(o, owner):
-            raise ValueError("all hosts must share the footprint layout "
-                             "(same per-tenant page counts)")
-    cfg = cfg.with_(n_tenants=len(host_mixes[0]))
-    H = len(host_mixes)
-    accesses = jnp.asarray(np.stack([t[1] for t in traces]), jnp.float32)
-    alive = jnp.asarray(np.stack([t[2] for t in traces]), bool)
-
-    tick = make_tick(cfg, owner, mode, k_max)
-    state0 = init_state(cfg, owner.shape[0], owner=owner)
-    states = jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x[None], (H,) + x.shape), state0)
-
-    @jax.jit
-    @jax.vmap
-    def run_host(state, acc, alv):
-        return jax.lax.scan(tick, state, (acc, alv))
-
-    finals, outs = run_host(states, accesses, alive)
-
+def _fleet_result(mode: str, cfg: TieringConfig, finals, outs,
+                  active: np.ndarray, detect: bool) -> FleetResult:
+    """One FleetResult builder shared by the static and mixed fleets."""
+    H = active.shape[0]
     res = FleetResult(
         mode=mode, n_hosts=H,
         fast_usage=np.asarray(outs.fast_usage),
@@ -205,8 +199,7 @@ def run_fleet(cfg: TieringConfig, host_mixes: List[List[TenantWorkload]],
         thrash_events=np.asarray(outs.thrash_events),
         attempted=np.asarray(outs.attempted_promotions),
         lower_protection=tuple(cfg.lower_protection[:cfg.n_tenants]),
-        active=np.stack([tenant_activity(owner, np.asarray(tr[2]),
-                                         cfg.n_tenants) for tr in traces]),
+        active=active,
         _final_state=finals)
     res.stats = [stats_summary(jax.tree_util.tree_map(lambda x: x[h],
                                                       finals.stats))
@@ -220,3 +213,266 @@ def run_fleet(cfg: TieringConfig, host_mixes: List[List[TenantWorkload]],
                        active=res.active[h])
             for h in range(H)]
     return res
+
+
+def run_fleet(cfg: TieringConfig, host_mixes: List[List[TenantWorkload]],
+              ticks: int, mode: str = "equilibria", k_max: int = 64,
+              detect: bool = True) -> FleetResult:
+    """Run every host's trace through one vmapped static-provider tick.
+
+    All hosts must share the tenant footprint layout (same owner vector);
+    ``heterogeneous_mixes`` guarantees that by construction. For fleets
+    mixing static and churned hosts, use ``run_mixed_fleet``.
+    """
+    traces = [build_trace(mix, ticks) for mix in host_mixes]
+    owner = traces[0][0]
+    for o, _, _ in traces[1:]:
+        if not np.array_equal(o, owner):
+            raise ValueError("all hosts must share the footprint layout "
+                             "(same per-tenant page counts)")
+    cfg = cfg.with_(n_tenants=len(host_mixes[0]))
+    H = len(host_mixes)
+    accesses = jnp.asarray(np.stack([t[1] for t in traces]), jnp.float32)
+    alive = jnp.asarray(np.stack([t[2] for t in traces]), bool)
+
+    tick = make_tick(cfg, owner, mode, k_max)
+    states = stack_states(init_state(cfg, owner.shape[0], owner=owner), H)
+
+    @jax.jit
+    @jax.vmap
+    def run_host(state, acc, alv):
+        return jax.lax.scan(tick, state, (acc, alv))
+
+    finals, outs = run_host(states, accesses, alive)
+    active = np.stack([tenant_activity(owner, np.asarray(tr[2]),
+                                       cfg.n_tenants) for tr in traces])
+    return _fleet_result(mode, cfg, finals, outs, active, detect)
+
+
+# --------------------------------------------------------- mixed fleets ----
+def stack_schedules(schedules: List[ChurnSchedule]
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack per-host churn schedules into fleet arrays, padding every
+    host's rates to the fleet-wide max slot footprint.
+
+    Returns (want [H, ticks, T] int32, rates [H, ticks, T, S] f32). Hosts
+    must share slot count and horizon; footprints may differ freely (the
+    pad rows are dead weight only for hosts with smaller slots).
+    """
+    ticks, T = schedules[0].want.shape
+    for s in schedules[1:]:
+        if s.want.shape != (ticks, T):
+            raise ValueError("all hosts must share slot count and horizon; "
+                             f"got {s.want.shape} vs {(ticks, T)}")
+    S = max(s.rates.shape[2] for s in schedules)
+    H = len(schedules)
+    want = np.stack([s.want for s in schedules]).astype(np.int32)
+    rates = np.zeros((H, ticks, T, S), np.float32)
+    for h, s in enumerate(schedules):
+        rates[h, :, :, :s.rates.shape[2]] = s.rates
+    return want, rates
+
+
+def mixed_fleet_hosts(static_mixes: List[List[TenantWorkload]],
+                      churn_hosts: List[List[ChurnSlot]],
+                      ticks: int) -> List[List[ChurnSlot]]:
+    """Normalize a heterogeneous fleet to churn-slot rosters: static hosts
+    become single-episode slots (the degenerate schedule)."""
+    return [as_churn_slots(mix, ticks) for mix in static_mixes] + \
+        [list(slots) for slots in churn_hosts]
+
+
+def run_mixed_fleet(cfg: TieringConfig, hosts: List[List[ChurnSlot]],
+                    ticks: int, mode: str = "equilibria", k_max: int = 64,
+                    detect: bool = True,
+                    n_pages: Optional[int] = None) -> FleetResult:
+    """Heterogeneous fleet: static and churned hosts side by side under one
+    vmap of the unified dynamic-ownership tick. ``hosts`` is one churn-slot
+    roster per host (``mixed_fleet_hosts`` builds it from static mixes +
+    churn rosters); every host needs the same slot count, nothing else.
+    """
+    T = len(hosts[0])
+    for slots in hosts[1:]:
+        if len(slots) != T:
+            raise ValueError("all hosts must have the same slot count")
+    cfg = cfg.with_(n_tenants=T)
+    want, rates = stack_schedules(
+        [build_churn_schedule(slots, ticks) for slots in hosts])
+    H = want.shape[0]
+    L = n_pages if n_pages is not None else \
+        cfg.n_fast_pages + cfg.n_slow_pages
+    tick = make_churn_tick(cfg, L, mode=mode, k_max=k_max)
+    states = stack_states(init_state(cfg, L), H)
+
+    @jax.jit
+    @jax.vmap
+    def run_host(state, r, w):
+        return jax.lax.scan(tick, state, (r, w))
+
+    finals, outs = run_host(states, jnp.asarray(rates, jnp.float32),
+                            jnp.asarray(want, jnp.int32))
+    return _fleet_result(mode, cfg, finals, outs, want > 0, detect)
+
+
+# ----------------------------------------------- long-horizon rollouts ----
+@dataclass
+class RolloutSummary:
+    """Chunked-rollout result: final fleet state plus streamed per-host
+    reductions (full per-tick arrays are never materialized — output memory
+    is O(1) in the horizon)."""
+    n_hosts: int
+    ticks: int
+    chunk: int
+    sharded: bool
+    elapsed_s: float                 # wall time of the rollout loop
+    latency_mean: np.ndarray         # [H] mean per-tick tenant-mean latency
+    throughput_mean: np.ndarray      # [H] mean per-tick total throughput
+    migrations_per_tick: np.ndarray  # [H]
+    final_state: object = None       # batched TierState [H, ...]
+
+    @property
+    def host_ticks_per_s(self) -> float:
+        return self.n_hosts * self.ticks / max(self.elapsed_s, 1e-9)
+
+    def host_stats(self, host: int) -> dict:
+        return stats_summary(jax.tree_util.tree_map(
+            lambda x: x[host], self.final_state.stats))
+
+    def counters(self):
+        return jax.tree_util.tree_map(np.asarray, self.final_state.counters)
+
+
+def fleet_rollout(cfg: TieringConfig, want: np.ndarray, rates: np.ndarray,
+                  ticks: int, *, host_arch: Optional[np.ndarray] = None,
+                  mode: str = "equilibria", k_max: int = 64,
+                  chunk: int = 256, n_pages: Optional[int] = None,
+                  shard: bool = True, warmup: bool = False) -> RolloutSummary:
+    """Advance a fleet over a long horizon without host round-trips or
+    memory blowup.
+
+    want [A, P, T] / rates [A, P, T, S] are schedule *archetypes* over a
+    period P; ``host_arch`` [H] maps each host to its archetype (default:
+    one host per archetype). The schedule is tiled in time (tick t reads
+    column ``t % P``) and gathered per host in-graph, so H hosts over a
+    10k-tick horizon cost O(A * P) schedule memory, not O(H * ticks).
+
+    Execution is chunked: one jitted ``lax.scan`` of ``chunk`` ticks with
+    the fleet state donated between chunks (XLA reuses the carry buffers;
+    per-tick outputs are reduced inside the scan to [H] running sums).
+    With more than one local device and H divisible by the device count,
+    chunks run under ``pmap`` with hosts sharded across devices.
+
+    ``warmup=True`` runs one throwaway chunk on a scratch fleet state
+    before the timed rollout so ``elapsed_s`` measures steady-state
+    execution, not XLA compilation (the benchmark gate's tick-rate).
+    """
+    want = np.asarray(want)
+    rates = np.asarray(rates)
+    A, period, T = want.shape
+    host_arch = np.arange(A) if host_arch is None else np.asarray(host_arch)
+    if host_arch.size and (host_arch.min() < 0 or host_arch.max() >= A):
+        # XLA gathers clamp out-of-range indices silently — fail loudly here
+        raise ValueError(f"host_arch must map into [0, {A}) archetypes")
+    H = host_arch.shape[0]
+    L = n_pages if n_pages is not None else \
+        cfg.n_fast_pages + cfg.n_slow_pages
+    cfg = cfg.with_(n_tenants=T)
+    tick = make_churn_tick(cfg, L, mode=mode, k_max=k_max)
+    vtick = jax.vmap(tick)
+    want_j = jnp.asarray(want, jnp.int32)
+    rates_j = jnp.asarray(rates, jnp.float32)
+
+    def make_chunk_fn(n: int):
+        def chunk_fn(states, arch, t0):
+            zero = jnp.zeros(arch.shape, jnp.float32)
+
+            def body(carry, i):
+                st, lat, thr, mig = carry
+                tm = jnp.mod(t0 + i, period)
+                w = jax.lax.dynamic_index_in_dim(want_j, tm, axis=1,
+                                                 keepdims=False)
+                r = jax.lax.dynamic_index_in_dim(rates_j, tm, axis=1,
+                                                 keepdims=False)
+                st, out = vtick(st, (r[arch], w[arch]))
+                lat = lat + out.latency.mean(axis=-1)
+                thr = thr + out.throughput.sum(axis=-1)
+                mig = mig + (out.promotions + out.demotions).sum(
+                    axis=-1).astype(jnp.float32)
+                return (st, lat, thr, mig), None
+
+            (states, lat, thr, mig), _ = jax.lax.scan(
+                body, (states, zero, zero, zero),
+                jnp.arange(n, dtype=jnp.int32))
+            return states, (lat, thr, mig)
+        return chunk_fn
+
+    chunk = max(min(chunk, ticks), 1)
+    D = jax.local_device_count()
+    use_pmap = bool(shard) and D > 1 and H % D == 0
+    states = stack_states(init_state(cfg, L), H)
+    if use_pmap:
+        def resh(x):
+            return jnp.reshape(x, (D, H // D) + x.shape[1:])
+        states = jax.tree_util.tree_map(resh, states)
+        arch = jnp.asarray(host_arch.reshape(D, H // D))
+
+        def compile_chunk(n):
+            return jax.pmap(make_chunk_fn(n), in_axes=(0, 0, None),
+                            donate_argnums=(0,))
+    else:
+        arch = jnp.asarray(host_arch)
+
+        def compile_chunk(n):
+            return jax.jit(make_chunk_fn(n), donate_argnums=(0,))
+
+    run_chunk = compile_chunk(chunk)
+    n_full, rem = divmod(ticks, chunk)
+    run_rem = compile_chunk(rem) if rem else None
+
+    if warmup:
+        # compile (and once-run) every chunk program on a scratch state —
+        # donation consumes the scratch buffers, the real fleet is untouched
+        scratch = stack_states(init_state(cfg, L), H)
+        if use_pmap:
+            scratch = jax.tree_util.tree_map(resh, scratch)
+        scratch, _ = run_chunk(scratch, arch, 0)
+        if run_rem is not None:
+            jax.block_until_ready(
+                jax.tree_util.tree_leaves(run_rem(scratch, arch, 0)[0])[0])
+        else:
+            jax.block_until_ready(jax.tree_util.tree_leaves(scratch)[0])
+
+    lat_sum = np.zeros(H, np.float64)
+    thr_sum = np.zeros(H, np.float64)
+    mig_sum = np.zeros(H, np.float64)
+
+    def absorb(acc):
+        nonlocal lat_sum, thr_sum, mig_sum
+        lat, thr, mig = (np.asarray(a).reshape(H) for a in acc)
+        lat_sum = lat_sum + lat
+        thr_sum = thr_sum + thr
+        mig_sum = mig_sum + mig
+
+    t0_wall = time.perf_counter()
+    t = 0
+    for _ in range(n_full):
+        states, acc = run_chunk(states, arch, t)
+        absorb(acc)
+        t += chunk
+    if run_rem is not None:
+        states, acc = run_rem(states, arch, t)
+        absorb(acc)
+        t += rem
+    jax.block_until_ready(jax.tree_util.tree_leaves(states)[0])
+    elapsed = time.perf_counter() - t0_wall
+
+    if use_pmap:
+        states = jax.tree_util.tree_map(
+            lambda x: jnp.reshape(x, (H,) + x.shape[2:]), states)
+    return RolloutSummary(
+        n_hosts=H, ticks=ticks, chunk=chunk, sharded=use_pmap,
+        elapsed_s=elapsed,
+        latency_mean=lat_sum / ticks,
+        throughput_mean=thr_sum / ticks,
+        migrations_per_tick=mig_sum / ticks,
+        final_state=states)

@@ -1,0 +1,133 @@
+"""Unified tick core (core/tick.py): the static engine and the churn engine
+are two ownership providers over ONE pipeline.
+
+The keystone regression: a constant tenant roster (everyone arrives at tick
+0, fixed footprint, nobody departs) is expressible through BOTH adapters —
+as a prebuilt static trace (``run_engine``) and as the degenerate churn
+schedule (``run_churn_engine`` with constant ``want``). On that shared
+scenario the two paths must agree exactly: the dynamic provider's first-tick
+pool grant reproduces the contiguous static layout, tenant-local access
+ranks equal physical index order, and every control decision downstream
+derives from integer counts the providers compute identically. This test
+fails if the engine/churn pipelines ever drift apart again (the drift PR 4
+had to re-fix twice is now structurally impossible, and this pins the seam).
+
+Float telemetry (latency/throughput) is compared with a tolerance only
+because the contiguous strategy reduces floats via cumsum while the dynamic
+strategy scatter-adds — association differs, decisions do not.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import TieringConfig
+from repro.core.churn import run_churn_engine
+from repro.core.engine import run_engine
+from repro.core.tick import dynamic_ownership, make_tick_core
+from repro.core.state import init_state
+from repro.core.workloads import TenantWorkload, build_churn_schedule, \
+    build_trace, ChurnSlot
+
+# constant-roster scenario: ramp=1 (full footprint at age 0), no departures,
+# all arrivals at tick 0 — expressible identically through both providers.
+# k_max <= every footprint so both selection strategies share the same
+# per-tenant take window; thrash_table_slots > L so no same-tick collisions
+# (the one documented divergence source between compact/full-lane scatters).
+_TENANTS = [
+    TenantWorkload(footprint=24, pattern="uniform", hot_rate=4.0,
+                   cold_rate=0.0, ramp=1),
+    TenantWorkload(footprint=32, pattern="hotcold", hot_frac=0.25,
+                   hot_rate=4.0, cold_rate=0.05, ramp=1,
+                   rotate_hot_every=9),
+    TenantWorkload(footprint=24, pattern="stream", stream_window=6,
+                   stream_step=2, hot_rate=3.0, cold_rate=0.05, ramp=1),
+]
+_TICKS = 48
+_K_MAX = 16
+
+
+def _cfg(**kw):
+    base = dict(n_tenants=3, n_fast_pages=40, n_slow_pages=40,
+                lower_protection=(8, 8, 0), upper_bound=(0, 16, 12))
+    base.update(kw)
+    return TieringConfig(**base)
+
+
+def _run_both(mode: str):
+    cfg = _cfg()
+    owner, accesses, alive = build_trace(_TENANTS, _TICKS)
+    L = owner.shape[0]
+    assert alive.all(), "shared scenario must keep every page live"
+    final_s, outs_s = run_engine(cfg, owner, accesses, alive, mode=mode,
+                                 k_max=_K_MAX)
+    slots = [ChurnSlot(w, [(0, _TICKS)]) for w in _TENANTS]
+    sched = build_churn_schedule(slots, _TICKS)
+    final_c, outs_c = run_churn_engine(cfg, sched, mode=mode, k_max=_K_MAX,
+                                       n_pages=L)
+    return (final_s, outs_s), (final_c, outs_c)
+
+
+@pytest.mark.parametrize("mode", ["equilibria", "tpp", "memtis", "static"])
+def test_static_and_churn_paths_agree_on_shared_scenario(mode):
+    (final_s, outs_s), (final_c, outs_c) = _run_both(mode)
+    # integer trajectories: exact equality, every tick
+    for name in ("fast_usage", "slow_usage", "promotions", "demotions",
+                 "attempted_promotions", "thrash_events", "fast_free",
+                 "pool_free"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(outs_s, name)),
+            np.asarray(getattr(outs_c, name)), err_msg=name)
+    # cumulative counters: exact
+    cs = jax.tree_util.tree_map(np.asarray, final_s.counters)
+    cc = jax.tree_util.tree_map(np.asarray, final_c.counters)
+    for name in cs._fields:
+        np.testing.assert_array_equal(getattr(cs, name), getattr(cc, name),
+                                      err_msg=f"counters.{name}")
+    # controller state: exact (thrash mitigation fired identically)
+    np.testing.assert_array_equal(np.asarray(final_s.promo_scale),
+                                  np.asarray(final_c.promo_scale))
+    np.testing.assert_array_equal(np.asarray(final_s.steady),
+                                  np.asarray(final_c.steady))
+    # physical placement: the degenerate grant reproduces the static layout
+    np.testing.assert_array_equal(np.asarray(final_s.tier),
+                                  np.asarray(final_c.tier))
+    np.testing.assert_array_equal(np.asarray(final_c.owner),
+                                  build_trace(_TENANTS, _TICKS)[0])
+    # float telemetry: same decisions, association-tolerant comparison
+    np.testing.assert_allclose(np.asarray(outs_s.latency),
+                               np.asarray(outs_c.latency), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(outs_s.throughput),
+                               np.asarray(outs_c.throughput), rtol=1e-4)
+
+
+def test_shared_scenario_actually_migrates():
+    """Guard against vacuous agreement: the shared scenario must exercise
+    the regulated pipeline (demotions, promotions, sync path, contention)."""
+    (_, outs_s), _ = _run_both("equilibria")
+    assert np.asarray(outs_s.promotions).sum() > 0
+    assert np.asarray(outs_s.demotions).sum() > 0
+    assert np.asarray(outs_s.attempted_promotions).sum() > 0
+
+
+def test_providers_share_one_pipeline_jaxpr_shape():
+    """The two providers produce ticks whose step-2..9 pipeline is the same
+    code: mode branches aside, both trace without error and with T-constant
+    structure (same eqn count for different tenant data under the dynamic
+    provider — lifecycle events are data, not structure)."""
+    import jax.numpy as jnp
+    cfg = _cfg()
+    L = 80
+    prov = dynamic_ownership(cfg, L, k_max=_K_MAX)
+    tick = make_tick_core(cfg, prov, mode="equilibria", k_max=_K_MAX)
+    state = init_state(cfg, L)
+    S = 32
+    quiet = (jnp.ones((3, S), jnp.float32), jnp.asarray([24, 32, 24], jnp.int32))
+    stormy = (jnp.zeros((3, S), jnp.float32), jnp.asarray([0, 5, 0], jnp.int32))
+    jx = [str(jax.make_jaxpr(tick)(state, inp)) for inp in (quiet, stormy)]
+    assert jx[0] == jx[1]
+
+
+def test_static_provider_rejects_bad_impl():
+    from repro.core.engine import make_tick
+    with pytest.raises(AssertionError):
+        make_tick(_cfg(), np.zeros(8, np.int32), impl="nope")
