@@ -149,8 +149,9 @@ def main() -> int:
         "sweep": sweep,
     }
     os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
-    with open(RESULTS, "w") as f:
-        json.dump(out, f, indent=1)
+    from benchmarks.run import write_result
+    write_result(RESULTS, out,
+                 config={"intensities": INTENSITIES, "modes": MODES})
     print(f"wrote {RESULTS}")
     return 0
 

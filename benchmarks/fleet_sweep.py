@@ -162,12 +162,24 @@ def smoke() -> int:
     L = cfg.n_fast_pages + cfg.n_slow_pages
     rate = summary.host_ticks_per_s
     conserved = _conserved(cfg, summary)
+    # streaming pathology telemetry rode along in the fleet carry: flag
+    # counters at any horizon with O(H * T) memory, never [ticks, ...]
+    detected = summary.detector is not None
+    flags = summary.pathology_flag_ticks() if detected else None
     ok = (rate >= base_rate and conserved and elapsed < SMOKE_BUDGET_S
-          and events > 0)
+          and events > 0 and detected)
     print(f"fleet smoke: {SMOKE_HOSTS} mixed hosts (static+churn, "
           f"{events} lifecycle events) x {SMOKE_TICKS} ticks, "
           f"chunk={summary.chunk}, sharded={summary.sharded} "
           f"({jax.local_device_count()} devices)")
+    if detected:
+        from repro.obs.streaming import KINDS
+        per_kind = {k: int(flags[:, :, i].sum())
+                    for i, k in enumerate(KINDS)}
+        hosts_flagged = int((flags.sum(axis=(1, 2)) > 0).sum())
+        print(f"  pathology flag-ticks (streamed, {flags.shape} counters): "
+              f"{per_kind}; hosts with any flag: {hosts_flagged}; "
+              f"end-of-run counts: {summary.pathology_counts()}")
     print(f"  rollout {summary.elapsed_s:.1f}s steady -> "
           f"{rate:,.0f} host-ticks/s "
           f"({rate * L:,.0f} page-ticks/s), baseline {base_rate:,.1f} "
@@ -216,8 +228,8 @@ def main() -> int:
         "sweep": sweep,
     }
     os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
-    with open(RESULTS, "w") as f:
-        json.dump(out, f, indent=1)
+    from benchmarks.run import write_result
+    write_result(RESULTS, out, config=cfg)
     print(f"wrote {RESULTS}")
     return 0
 

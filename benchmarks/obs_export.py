@@ -1,0 +1,67 @@
+"""Exporter smoke (scripts/check.sh): roll out a small mixed fleet with an
+injected thrasher, export the migration rings as Chrome-trace JSON and the
+fleet counters as Prometheus text exposition, and validate both artifacts —
+the trace parses and has monotone per-track timestamps, the exposition
+matches the text-format grammar with consistent histogram series. The
+streamed detectors must flag the injected chronic thrasher.
+
+  PYTHONPATH=src python -m benchmarks.obs_export --smoke   # CI gate
+  PYTHONPATH=src python -m benchmarks.obs_export           # same, keeps files
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+SMOKE_HOSTS = 4
+SMOKE_TICKS = 160
+SMOKE_BUDGET_S = 180.0
+
+
+def main() -> int:
+    from repro.obs.dashboard import demo_fleet
+    from repro.obs.export import (rollout_exposition, validate_chrome_trace,
+                                  validate_exposition, write_chrome_trace)
+
+    smoke = "--smoke" in sys.argv
+    t0 = time.perf_counter()
+    cfg, roll = demo_fleet(SMOKE_HOSTS, SMOKE_TICKS, noisy=True)
+
+    outdir = (tempfile.mkdtemp(prefix="obs_export_") if smoke
+              else os.path.join(os.path.dirname(__file__), "results"))
+    os.makedirs(outdir, exist_ok=True)
+    trace_path = os.path.join(outdir, "fleet.trace.json")
+    prom_path = os.path.join(outdir, "fleet.prom")
+
+    events = {h: roll.host_migrations(h)[0] for h in range(roll.n_hosts)}
+    trace = write_chrome_trace(trace_path, events,
+                               t_resident=cfg.t_resident,
+                               horizon=SMOKE_TICKS)
+    with open(trace_path) as f:
+        n_trace = validate_chrome_trace(json.load(f))   # round-trips as JSON
+
+    text = rollout_exposition(roll)
+    with open(prom_path, "w") as f:
+        f.write(text)
+    n_prom = validate_exposition(text)
+
+    counts = roll.pathology_counts()
+    flagged = counts.get("chronic_thrashing", 0) >= 1
+    elapsed = time.perf_counter() - t0
+    ok = (n_trace > 0 and n_prom > 0 and flagged
+          and elapsed < SMOKE_BUDGET_S)
+    print(f"obs export smoke: {SMOKE_HOSTS} hosts x {SMOKE_TICKS} ticks, "
+          f"{sum(len(e) for e in events.values())} ring events")
+    print(f"  chrome trace: {n_trace} events validated -> {trace_path}")
+    print(f"  exposition:   {n_prom} samples validated -> {prom_path}")
+    print(f"  pathology counts: {counts} (thrasher flagged: {flagged}); "
+          f"total={elapsed:.1f}s budget={SMOKE_BUDGET_S:.0f}s "
+          f"-> {'OK' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

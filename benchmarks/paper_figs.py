@@ -6,7 +6,6 @@ baseline where the paper compares), validates the paper's claim, and returns
 """
 from __future__ import annotations
 
-import json
 import time
 from pathlib import Path
 from typing import Dict, List, Tuple
@@ -28,10 +27,10 @@ def _timed(fn, *a, **kw):
     return out, (time.time() - t0) * 1e6
 
 
-def _save(name: str, detail: Dict):
+def _save(name: str, detail: Dict, config=None):
+    from benchmarks.run import write_result
     RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / f"{name}.json").write_text(
-        json.dumps(detail, indent=1, default=float))
+    write_result(RESULTS / f"{name}.json", detail, config=config)
 
 
 # ---------------------------------------------------------------- Fig. 3 ----

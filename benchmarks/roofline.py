@@ -181,10 +181,12 @@ def markdown_table(rows: List[RooflineRow]) -> str:
 
 
 def main():
+    from benchmarks.run import write_result
     rows = full_table()
     print(markdown_table(rows))
     out = Path(__file__).resolve().parent / "results" / "roofline.json"
-    out.write_text(json.dumps([r.as_dict() for r in rows], indent=1))
+    write_result(out, {"cells": [r.as_dict() for r in rows]},
+                 config={"archs": list(ARCH_IDS), "shapes": list(SHAPES)})
     print(f"\n{len(rows)} cells analyzed -> {out}")
 
 

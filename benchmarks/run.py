@@ -1,8 +1,66 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV. Also home of the shared result-stamping helper: every JSON under
+# benchmarks/results/ carries a common ``meta`` block (git sha, UTC date,
+# config hash, suite version) so results from different checkouts are
+# diffable artifacts.
 #
 #   PYTHONPATH=src python -m benchmarks.run            # paper benchmarks
 #   PYTHONPATH=src python -m benchmarks.run --roofline # + roofline summary
+import dataclasses
+import datetime
+import hashlib
+import json
+import subprocess
 import sys
+
+# Bump when the schema of any results/*.json payload changes shape.
+SUITE_VERSION = 2
+
+
+def git_sha() -> str:
+    """Current commit sha, or "unknown" outside a git checkout."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, check=True).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def config_hash(config=None) -> str:
+    """Short stable hash of the benchmark's config (a dataclass such as
+    TieringConfig, or any JSON-serializable mapping). "none" when the
+    benchmark has no single governing config."""
+    if config is None:
+        return "none"
+    if dataclasses.is_dataclass(config) and not isinstance(config, type):
+        config = dataclasses.asdict(config)
+    blob = json.dumps(config, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+def result_meta(config=None) -> dict:
+    return {
+        "git_sha": git_sha(),
+        "date_utc": datetime.datetime.now(datetime.timezone.utc)
+        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "config_hash": config_hash(config),
+        "suite_version": SUITE_VERSION,
+    }
+
+
+def write_result(path, payload: dict, config=None) -> dict:
+    """Stamp ``payload`` with the common meta block and write it to
+    ``path``. Benchmark-specific meta keys (backend, notes, ...) in
+    ``payload["meta"]`` are kept; the common stamp keys always win (a
+    retro-stamped or stale stamp never survives a rewrite)."""
+    meta = dict(payload.get("meta") or {})
+    meta.update(result_meta(config))
+    stamped = {"meta": meta}
+    stamped.update({k: v for k, v in payload.items() if k != "meta"})
+    with open(path, "w") as f:
+        json.dump(stamped, f, indent=1, default=float)
+    return stamped
 
 
 def main() -> None:

@@ -122,8 +122,9 @@ def main() -> int:
         "sweep": sweep,
     }
     os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
-    with open(RESULTS, "w") as f:
-        json.dump(out, f, indent=1)
+    from benchmarks.run import write_result
+    write_result(RESULTS, out,
+                 config={"modes": MODES, "TS": TS, "LS": LS, "k_max": 256})
     print(f"wrote {RESULTS}")
     return 0
 

@@ -20,6 +20,9 @@ python -m pytest -x -q "${MARK[@]}"
 echo "== obs fleet smoke (4 hosts) =="
 python -m benchmarks.fleet_obs --smoke
 
+echo "== obs exporter smoke (Chrome trace + Prometheus exposition) =="
+python -m benchmarks.obs_export --smoke
+
 echo "== scale smoke (T=16, L=16k, 50 ticks) =="
 python -m benchmarks.scale_sweep --smoke
 

@@ -43,25 +43,28 @@ __all__ = ["MODES", "IMPLS", "TickOutput", "make_tick", "run_engine"]
 
 
 def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
-              k_max: int = 256, impl: str = "batched"):
+              k_max: int = 256, impl: str = "batched", detector=None):
     """Build the jittable tick. owner: [L] int (static tenant of each page).
 
     impl: "batched" (segmented selection + scatter-add reductions, trace-time
     constant in T) or "unrolled" (the seed engine: per-tenant top_k loops and
     [T, L] one-hot matmuls — kept for equivalence tests and benchmarks).
+    detector: optional ``obs.streaming.DetectorSpec`` — the state must then
+    carry a matching DetectorState (``init_state(..., detector=...)``).
     """
     assert impl in IMPLS, impl
     provider = static_ownership(cfg, owner, k_max=k_max, impl=impl)
-    return make_tick_core(cfg, provider, mode=mode, k_max=k_max)
+    return make_tick_core(cfg, provider, mode=mode, k_max=k_max,
+                          detector=detector)
 
 
 def run_engine(cfg: TieringConfig, owner: np.ndarray, accesses: np.ndarray,
                alive: np.ndarray, mode: str = "equilibria",
-               k_max: int = 256, impl: str = "batched"
+               k_max: int = 256, impl: str = "batched", detector=None
                ) -> Tuple[TierState, TickOutput]:
     """Run the full trace (scan over ticks). accesses/alive: [ticks, L]."""
-    tick = make_tick(cfg, owner, mode, k_max, impl=impl)
-    state = init_state(cfg, owner.shape[0], owner=owner)
+    tick = make_tick(cfg, owner, mode, k_max, impl=impl, detector=detector)
+    state = init_state(cfg, owner.shape[0], owner=owner, detector=detector)
 
     @jax.jit
     def run(state, accesses, alive):

@@ -13,7 +13,7 @@ sentinel) belongs to the free pool.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.configs.base import TieringConfig
 from repro.obs.stats import TierStats, init_stats, stats_export
+from repro.obs.streaming import DetectorSpec, DetectorState, init_detector
 from repro.obs.trace import MigrationRing, init_ring
 
 TIER_NONE = -1
@@ -74,6 +75,10 @@ class TierState(NamedTuple):
     stats: TierStats
     ring: MigrationRing
     t: jax.Array                  # scalar int32 tick
+    # streaming pathology detectors (obs/streaming.py). None (the default)
+    # is an *empty pytree subtree*: states built without a detector keep
+    # their pre-existing tree structure, jaxprs and golden traces bit-exact.
+    det: Optional[DetectorState] = None
 
 
 def zero_counters(n_tenants: int) -> Counters:
@@ -81,10 +86,12 @@ def zero_counters(n_tenants: int) -> Counters:
     return Counters(z, z, z, z, z, z, z)
 
 
-def init_state(cfg: TieringConfig, n_pages: int,
-               owner=None) -> TierState:
+def init_state(cfg: TieringConfig, n_pages: int, owner=None,
+               detector: Optional[DetectorSpec] = None) -> TierState:
     """``owner``: [n_pages] int tenant ids, or None for an all-free pool
-    (the dynamic-ownership engine's starting point)."""
+    (the dynamic-ownership engine's starting point). ``detector``: a
+    ``DetectorSpec`` to carry streaming pathology detectors in the state
+    (must match the ``detector`` passed to the tick builder)."""
     T = cfg.n_tenants
     owner_j = (jnp.full((n_pages,), T, jnp.int32) if owner is None
                else jnp.asarray(owner, jnp.int32))
@@ -105,6 +112,7 @@ def init_state(cfg: TieringConfig, n_pages: int,
         stats=init_stats(T, (n_pages,), cfg.obs_resid_buckets),
         ring=init_ring(cfg.obs_ring_capacity),
         t=jnp.zeros((), jnp.int32),
+        det=None if detector is None else init_detector(detector),
     )
 
 

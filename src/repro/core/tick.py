@@ -46,7 +46,7 @@ fixtures pass unregenerated).
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +59,7 @@ from repro.core.state import (TIER_FAST, TIER_NONE, TIER_SLOW, Counters,
                               TenantPolicy, ThrashTable, TierState,
                               make_policy)
 from repro.obs import stats as OS
+from repro.obs import streaming as DS
 from repro.obs import trace as OT
 
 MODES = ("equilibria", "tpp", "memtis", "static")
@@ -86,6 +87,9 @@ class Prepared(NamedTuple):
     owner: jax.Array          # [L] effective owner this tick
     owner_c: jax.Array        # [L] gather-safe owner (sentinel clamped)
     alive: jax.Array          # [L] bool
+    active: jax.Array         # [T] bool tenant roster this tick — the SAME
+    #                           definition the offline detectors judge with
+    #                           (static: any live page; dynamic: want > 0)
     accesses: jax.Array       # [L] f32
     tier: jax.Array           # [L] int32, post-lifecycle
     hot: jax.Array            # [L] f32, post-lifecycle
@@ -130,10 +134,14 @@ def static_ownership(cfg: TieringConfig, owner: np.ndarray, k_max: int,
         stats = OS.record_fast_exits(state.stats,
                                      died & (tier == TIER_FAST), owner_j, t)
         tier = jnp.where(died, TIER_NONE, tier)
+        # roster for the streaming detectors: any live page this tick —
+        # identical to the offline harness's ``tenant_activity``
+        active = strategy.by_tenant(alive.astype(jnp.int32), owner_j) > 0
         # carry the state's owner through (it never changes); gathers use
         # the trace-time constant ``owner_j`` exactly as the seed engine did
         return Prepared(
-            owner=state.owner, owner_c=owner_j, alive=alive, accesses=accesses,
+            owner=state.owner, owner_c=owner_j, alive=alive, active=active,
+            accesses=accesses,
             tier=tier, hot=state.hot, table=state.table, stats=stats,
             ring=state.ring, pol=pol, freed_t=freed_t,
             promo_scale=state.promo_scale, steady=state.steady,
@@ -229,7 +237,8 @@ def dynamic_ownership(cfg: TieringConfig, n_pages: int,
         pol = P.repartition_policy(base_pol, active, n_fast - wmark, weights)
 
         return Prepared(
-            owner=owner, owner_c=owner_c, alive=owned, accesses=accesses,
+            owner=owner, owner_c=owner_c, alive=owned, active=active,
+            accesses=accesses,
             tier=tier, hot=hot, table=table, stats=stats, ring=state.ring,
             pol=pol, freed_t=freed_t,
             promo_scale=promo_scale0, steady=steady0,
@@ -242,16 +251,25 @@ def dynamic_ownership(cfg: TieringConfig, n_pages: int,
 
 
 def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
-                   mode: str = "equilibria", k_max: int = 256):
+                   mode: str = "equilibria", k_max: int = 256,
+                   detector: Optional[DS.DetectorSpec] = None):
     """Build the jittable unified tick over an ownership provider.
 
     One compiled tick per provider serves any schedule data: trace size,
     jaxpr size and kernel count are constant in T (tenant-batched
     selection) and in the number of lifecycle events (ownership is scan
     data, not structure).
+
+    ``detector``: optional streaming-pathology spec (obs/streaming.py). When
+    set, the state must carry a matching ``DetectorState`` (build it via
+    ``init_state(..., detector=spec)``) and step 9b folds this tick's
+    telemetry into it; the spec's window geometry is baked in as constants,
+    so jaxpr size stays independent of the horizon it was built for.
     """
     assert mode in MODES, mode
     T = cfg.n_tenants
+    if detector is not None:
+        assert detector.n_tenants == T, (detector.n_tenants, T)
     L = provider.n_pages
     n_fast = cfg.n_fast_pages
     wmark = max(int(np.ceil(n_fast * cfg.watermark_free)), 1)
@@ -503,7 +521,7 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
             thrash_prev=prep.thrash_prev, usage_prev=prep.usage_prev,
             freed_since=prep.freed_since, steady=prep.steady,
             mitigated_prev=prep.mitigated_prev,
-            table=table, stats=stats, ring=ring, t=t + 1)
+            table=table, stats=stats, ring=ring, t=t + 1, det=state.det)
 
         # ---- 8. periodic controller (§IV-F) ---------------------------------
         def run_ctrl(s: TierState) -> TierState:
@@ -529,6 +547,18 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
             / jnp.maximum(a_tot, 1e-9),
             cfg.lat_fast) + migrations * cfg.migration_cost
         thru = jnp.where(a_tot > 0, a_tot / lat, 0.0)
+
+        # ---- 9b. streaming pathology detectors (obs/streaming.py) ----------
+        # fed the exact per-tick values the offline detectors read from
+        # TickOutput traces, so the streamed verdicts can agree bit-for-bit
+        if detector is not None:
+            new_state = new_state._replace(det=DS.update_detector(
+                detector, state.det,
+                DS.DetectorSignals(
+                    active=prep.active, thrash_new=thrash_new,
+                    fast_usage=fast_usage, slow_usage=slow_usage,
+                    attempted=cand_t, promotions=promo_t, demotions=demo_t,
+                    latency=lat), t))
 
         out = TickOutput(
             fast_usage=fast_usage, slow_usage=slow_usage,

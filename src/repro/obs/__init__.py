@@ -2,27 +2,47 @@
 
 Everything under ``obs/`` splits into two halves:
 
-  in-graph   — ``stats.TierStats`` (per-tenant tiering_stat-style metrics)
-               and ``trace.MigrationRing`` (fixed-capacity migration event
-               buffer). Both are pytrees of jnp arrays updated inside the
-               compiled tick / serve step, so collection costs no host
-               round-trips and works under jit, scan and vmap.
+  in-graph   — ``stats.TierStats`` (per-tenant tiering_stat-style metrics),
+               ``trace.MigrationRing`` (fixed-capacity migration event
+               buffer) and ``streaming.DetectorState`` (the four pathology
+               detectors as windowed scan state: per-tenant flag counters
+               and first-flag ticks at any horizon, O(T) memory). All are
+               pytrees of jnp arrays updated inside the compiled tick /
+               serve step, so collection costs no host round-trips and
+               works under jit, scan and vmap.
   host-side  — ``stats.stats_summary`` / ``trace.decode_ring`` decoders,
-               ``pathology`` offline detectors for the paper's failure
-               modes, and the ``fleet`` harness that vmaps the engine
-               across simulated hosts and rolls telemetry up fleet-wide.
+               ``pathology`` offline detectors (the differential reference
+               for the streaming ones), the ``fleet`` harness that vmaps
+               the engine across simulated hosts and rolls telemetry up
+               fleet-wide, and the ``export``/``dashboard`` surfaces:
+               Chrome-trace/Perfetto JSON of the migration rings,
+               Prometheus text exposition of fleet counters, and a
+               markdown fleet dashboard CLI.
 """
-from repro.obs.stats import (TierStats, below_protection, init_stats,
+from repro.obs.export import (chrome_trace, fleet_exposition,
+                              rollout_exposition, validate_chrome_trace,
+                              validate_exposition, write_chrome_trace)
+from repro.obs.stats import (TierStats, below_protection, hist_percentile,
+                             hist_percentile_j, init_stats,
                              record_fast_entries, record_fast_exits,
                              residency_bucket, stats_export, stats_summary,
                              update_tick)
+from repro.obs.streaming import (KINDS, DetectorSignals, DetectorSpec,
+                                 DetectorState, flag_summary, init_detector,
+                                 make_detector, run_detector,
+                                 streaming_pathologies, update_detector)
 from repro.obs.trace import (DIR_DEMOTE, DIR_PROMOTE, MigrationRing,
                              decode_ring, init_ring, ring_record)
 
 __all__ = [
     "TierStats", "below_protection", "init_stats", "record_fast_entries",
     "record_fast_exits", "residency_bucket", "stats_export", "stats_summary",
-    "update_tick",
+    "update_tick", "hist_percentile", "hist_percentile_j",
     "MigrationRing", "init_ring", "ring_record", "decode_ring",
     "DIR_PROMOTE", "DIR_DEMOTE",
+    "KINDS", "DetectorSpec", "DetectorState", "DetectorSignals",
+    "make_detector", "init_detector", "update_detector", "run_detector",
+    "streaming_pathologies", "flag_summary",
+    "chrome_trace", "write_chrome_trace", "validate_chrome_trace",
+    "fleet_exposition", "rollout_exposition", "validate_exposition",
 ]

@@ -49,6 +49,8 @@ from repro.core.workloads import (ChurnSlot, TenantWorkload, as_churn_slots,
                                   spark_like, thrasher, web_like)
 from repro.obs.pathology import Pathology, count_by_kind, detect_all
 from repro.obs.stats import stats_summary
+from repro.obs.streaming import (KINDS, DetectorSpec, make_detector,
+                                 streaming_pathologies)
 from repro.obs.trace import decode_ring
 
 # stable-pattern menu for clean hosts (hot sets that mostly fit fast tier)
@@ -135,20 +137,23 @@ class FleetResult:
         return decode_ring(ring)
 
     def pathology_counts(self) -> Dict[str, int]:
+        """Fleet-wide counts by kind, keys sorted (stable across runs)."""
         out: Dict[str, int] = {}
         for ps in self.pathologies:
             for k, v in count_by_kind(ps).items():
                 out[k] = out.get(k, 0) + v
-        return out
+        return dict(sorted(out.items()))
 
-    def tenants_flagged(self, kind: Optional[str] = None) -> set:
-        """(host, tenant) pairs flagged, optionally for one pathology kind."""
+    def tenants_flagged(self, kind: Optional[str] = None
+                        ) -> List[Tuple[int, int]]:
+        """Sorted unique (host, tenant) pairs flagged, optionally for one
+        pathology kind — deterministic order, safe for golden tests."""
         out = set()
         for h, ps in enumerate(self.pathologies):
             for p in ps:
                 if kind is None or p.kind == kind:
                     out.add((h, p.tenant))
-        return out
+        return sorted(out)
 
     def rollup(self) -> dict:
         """Fleet-wide operator summary. Latency/throughput aggregates cover
@@ -329,6 +334,7 @@ class RolloutSummary:
     throughput_mean: np.ndarray      # [H] mean per-tick total throughput
     migrations_per_tick: np.ndarray  # [H]
     final_state: object = None       # batched TierState [H, ...]
+    detector: Optional[DetectorSpec] = None
 
     @property
     def host_ticks_per_s(self) -> float:
@@ -341,12 +347,68 @@ class RolloutSummary:
     def counters(self):
         return jax.tree_util.tree_map(np.asarray, self.final_state.counters)
 
+    def host_migrations(self, host: int):
+        """Decode one host's migration ring -> (events, n_dropped)."""
+        ring = jax.tree_util.tree_map(lambda x: x[host],
+                                      self.final_state.ring)
+        return decode_ring(ring)
+
+    # ---- streaming pathology telemetry (obs/streaming.py) ----------------
+    def host_pathologies(self, host: int) -> List[Pathology]:
+        """One host's end-of-run pathologies from its streamed counters."""
+        if self.detector is None:
+            raise ValueError("rollout ran with detect=False")
+        det = jax.tree_util.tree_map(lambda x: x[host], self.final_state.det)
+        return streaming_pathologies(self.detector, det)
+
+    def pathology_flag_ticks(self) -> np.ndarray:
+        """[H, T, len(KINDS)] int32: ticks each running flag held."""
+        return np.asarray(self.final_state.det.flag_ticks)
+
+    def pathology_first_flag(self) -> np.ndarray:
+        """[H, T, len(KINDS)] int32: first tick each flag held (-1 never)."""
+        return np.asarray(self.final_state.det.first_flag)
+
+    def pathology_counts(self) -> Dict[str, int]:
+        """Fleet-wide end-of-run counts by kind, keys sorted."""
+        out: Dict[str, int] = {}
+        for h in range(self.n_hosts):
+            for k, v in count_by_kind(self.host_pathologies(h)).items():
+                out[k] = out.get(k, 0) + v
+        return dict(sorted(out.items()))
+
+    def tenants_flagged(self, kind: Optional[str] = None
+                        ) -> List[Tuple[int, int]]:
+        """Sorted unique (host, tenant) pairs flagged end-of-run."""
+        out = set()
+        for h in range(self.n_hosts):
+            for p in self.host_pathologies(h):
+                if kind is None or p.kind == kind:
+                    out.add((h, p.tenant))
+        return sorted(out)
+
+    def pathology_rollup(self) -> dict:
+        """Operator roll-up of the streamed pathology state (the fleet-scale
+        analogue of ``FleetResult.rollup``, O(H * T) not O(H * ticks))."""
+        flagged = self.tenants_flagged()
+        first = self.pathology_first_flag()
+        return {
+            "hosts": self.n_hosts,
+            "ticks": self.ticks,
+            "pathology_counts": self.pathology_counts(),
+            "tenants_flagged": flagged,
+            "hosts_with_pathology": len({h for h, _ in flagged}),
+            "earliest_flag_tick": (int(first[first >= 0].min())
+                                   if (first >= 0).any() else -1),
+        }
+
 
 def fleet_rollout(cfg: TieringConfig, want: np.ndarray, rates: np.ndarray,
                   ticks: int, *, host_arch: Optional[np.ndarray] = None,
                   mode: str = "equilibria", k_max: int = 64,
                   chunk: int = 256, n_pages: Optional[int] = None,
-                  shard: bool = True, warmup: bool = False) -> RolloutSummary:
+                  shard: bool = True, warmup: bool = False,
+                  detect: bool = True) -> RolloutSummary:
     """Advance a fleet over a long horizon without host round-trips or
     memory blowup.
 
@@ -365,6 +427,12 @@ def fleet_rollout(cfg: TieringConfig, want: np.ndarray, rates: np.ndarray,
     ``warmup=True`` runs one throwaway chunk on a scratch fleet state
     before the timed rollout so ``elapsed_s`` measures steady-state
     execution, not XLA compilation (the benchmark gate's tick-rate).
+
+    ``detect=True`` (default) carries the streaming pathology detectors
+    (obs/streaming.py) in the fleet state: per-host per-tenant flag counters
+    and first-flag ticks at any horizon, O(H * T) extra memory — the
+    observability the chunked rollout exists to keep while never
+    materializing ``[ticks, ...]`` traces.
     """
     want = np.asarray(want)
     rates = np.asarray(rates)
@@ -377,7 +445,9 @@ def fleet_rollout(cfg: TieringConfig, want: np.ndarray, rates: np.ndarray,
     L = n_pages if n_pages is not None else \
         cfg.n_fast_pages + cfg.n_slow_pages
     cfg = cfg.with_(n_tenants=T)
-    tick = make_churn_tick(cfg, L, mode=mode, k_max=k_max)
+    det_spec = (make_detector(ticks, T, cfg.lower_protection)
+                if detect else None)
+    tick = make_churn_tick(cfg, L, mode=mode, k_max=k_max, detector=det_spec)
     vtick = jax.vmap(tick)
     want_j = jnp.asarray(want, jnp.int32)
     rates_j = jnp.asarray(rates, jnp.float32)
@@ -409,7 +479,7 @@ def fleet_rollout(cfg: TieringConfig, want: np.ndarray, rates: np.ndarray,
     chunk = max(min(chunk, ticks), 1)
     D = jax.local_device_count()
     use_pmap = bool(shard) and D > 1 and H % D == 0
-    states = stack_states(init_state(cfg, L), H)
+    states = stack_states(init_state(cfg, L, detector=det_spec), H)
     if use_pmap:
         def resh(x):
             return jnp.reshape(x, (D, H // D) + x.shape[1:])
@@ -432,7 +502,7 @@ def fleet_rollout(cfg: TieringConfig, want: np.ndarray, rates: np.ndarray,
     if warmup:
         # compile (and once-run) every chunk program on a scratch state —
         # donation consumes the scratch buffers, the real fleet is untouched
-        scratch = stack_states(init_state(cfg, L), H)
+        scratch = stack_states(init_state(cfg, L, detector=det_spec), H)
         if use_pmap:
             scratch = jax.tree_util.tree_map(resh, scratch)
         scratch, _ = run_chunk(scratch, arch, 0)
@@ -475,4 +545,4 @@ def fleet_rollout(cfg: TieringConfig, want: np.ndarray, rates: np.ndarray,
         latency_mean=lat_sum / ticks,
         throughput_mean=thr_sum / ticks,
         migrations_per_tick=mig_sum / ticks,
-        final_state=states)
+        final_state=states, detector=det_spec)

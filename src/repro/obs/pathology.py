@@ -23,6 +23,21 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+# Default thresholds — ONE source of truth shared with the streaming
+# in-graph detectors (obs/streaming.py builds its DetectorSpec from these,
+# so the offline and online state machines can never drift apart).
+STEADY_FRAC = 0.5            # _steady: judge the last half of the run
+RESIDENT_MIN_FRAC = 0.5      # _tenant_in_window churn gate
+THRASH_WINDOW = 20           # ticks per thrash-rate window
+THRASH_RATE_THRESHOLD = 4.0  # events/window that makes a window "bad"
+THRASH_FRAC_THRESHOLD = 0.5  # bad-window fraction that flags a tenant
+PROT_TOLERANCE = 0.05        # slack below lower protection before violating
+PROT_FRAC_THRESHOLD = 0.25   # violating-tick fraction that flags
+NOISY_DOMINANCE = 0.5        # migration-traffic share that dominates
+NOISY_DEGRADE = 1.10         # neighbor latency degrade vs early baseline
+STALL_MIN_ATTEMPTS = 1.0     # attempts/tick that counts as sustained demand
+STALL_SUCCESS = 0.02         # success ratio below which promotion "stalls"
+
 
 @dataclass(frozen=True)
 class Pathology:
@@ -37,12 +52,12 @@ class Pathology:
                 f"severity={self.severity:.2f} {ev}")
 
 
-def _steady(n_ticks: int, frac: float = 0.5) -> slice:
+def _steady(n_ticks: int, frac: float = STEADY_FRAC) -> slice:
     return slice(int(n_ticks * (1 - frac)), n_ticks)
 
 
 def _tenant_in_window(active: Optional[np.ndarray], w: slice, tenant: int,
-                      min_frac: float = 0.5) -> bool:
+                      min_frac: float = RESIDENT_MIN_FRAC) -> bool:
     """Churn gate: with a per-tick roster (``active`` [ticks, T] bool), a
     tenant is only judged over a window it meaningfully occupied — resident
     for >= ``min_frac`` of the window AND still resident at its end. A
@@ -57,9 +72,10 @@ def _tenant_in_window(active: Optional[np.ndarray], w: slice, tenant: int,
     return bool(a[-1]) and float(a.mean()) >= min_frac
 
 
-def detect_chronic_thrashing(thrash_events: np.ndarray, window: int = 20,
-                             rate_threshold: float = 4.0,
-                             frac_threshold: float = 0.5,
+def detect_chronic_thrashing(thrash_events: np.ndarray,
+                             window: int = THRASH_WINDOW,
+                             rate_threshold: float = THRASH_RATE_THRESHOLD,
+                             frac_threshold: float = THRASH_FRAC_THRESHOLD,
                              active: Optional[np.ndarray] = None
                              ) -> List[Pathology]:
     """thrash_events: [ticks, T] *cumulative*. Flags tenants whose per-window
@@ -106,8 +122,8 @@ def detect_protection_violation(fast_usage: np.ndarray,
                                 lower_protection: Sequence[int],
                                 attempted: Optional[np.ndarray] = None,
                                 demotions: Optional[np.ndarray] = None,
-                                tolerance: float = 0.05,
-                                frac_threshold: float = 0.25,
+                                tolerance: float = PROT_TOLERANCE,
+                                frac_threshold: float = PROT_FRAC_THRESHOLD,
                                 active: Optional[np.ndarray] = None
                                 ) -> List[Pathology]:
     """fast/slow_usage: [ticks, T]. A tenant violates its lower protection
@@ -153,8 +169,8 @@ def detect_protection_violation(fast_usage: np.ndarray,
 
 def detect_noisy_neighbor(promotions: np.ndarray, demotions: np.ndarray,
                           latency: np.ndarray,
-                          dominance_threshold: float = 0.5,
-                          degrade_threshold: float = 1.10
+                          dominance_threshold: float = NOISY_DOMINANCE,
+                          degrade_threshold: float = NOISY_DEGRADE
                           ) -> List[Pathology]:
     """[ticks, T] each. Flags a tenant whose share of total migration traffic
     exceeds ``dominance_threshold`` over the steady window while at least one
@@ -188,8 +204,8 @@ def detect_noisy_neighbor(promotions: np.ndarray, demotions: np.ndarray,
 
 
 def detect_promotion_stall(attempted: np.ndarray, promotions: np.ndarray,
-                           min_attempts_per_tick: float = 1.0,
-                           success_threshold: float = 0.02,
+                           min_attempts_per_tick: float = STALL_MIN_ATTEMPTS,
+                           success_threshold: float = STALL_SUCCESS,
                            active: Optional[np.ndarray] = None
                            ) -> List[Pathology]:
     """[ticks, T] per-tick attempts vs successes. Flags tenants with sustained
@@ -221,7 +237,7 @@ def detect_all(fast_usage: np.ndarray, slow_usage: np.ndarray,
                latency: np.ndarray, thrash_events: np.ndarray,
                attempted: Optional[np.ndarray] = None,
                lower_protection: Sequence[int] = (),
-               thrash_rate_threshold: float = 4.0,
+               thrash_rate_threshold: float = THRASH_RATE_THRESHOLD,
                active: Optional[np.ndarray] = None) -> List[Pathology]:
     """Run every detector over one host's collected telemetry. ``active``
     ([ticks, T] bool, optional) is the churn roster. Current-state

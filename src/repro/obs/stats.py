@@ -154,10 +154,18 @@ def update_tick(stats: TierStats, *,
         ticks=stats.ticks + 1)
 
 
-def _hist_percentile_j(hist: jax.Array, q: float) -> jax.Array:
+# One histogram-percentile spec, two implementations (jnp for in-graph
+# exports, numpy for host-side decoding). For a [T, NB] histogram with
+# inclusive cumulative mass ``cum`` and ``total = cum[:, -1]``, the
+# q-percentile is the LOWER EDGE of the first bucket where
+# ``cum >= q * total``. Pinned consequences (tests/test_streaming_obs.py):
+#   * empty histogram (total == 0)  -> 0.0
+#   * all mass in the last bucket   -> last edge for every q > 0
+#   * q = 0 -> edges[0] = 0 (cum[0] >= 0 always holds)
+#   * q = 1 -> the last non-empty bucket's edge
+def hist_percentile_j(hist: jax.Array, q: float) -> jax.Array:
     """Pure-jnp per-tenant percentile (bucket lower edge) of residency."""
-    NB = hist.shape[1]
-    edges = jnp.asarray(bucket_edges(NB), jnp.float32)
+    edges = jnp.asarray(bucket_edges(hist.shape[1]), jnp.float32)
     cum = jnp.cumsum(hist, axis=1)
     total = cum[:, -1:]
     idx = jnp.argmax(cum >= q * total, axis=1)
@@ -171,8 +179,8 @@ def stats_export(stats: TierStats) -> dict:
     att_p = stats.promo_attempts.astype(jnp.float32)
     att_d = stats.demo_attempts.astype(jnp.float32)
     return {
-        "resid_p50": _hist_percentile_j(stats.resid_hist, 0.50),
-        "resid_p99": _hist_percentile_j(stats.resid_hist, 0.99),
+        "resid_p50": hist_percentile_j(stats.resid_hist, 0.50),
+        "resid_p99": hist_percentile_j(stats.resid_hist, 0.99),
         "promo_success_ratio": jnp.where(
             att_p > 0, stats.promo_success / jnp.maximum(att_p, 1.0), 1.0),
         "demo_success_ratio": jnp.where(
@@ -185,18 +193,15 @@ def stats_export(stats: TierStats) -> dict:
 
 
 # ------------------------------------------------------------ host side ----
-def _hist_percentile(hist: np.ndarray, q: float) -> np.ndarray:
-    """Per-tenant approximate percentile (bucket lower edge) of residency."""
-    T, NB = hist.shape
-    edges = bucket_edges(NB)
-    out = np.zeros(T)
-    for t in range(T):
-        total = hist[t].sum()
-        if total == 0:
-            continue
-        cum = np.cumsum(hist[t])
-        out[t] = edges[int(np.searchsorted(cum, q * total, side="left"))]
-    return out
+def hist_percentile(hist: np.ndarray, q: float) -> np.ndarray:
+    """Numpy twin of ``hist_percentile_j`` — same spec (see above), decoded
+    host-side and vectorized over tenants."""
+    hist = np.asarray(hist)
+    edges = bucket_edges(hist.shape[1]).astype(np.float64)
+    cum = np.cumsum(hist, axis=1)
+    total = cum[:, -1]
+    idx = np.argmax(cum >= q * total[:, None], axis=1)
+    return np.where(total > 0, edges[idx], 0.0)
 
 
 def stats_summary(stats: TierStats) -> dict:
@@ -211,8 +216,8 @@ def stats_summary(stats: TierStats) -> dict:
     return {
         "resid_hist": h,
         "resid_bucket_edges": bucket_edges(h.shape[1]),
-        "resid_p50": _hist_percentile(h, 0.50),
-        "resid_p99": _hist_percentile(h, 0.99),
+        "resid_p50": hist_percentile(h, 0.50),
+        "resid_p99": hist_percentile(h, 0.99),
         "promo_attempts": att_p.astype(np.int64),
         "promo_success": suc_p.astype(np.int64),
         "promo_success_ratio": np.where(att_p > 0, suc_p / np.maximum(att_p, 1), 1.0),

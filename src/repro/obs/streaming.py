@@ -1,0 +1,378 @@
+"""Streaming in-graph pathology detection: the offline detectors of
+``obs/pathology.py`` reimplemented as windowed state machines carried
+through ``lax.scan``.
+
+The offline detectors need full ``[N_ticks, T]`` traces — exactly what the
+chunked ``fleet_rollout`` (O(1) output memory) cannot produce. Here the
+same four pathologies are detected *online*: a ``DetectorState`` pytree of
+[T]-shaped counters rides in ``TierState`` and is folded one tick at a time
+inside the unified tick (core/tick.py step 9b), so a 10k-host x 10k-tick
+fleet reports per-host per-tenant pathology flags with O(H * T) memory and
+a jaxpr that is constant in horizon and event count (the window geometry —
+steady start, window width, baseline length — is baked in as Python
+constants via ``DetectorSpec``).
+
+Semantics contract (pinned by tests/test_streaming_obs.py):
+
+  * chronic thrashing, protection violation and promotion stall accumulate
+    the SAME integer counters the offline detectors derive from traces, so
+    their end-of-run decisions (``streaming_pathologies``) agree *exactly*
+    with ``detect_all`` on any horizon.
+  * noisy neighbor replaces the offline f64 trace means with running f32
+    sums; flags agree except within float error of the thresholds
+    (documented <= 5% flag-count tolerance; in practice exact on every
+    pinned scenario).
+  * additionally each tick evaluates a *running* verdict from the counters
+    so far, feeding ``flag_ticks`` (ticks the condition held) and
+    ``first_flag`` (first tick it held, -1 = never) — online-only signals
+    with no offline analogue (the offline pass only judges the full run).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs import pathology as PA
+from repro.obs.pathology import Pathology
+
+# fixed kind order of the trailing axis of flag_ticks / first_flag
+KINDS = ("chronic_thrashing", "protection_violation", "noisy_neighbor",
+         "promotion_stall")
+N_KINDS = len(KINDS)
+
+
+@dataclass(frozen=True)
+class DetectorSpec:
+    """Host-side window geometry + thresholds, all Python constants (baked
+    into the traced tick — a spec never changes jaxpr *size*, only the
+    embedded scalars)."""
+    horizon: int                 # ticks the run will last
+    n_tenants: int
+    protection: Tuple[float, ...]   # [T] lower protection (pages; 0 = none)
+    steady_start: int            # first steady tick (offline _steady)
+    window: int                  # thrash window width, post-adjustment
+    base_ticks: int              # noisy-neighbor baseline = ticks < this
+    thrash_rate_threshold: float = PA.THRASH_RATE_THRESHOLD
+    thrash_frac_threshold: float = PA.THRASH_FRAC_THRESHOLD
+    prot_tolerance: float = PA.PROT_TOLERANCE
+    prot_frac_threshold: float = PA.PROT_FRAC_THRESHOLD
+    noisy_dominance: float = PA.NOISY_DOMINANCE
+    noisy_degrade: float = PA.NOISY_DEGRADE
+    stall_min_attempts: float = PA.STALL_MIN_ATTEMPTS
+    stall_success: float = PA.STALL_SUCCESS
+    resident_min_frac: float = PA.RESIDENT_MIN_FRAC
+
+    @property
+    def n_steady(self) -> int:
+        return self.horizon - self.steady_start
+
+
+def make_detector(horizon: int, n_tenants: int,
+                  lower_protection: Sequence[float] = (),
+                  *, steady_frac: float = PA.STEADY_FRAC,
+                  window: int = PA.THRASH_WINDOW,
+                  **thresholds) -> DetectorSpec:
+    """Derive the window geometry exactly as the offline detectors do:
+    steady window = last ``steady_frac`` of the run, thrash window shrunk to
+    ``max(steady_len // 4, 1)`` when the steady half can't fit two full
+    windows, noisy baseline = first quarter of the run."""
+    s0 = int(horizon * (1 - steady_frac))        # pathology._steady
+    n_steady = horizon - s0
+    if n_steady < 2 * window:                    # detect_chronic_thrashing
+        window = max(n_steady // 4, 1)
+    prot = [0.0] * n_tenants
+    for i, v in enumerate(lower_protection[:n_tenants]):
+        prot[i] = float(v)
+    return DetectorSpec(
+        horizon=horizon, n_tenants=n_tenants, protection=tuple(prot),
+        steady_start=s0, window=window,
+        base_ticks=max(horizon // 4, 1),         # detect_noisy_neighbor
+        **thresholds)
+
+
+class DetectorSignals(NamedTuple):
+    """One tick's telemetry, all [T] (what the offline detectors read per
+    trace row). Produced inside the unified tick after the perf model."""
+    active: jax.Array        # bool  tenant resident this tick
+    thrash_new: jax.Array    # int32 thrash events this tick
+    fast_usage: jax.Array    # int32 fast-tier pages
+    slow_usage: jax.Array    # int32 slow-tier pages
+    attempted: jax.Array     # int32 promotion candidates
+    promotions: jax.Array    # int32
+    demotions: jax.Array     # int32
+    latency: jax.Array       # f32
+
+
+class DetectorState(NamedTuple):
+    """Scan-carried detector memory. All [T] unless noted — O(T) per host,
+    independent of horizon and event count."""
+    # chronic thrashing: tumbling windows over the steady half
+    win_events: jax.Array        # int32 thrash events in the open window
+    win_resident: jax.Array      # bool  resident every tick of that window
+    windows_resident: jax.Array  # int32 closed fully-resident windows
+    windows_bad: jax.Array       # int32 ... of those, over rate threshold
+    events_resident: jax.Array   # int32 thrash events inside resident windows
+    # protection violation
+    viol_ticks: jax.Array        # int32 violating steady ticks
+    fast_sum: jax.Array          # f32   steady fast_usage sum (evidence)
+    # promotion stall
+    att_steady: jax.Array        # int32 steady promotion candidates
+    promo_steady: jax.Array      # int32 steady promotions
+    # noisy neighbor
+    mig_steady: jax.Array        # int32 steady promotions + demotions
+    lat_base_sum: jax.Array      # f32   latency over the baseline window
+    lat_steady_sum: jax.Array    # f32   latency over the steady window
+    # shared roster gate
+    active_steady: jax.Array     # int32 resident steady ticks
+    active_last: jax.Array       # bool  resident at last steady tick seen
+    # online flags
+    flag_ticks: jax.Array        # [T, N_KINDS] int32 ticks condition held
+    first_flag: jax.Array        # [T, N_KINDS] int32 first such tick, -1
+
+
+def init_detector(spec: DetectorSpec) -> DetectorState:
+    T = spec.n_tenants
+    z = jnp.zeros((T,), jnp.int32)
+    f = jnp.zeros((T,), jnp.float32)
+    b = jnp.zeros((T,), bool)
+    return DetectorState(
+        win_events=z, win_resident=jnp.ones((T,), bool),
+        windows_resident=z, windows_bad=z, events_resident=z,
+        viol_ticks=z, fast_sum=f, att_steady=z, promo_steady=z,
+        mig_steady=z, lat_base_sum=f, lat_steady_sum=f,
+        active_steady=z, active_last=b,
+        flag_ticks=jnp.zeros((T, N_KINDS), jnp.int32),
+        first_flag=jnp.full((T, N_KINDS), -1, jnp.int32))
+
+
+def update_detector(spec: DetectorSpec, det: DetectorState,
+                    sig: DetectorSignals, t: jax.Array) -> DetectorState:
+    """Fold one tick. Mirrors the offline trace math exactly:
+
+    * window j of chronic thrashing covers steady ticks
+      ``[s0 + j*W, s0 + (j+1)*W)`` and its event count is the cumulative
+      diff ``cum[s0+(j+1)W] - cum[s0+jW]`` — i.e. events *at* a boundary
+      tick belong to the window that just closed, and events at ``s0``
+      itself to none (the offline pass diffs cumulative samples).
+    * residency of window j = active on every tick it covers.
+    * protection / stall / noisy counters are plain steady-window sums.
+    """
+    i32 = jnp.int32
+    s0, W = spec.steady_start, spec.window
+    in_steady = t >= s0
+    past_s0 = t > s0
+    active = sig.active
+
+    # ---- chronic thrashing: tumbling windows -----------------------------
+    win_events = jnp.where(in_steady & past_s0,
+                           det.win_events + sig.thrash_new.astype(i32),
+                           jnp.zeros_like(det.win_events))
+    boundary = in_steady & (jnp.mod(t - s0, W) == 0)
+    eval_now = boundary & past_s0          # a window just closed
+    bad = win_events.astype(jnp.float32) > spec.thrash_rate_threshold
+    res_ok = det.win_resident              # covers the closed window's ticks
+    windows_resident = det.windows_resident + (eval_now & res_ok).astype(i32)
+    windows_bad = det.windows_bad + (eval_now & res_ok & bad).astype(i32)
+    events_resident = det.events_resident + jnp.where(eval_now & res_ok,
+                                                      win_events, 0)
+    win_events = jnp.where(eval_now, 0, win_events)
+    # boundary tick opens window j: its residency starts from this tick
+    win_resident = jnp.where(
+        boundary, active,
+        jnp.where(in_steady, det.win_resident & active, det.win_resident))
+
+    # ---- protection violation --------------------------------------------
+    prot = jnp.asarray(spec.protection, jnp.float32)
+    fu = sig.fast_usage.astype(jnp.float32)
+    su = sig.slow_usage.astype(jnp.float32)
+    viol = ((prot > 0)
+            & (fu + su >= prot)
+            & (fu < prot * (1.0 - spec.prot_tolerance))
+            & active
+            & ((sig.attempted > 0) | (sig.demotions > 0)))
+    viol_ticks = det.viol_ticks + (in_steady & viol).astype(i32)
+    fast_sum = det.fast_sum + jnp.where(in_steady, fu, 0.0)
+
+    # ---- promotion stall + shared roster gate ----------------------------
+    att_steady = det.att_steady + jnp.where(in_steady,
+                                            sig.attempted.astype(i32), 0)
+    promo_steady = det.promo_steady + jnp.where(in_steady,
+                                                sig.promotions.astype(i32), 0)
+    active_steady = det.active_steady + (in_steady & active).astype(i32)
+    active_last = jnp.where(in_steady, active, det.active_last)
+
+    # ---- noisy neighbor ---------------------------------------------------
+    in_base = t < spec.base_ticks
+    mig = (sig.promotions + sig.demotions).astype(i32)
+    mig_steady = det.mig_steady + jnp.where(in_steady, mig, 0)
+    lat = sig.latency.astype(jnp.float32)
+    lat_base_sum = det.lat_base_sum + jnp.where(in_base, lat, 0.0)
+    lat_steady_sum = det.lat_steady_sum + jnp.where(in_steady, lat, 0.0)
+
+    # ---- running verdicts (online-only flag counters) --------------------
+    steady_so_far = jnp.maximum(t - s0 + 1, 1).astype(jnp.float32)
+    n_res = windows_resident.astype(jnp.float32)
+    f_thrash = (windows_resident >= 1) & (
+        windows_bad.astype(jnp.float32)
+        >= spec.thrash_frac_threshold * n_res)
+    gate = active & (active_steady.astype(jnp.float32)
+                     >= spec.resident_min_frac * steady_so_far)
+    f_prot = in_steady & gate & (prot > 0) & (
+        viol_ticks.astype(jnp.float32)
+        >= spec.prot_frac_threshold * steady_so_far)
+    attf = att_steady.astype(jnp.float32)
+    ratio = promo_steady.astype(jnp.float32) / jnp.maximum(attf, 1.0)
+    f_stall = (in_steady & gate
+               & (attf >= spec.stall_min_attempts * steady_so_far)
+               & (ratio < spec.stall_success))
+    if spec.n_tenants >= 2:
+        total_mig = mig_steady.sum().astype(jnp.float32)
+        share = mig_steady.astype(jnp.float32) / jnp.maximum(total_mig, 1.0)
+        n_base_done = jnp.minimum(t + 1, spec.base_ticks).astype(jnp.float32)
+        lat_base = jnp.maximum(
+            lat_base_sum / jnp.maximum(n_base_done, 1.0), 1e-9)
+        degrade = (lat_steady_sum / steady_so_far) / lat_base
+        top2 = jax.lax.top_k(degrade, 2)[0]
+        worst_other = jnp.where(degrade >= top2[0], top2[1], top2[0])
+        f_noisy = (in_steady & (total_mig > 0)
+                   & (share > spec.noisy_dominance)
+                   & (worst_other > spec.noisy_degrade))
+    else:
+        f_noisy = jnp.zeros((spec.n_tenants,), bool)
+
+    flags = jnp.stack([f_thrash, f_prot, f_noisy, f_stall], axis=-1)
+    flag_ticks = det.flag_ticks + flags.astype(i32)
+    first_flag = jnp.where(flags & (det.first_flag < 0),
+                           t.astype(i32), det.first_flag)
+
+    return DetectorState(
+        win_events=win_events, win_resident=win_resident,
+        windows_resident=windows_resident, windows_bad=windows_bad,
+        events_resident=events_resident,
+        viol_ticks=viol_ticks, fast_sum=fast_sum,
+        att_steady=att_steady, promo_steady=promo_steady,
+        mig_steady=mig_steady, lat_base_sum=lat_base_sum,
+        lat_steady_sum=lat_steady_sum,
+        active_steady=active_steady, active_last=active_last,
+        flag_ticks=flag_ticks, first_flag=first_flag)
+
+
+def run_detector(spec: DetectorSpec, *, active, thrash_new, fast_usage,
+                 slow_usage, attempted, promotions, demotions,
+                 latency) -> DetectorState:
+    """Replay host-side [ticks, T] telemetry through the streaming update
+    (one jitted scan). The differential bridge: feed it the SAME arrays the
+    offline detectors consume and ``streaming_pathologies`` must agree with
+    ``detect_all``."""
+    xs = (jnp.asarray(active, bool),
+          jnp.asarray(thrash_new, jnp.int32),
+          jnp.asarray(fast_usage, jnp.int32),
+          jnp.asarray(slow_usage, jnp.int32),
+          jnp.asarray(attempted, jnp.int32),
+          jnp.asarray(promotions, jnp.int32),
+          jnp.asarray(demotions, jnp.int32),
+          jnp.asarray(latency, jnp.float32))
+    ticks = xs[0].shape[0]
+    assert ticks == spec.horizon, (ticks, spec.horizon)
+
+    def step(det, x):
+        t, sig = x[0], DetectorSignals(*x[1:])
+        return update_detector(spec, det, sig, t), None
+
+    final, _ = jax.jit(lambda d, x: jax.lax.scan(step, d, x))(
+        init_detector(spec), (jnp.arange(ticks, dtype=jnp.int32),) + xs)
+    return final
+
+
+def streaming_pathologies(spec: DetectorSpec,
+                          det: DetectorState) -> List[Pathology]:
+    """End-of-run decisions from the final counters — the same thresholds,
+    gates and severity/evidence formulas as ``pathology.detect_all``, just
+    computed from O(T) streamed state instead of [ticks, T] traces."""
+    d = {f: np.asarray(getattr(det, f)) for f in det._fields}
+    if d["flag_ticks"].ndim == 3:
+        raise ValueError("got a batched DetectorState; index the host axis "
+                         "first (tree_map(lambda x: x[h], det))")
+    T = spec.n_tenants
+    n_steady = spec.n_steady
+    out: List[Pathology] = []
+    if n_steady <= 0:
+        return out
+
+    for t in range(T):                       # chronic thrashing
+        n_res = int(d["windows_resident"][t])
+        if n_res < 1:
+            continue
+        bad_frac = float(d["windows_bad"][t]) / n_res
+        if bad_frac >= spec.thrash_frac_threshold:
+            out.append(Pathology(
+                "chronic_thrashing", t,
+                severity=bad_frac / spec.thrash_frac_threshold,
+                evidence={"mean_rate": float(d["events_resident"][t]) / n_res,
+                          "bad_window_frac": bad_frac,
+                          "rate_threshold": spec.thrash_rate_threshold}))
+
+    def in_window(t: int) -> bool:           # _tenant_in_window analogue
+        return (bool(d["active_last"][t])
+                and float(d["active_steady"][t]) / n_steady
+                >= spec.resident_min_frac)
+
+    if any(p > 0 for p in spec.protection):  # protection violation
+        for t in range(T):
+            if spec.protection[t] <= 0 or not in_window(t):
+                continue
+            frac = float(d["viol_ticks"][t]) / n_steady
+            if frac >= spec.prot_frac_threshold:
+                out.append(Pathology(
+                    "protection_violation", t,
+                    severity=frac / spec.prot_frac_threshold,
+                    evidence={"violation_frac": frac,
+                              "mean_fast": float(d["fast_sum"][t]) / n_steady,
+                              "protection": spec.protection[t]}))
+
+    if T >= 2:                               # noisy neighbor
+        mig = d["mig_steady"].astype(np.float64)
+        total = mig.sum()
+        if total > 0:
+            lat_now = d["lat_steady_sum"].astype(np.float64) / n_steady
+            lat_base = np.maximum(
+                d["lat_base_sum"].astype(np.float64) / spec.base_ticks, 1e-9)
+            degrade = lat_now / lat_base
+            for t in range(T):
+                share = mig[t] / total
+                others = np.delete(degrade, t)
+                worst = float(others.max()) if others.size else 0.0
+                if share > spec.noisy_dominance and worst > spec.noisy_degrade:
+                    out.append(Pathology(
+                        "noisy_neighbor", t,
+                        severity=(share / spec.noisy_dominance)
+                        * (worst / spec.noisy_degrade),
+                        evidence={"migration_share": float(share),
+                                  "worst_neighbor_degrade": worst}))
+
+    for t in range(T):                       # promotion stall
+        if not in_window(t):
+            continue
+        att = float(d["att_steady"][t])
+        if att < spec.stall_min_attempts * n_steady:
+            continue
+        ratio = float(d["promo_steady"][t]) / max(att, 1.0)
+        if ratio < spec.stall_success:
+            out.append(Pathology(
+                "promotion_stall", t,
+                severity=spec.stall_success / max(ratio, 1e-9),
+                evidence={"attempts_per_tick": att / n_steady,
+                          "success_ratio": ratio}))
+    return out
+
+
+def flag_summary(det: DetectorState) -> dict:
+    """Plain-numpy view of the online flag counters (works on a single host
+    [T, K] or a batched fleet [H, T, K] state)."""
+    return {"flag_ticks": np.asarray(det.flag_ticks),
+            "first_flag": np.asarray(det.first_flag),
+            "kinds": KINDS}

@@ -239,7 +239,7 @@ def test_fleet_rollup_shapes_and_detection():
     ev, _ = res.host_migrations(0)
     assert ev.dtype == OT.EVENT_DTYPE
     # an injected noisy neighbor is flagged; this clean fleet is not
-    assert res.tenants_flagged() == set()
+    assert res.tenants_flagged() == []
     noisy = run_fleet(
         cfg.with_(upper_bound=(12, 0, 0)),
         inject_noisy_neighbor(mixes, tenant=0, fast_share=12, arrival=40),
