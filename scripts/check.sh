@@ -31,3 +31,6 @@ python -m benchmarks.churn_sweep --smoke
 
 echo "== fleet smoke (128 mixed static+churn hosts, 10k-tick chunked rollout) =="
 python -m benchmarks.fleet_sweep --smoke
+
+echo "== attribution smoke (conservation, counterfactuals, sketch, jaxpr gate) =="
+python -m benchmarks.attribution --smoke

@@ -43,7 +43,8 @@ __all__ = ["MODES", "IMPLS", "TickOutput", "make_tick", "run_engine"]
 
 
 def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
-              k_max: int = 256, impl: str = "batched", detector=None):
+              k_max: int = 256, impl: str = "batched", detector=None,
+              attrib=None):
     """Build the jittable tick. owner: [L] int (static tenant of each page).
 
     impl: "batched" (segmented selection + scatter-add reductions, trace-time
@@ -51,20 +52,24 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
     [T, L] one-hot matmuls — kept for equivalence tests and benchmarks).
     detector: optional ``obs.streaming.DetectorSpec`` — the state must then
     carry a matching DetectorState (``init_state(..., detector=...)``).
+    attrib: optional ``obs.attribution.AttributionSpec`` — likewise paired
+    with ``init_state(..., attrib=...)``.
     """
     assert impl in IMPLS, impl
     provider = static_ownership(cfg, owner, k_max=k_max, impl=impl)
     return make_tick_core(cfg, provider, mode=mode, k_max=k_max,
-                          detector=detector)
+                          detector=detector, attrib=attrib)
 
 
 def run_engine(cfg: TieringConfig, owner: np.ndarray, accesses: np.ndarray,
                alive: np.ndarray, mode: str = "equilibria",
-               k_max: int = 256, impl: str = "batched", detector=None
-               ) -> Tuple[TierState, TickOutput]:
+               k_max: int = 256, impl: str = "batched", detector=None,
+               attrib=None) -> Tuple[TierState, TickOutput]:
     """Run the full trace (scan over ticks). accesses/alive: [ticks, L]."""
-    tick = make_tick(cfg, owner, mode, k_max, impl=impl, detector=detector)
-    state = init_state(cfg, owner.shape[0], owner=owner, detector=detector)
+    tick = make_tick(cfg, owner, mode, k_max, impl=impl, detector=detector,
+                     attrib=attrib)
+    state = init_state(cfg, owner.shape[0], owner=owner, detector=detector,
+                       attrib=attrib)
 
     @jax.jit
     def run(state, accesses, alive):

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import TieringConfig
+from repro.obs.attribution import (AttributionSpec, AttributionState,
+                                   init_attribution)
 from repro.obs.stats import TierStats, init_stats, stats_export
 from repro.obs.streaming import DetectorSpec, DetectorState, init_detector
 from repro.obs.trace import MigrationRing, init_ring
@@ -79,6 +81,9 @@ class TierState(NamedTuple):
     # is an *empty pytree subtree*: states built without a detector keep
     # their pre-existing tree structure, jaxprs and golden traces bit-exact.
     det: Optional[DetectorState] = None
+    # per-tenant slowdown attribution ledger (obs/attribution.py) — the
+    # same optional-subtree pattern as ``det``
+    attrib: Optional[AttributionState] = None
 
 
 def zero_counters(n_tenants: int) -> Counters:
@@ -87,11 +92,13 @@ def zero_counters(n_tenants: int) -> Counters:
 
 
 def init_state(cfg: TieringConfig, n_pages: int, owner=None,
-               detector: Optional[DetectorSpec] = None) -> TierState:
+               detector: Optional[DetectorSpec] = None,
+               attrib: Optional[AttributionSpec] = None) -> TierState:
     """``owner``: [n_pages] int tenant ids, or None for an all-free pool
     (the dynamic-ownership engine's starting point). ``detector``: a
-    ``DetectorSpec`` to carry streaming pathology detectors in the state
-    (must match the ``detector`` passed to the tick builder)."""
+    ``DetectorSpec`` to carry streaming pathology detectors in the state;
+    ``attrib``: an ``AttributionSpec`` to carry the slowdown-attribution
+    ledger (each must match the spec passed to the tick builder)."""
     T = cfg.n_tenants
     owner_j = (jnp.full((n_pages,), T, jnp.int32) if owner is None
                else jnp.asarray(owner, jnp.int32))
@@ -113,6 +120,7 @@ def init_state(cfg: TieringConfig, n_pages: int, owner=None,
         ring=init_ring(cfg.obs_ring_capacity),
         t=jnp.zeros((), jnp.int32),
         det=None if detector is None else init_detector(detector),
+        attrib=None if attrib is None else init_attribution(attrib),
     )
 
 

@@ -58,6 +58,7 @@ from repro.core import select as SEL
 from repro.core.state import (TIER_FAST, TIER_NONE, TIER_SLOW, Counters,
                               TenantPolicy, ThrashTable, TierState,
                               make_policy)
+from repro.obs import attribution as AT
 from repro.obs import stats as OS
 from repro.obs import streaming as DS
 from repro.obs import trace as OT
@@ -252,7 +253,8 @@ def dynamic_ownership(cfg: TieringConfig, n_pages: int,
 
 def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
                    mode: str = "equilibria", k_max: int = 256,
-                   detector: Optional[DS.DetectorSpec] = None):
+                   detector: Optional[DS.DetectorSpec] = None,
+                   attrib: Optional[AT.AttributionSpec] = None):
     """Build the jittable unified tick over an ownership provider.
 
     One compiled tick per provider serves any schedule data: trace size,
@@ -265,11 +267,18 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
     ``init_state(..., detector=spec)``) and step 9b folds this tick's
     telemetry into it; the spec's window geometry is baked in as constants,
     so jaxpr size stays independent of the horizon it was built for.
+
+    ``attrib``: optional slowdown-attribution spec (obs/attribution.py).
+    When set, the state must carry a matching ``AttributionState``
+    (``init_state(..., attrib=spec)``) and step 9c folds the promotion
+    pipeline's quota cascade into the per-tenant stall ledger.
     """
     assert mode in MODES, mode
     T = cfg.n_tenants
     if detector is not None:
         assert detector.n_tenants == T, (detector.n_tenants, T)
+    if attrib is not None:
+        assert attrib.n_tenants == T, (attrib.n_tenants, T)
     L = provider.n_pages
     n_fast = cfg.n_fast_pages
     wmark = max(int(np.ceil(n_fast * cfg.watermark_free)), 1)
@@ -418,6 +427,7 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
                 & alive & ~demoted)
         cand_t = by_tenant(cand.astype(jnp.int32), owner)
         throttled = jnp.zeros((T,), bool)
+        q_base = q_eq2 = q_mit = None   # attribution quota cascade (9c)
         if mode == "equilibria":
             p_base = jnp.full((T,), float(cfg.p_base), jnp.float32)
             if cfg.enable_promo_throttle:
@@ -425,12 +435,30 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
                                                          pol, contended, cfg)
             else:
                 p_scan = p_base
+            p_eq2 = p_scan                            # pre-mitigation scan
             p_scan = p_scan * prep.promo_scale        # thrash mitigation
             p_quota = jnp.minimum(p_scan.astype(jnp.int32), k_max)
+            if attrib is not None:
+                # telescoping quota cascade: each stage capped the same way
+                # the pipeline caps p_quota below (min with cand and k_max),
+                # so successive differences are the deferral components
+                c0 = jnp.minimum(cand_t, k_max)
+                q_base = jnp.minimum(jnp.full((T,), int(cfg.p_base),
+                                              jnp.int32), c0)
+                q_eq2 = jnp.minimum(
+                    jnp.minimum(p_eq2.astype(jnp.int32), k_max), c0)
+                q_mit = jnp.minimum(p_quota, c0)
         elif mode in ("tpp", "memtis"):
             p_quota = jnp.full((T,), cfg.p_base, jnp.int32)  # unregulated
+            if attrib is not None:
+                # no throttle / mitigation stages: the whole cascade is the
+                # unregulated scan budget
+                q_base = q_eq2 = q_mit = jnp.minimum(
+                    p_quota, jnp.minimum(cand_t, k_max))
         else:
             p_quota = jnp.zeros((T,), jnp.int32)
+            if attrib is not None:   # no promotion path at all
+                q_base = q_eq2 = q_mit = p_quota
 
         # never overfill: cap total promotions by free fast capacity.
         # NOTE: promotions may transiently exceed a tenant's upper bound —
@@ -521,7 +549,8 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
             thrash_prev=prep.thrash_prev, usage_prev=prep.usage_prev,
             freed_since=prep.freed_since, steady=prep.steady,
             mitigated_prev=prep.mitigated_prev,
-            table=table, stats=stats, ring=ring, t=t + 1, det=state.det)
+            table=table, stats=stats, ring=ring, t=t + 1, det=state.det,
+            attrib=state.attrib)
 
         # ---- 8. periodic controller (§IV-F) ---------------------------------
         def run_ctrl(s: TierState) -> TierState:
@@ -559,6 +588,19 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
                     fast_usage=fast_usage, slow_usage=slow_usage,
                     attempted=cand_t, promotions=promo_t, demotions=demo_t,
                     latency=lat), t))
+
+        # ---- 9c. slowdown attribution ledger (obs/attribution.py) ----------
+        # the promotion pipeline's quota cascade, telescoped into additive
+        # per-tenant stall components; conservation against Counters is
+        # bit-exact because cand_t / promo_t / freed_t are the SAME values
+        # step 7 accumulates into attempted/promotions/reclaims
+        if attrib is not None:
+            new_state = new_state._replace(attrib=AT.update_attribution(
+                attrib, state.attrib,
+                AT.AttribSignals(
+                    cand=cand_t, promoted=promo_t, quota_base=q_base,
+                    quota_eq2=q_eq2, quota_mit=q_mit, freed=prep.freed_t,
+                    a_fast=a_fast, a_slow=a_slow, latency=lat)))
 
         out = TickOutput(
             fast_usage=fast_usage, slow_usage=slow_usage,

@@ -309,3 +309,10 @@ def token_validity(cache: TieredKVCache, window: Optional[int]):
         return ok
 
     return valid(cache.fast_page), valid(cache.slow_page)
+
+
+def kv_tier_counters(cache: TieredKVCache) -> dict:
+    """Host-side snapshot of the serving-path tiering counters: {metric:
+    [T] numpy int array} — the cgroup ``tier_stat`` analogue for the KV
+    cache, shaped for the Prometheus exporter (``export.kv_exposition``)."""
+    return {k: np.asarray(v) for k, v in cache.counters._asdict().items()}

@@ -1,0 +1,190 @@
+"""In-graph per-tenant slowdown attribution: a causal ledger of where
+tiering cost lands, folded into the unified tick (core/tick.py step 9c) and
+carried through ``lax.scan`` like the streaming detectors.
+
+The detectors (obs/streaming.py) answer "*is* tenant 7 pathological?"; this
+ledger answers the operator's next question — "*why* is tenant 7 slow, by
+how much, and who caused it?" Each tick the tick's promotion pipeline emits
+an integer *deferral* count per tenant: hot slow-resident pages that wanted
+the fast tier but were not promoted, plus pages the lifecycle step freed
+under reclaim. That total modeled stall is decomposed into additive causes
+by telescoping the pipeline's own quota cascade:
+
+  quota_base = min(p_base, cand, k_max)      unthrottled scan promise
+  quota_eq2  = after the Eq.2 fair-share throttle   (<= quota_base: the
+               throttle factor clips to [promo_floor, 1])
+  quota_mit  = after thrash-mitigation promo_scale  (<= quota_eq2: the
+               controller only halves, promo_scale <= 1)
+  promoted   = pages actually promoted              (<= quota_mit after
+               headroom scaling + selection, per-tenant modes)
+
+  hot_resident = cand - quota_base      demand beyond any scan budget
+  throttled    = quota_base - quota_eq2 deferred by fair-share (Eq.2)
+  mitigated    = quota_eq2 - quota_mit  deferred by thrash suppression
+  contention   = quota_mit - promoted   residual: fast-tier headroom/floor
+  reclaim      = freed                  churn reclaim stalls
+
+Conservation (bit-exact in int32, pinned by tests/test_attribution.py):
+components sum to ``cand - promoted + freed`` every tick, so the cumulative
+ledger always equals ``Counters.attempted_promotions - Counters.promotions
++ Counters.reclaims`` — the tick cannot lose or invent stall units.
+
+One mode needs care: tpp's promotion budget is a single *global* scan, so
+one tenant's ``promoted`` can exceed its own per-tenant cap (it eats the
+others' budget). The negative residual is folded back into
+``hot_resident`` (the sum ``cand - promoted`` stays >= 0 per tenant because
+tpp has no throttle/mitigation terms), keeping every component
+non-negative in every mode.
+
+The ledger also accumulates the perf-model access masses (``acc_fast`` /
+``acc_slow`` — the fast-hit fraction the counterfactual harness compares),
+a modeled stall-latency sum, and a per-host quantile sketch
+(obs/sketch.py) of per-tenant-tick stall units so ``fleet_rollout``
+reports fleet percentiles in O(1) output memory.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs import sketch as SK
+
+# fixed component order of the trailing axis of AttributionState.comp
+COMPONENTS = ("hot_resident", "throttled", "mitigated", "reclaim",
+              "contention")
+N_COMP = len(COMPONENTS)
+
+
+@dataclass(frozen=True)
+class AttributionSpec:
+    """Python constants baked into the traced tick — a spec never changes
+    jaxpr size, only embedded scalars (the ``DetectorSpec`` pattern)."""
+    n_tenants: int
+    lat_fast: float = 1.0      # cfg.lat_fast: stall latency baseline
+
+
+def make_attribution(n_tenants: int, lat_fast: float = 1.0) -> AttributionSpec:
+    return AttributionSpec(n_tenants=n_tenants, lat_fast=float(lat_fast))
+
+
+class AttribSignals(NamedTuple):
+    """One tick's promotion-pipeline telemetry, all [T] (produced inside the
+    unified tick after the perf model)."""
+    cand: jax.Array         # int32 promotion candidates (hot slow-resident)
+    promoted: jax.Array     # int32 pages actually promoted
+    quota_base: jax.Array   # int32 min(p_base, cand, k_max)
+    quota_eq2: jax.Array    # int32 ... after the Eq.2 throttle
+    quota_mit: jax.Array    # int32 ... after thrash-mitigation promo_scale
+    freed: jax.Array        # int32 pages freed by lifecycle reclaim
+    a_fast: jax.Array       # f32 fast-tier access mass (perf model)
+    a_slow: jax.Array       # f32 slow-tier access mass
+    latency: jax.Array      # f32 modeled mean access latency
+
+
+class AttributionState(NamedTuple):
+    """Scan-carried ledger. O(T) per host plus one fixed-size sketch —
+    independent of horizon and event count."""
+    comp: jax.Array         # [T, N_COMP] int32 cumulative stall components
+    total: jax.Array        # [T] int32 cumulative total stall units
+    acc_fast: jax.Array     # [T] f32 cumulative fast access mass
+    acc_slow: jax.Array     # [T] f32 cumulative slow access mass
+    stall_sum: jax.Array    # [T] f32 cumulative modeled stall latency
+    ticks: jax.Array        # scalar int32 ticks folded
+    sketch: jax.Array       # [SKETCH_BUCKETS] int32 per-tenant-tick stalls
+
+
+def init_attribution(spec: AttributionSpec) -> AttributionState:
+    T = spec.n_tenants
+    return AttributionState(
+        comp=jnp.zeros((T, N_COMP), jnp.int32),
+        total=jnp.zeros((T,), jnp.int32),
+        acc_fast=jnp.zeros((T,), jnp.float32),
+        acc_slow=jnp.zeros((T,), jnp.float32),
+        stall_sum=jnp.zeros((T,), jnp.float32),
+        ticks=jnp.zeros((), jnp.int32),
+        sketch=SK.init_sketch())
+
+
+def attribution_components(sig: AttribSignals) -> jax.Array:
+    """[T, N_COMP] int32 stall components for one tick (order COMPONENTS).
+    Telescoping guarantees the row sum is exactly
+    ``cand - promoted + freed``; the tpp global-selection residual is folded
+    into hot_resident so every entry stays >= 0."""
+    i32 = jnp.int32
+    x1 = (sig.cand - sig.quota_base).astype(i32)
+    x2 = (sig.quota_base - sig.quota_eq2).astype(i32)
+    x3 = (sig.quota_eq2 - sig.quota_mit).astype(i32)
+    x4 = (sig.quota_mit - sig.promoted).astype(i32)
+    contention = jnp.maximum(x4, 0)
+    hot_resident = x1 + jnp.minimum(x4, 0)
+    return jnp.stack(
+        [hot_resident, x2, x3, sig.freed.astype(i32), contention], axis=-1)
+
+
+def update_attribution(spec: AttributionSpec, att: AttributionState,
+                       sig: AttribSignals) -> AttributionState:
+    """Fold one tick's signals into the ledger (pure jnp: jit/scan/vmap)."""
+    comp_new = attribution_components(sig)
+    total_new = comp_new.sum(axis=-1)
+    stall = jnp.maximum(sig.latency - spec.lat_fast, 0.0)
+    return AttributionState(
+        comp=att.comp + comp_new,
+        total=att.total + total_new,
+        acc_fast=att.acc_fast + sig.a_fast,
+        acc_slow=att.acc_slow + sig.a_slow,
+        stall_sum=att.stall_sum + stall,
+        ticks=att.ticks + 1,
+        sketch=SK.sketch_add(att.sketch, total_new))
+
+
+# ------------------------------------------------------------ host side ----
+def fast_hit_fraction(att: AttributionState) -> np.ndarray:
+    """Per-tenant fraction of access mass served from the fast tier over the
+    whole run. A tenant with no accesses is trivially all-fast (1.0) — keeps
+    the counterfactual interference index at exactly 0 for empty slots.
+    Works on a single host [T] or a batched fleet [H, T] state."""
+    af = np.asarray(att.acc_fast, np.float64)
+    as_ = np.asarray(att.acc_slow, np.float64)
+    tot = af + as_
+    return np.where(tot > 0, af / np.maximum(tot, 1e-30), 1.0)
+
+
+def attribution_conserved(att: AttributionState, counters=None) -> bool:
+    """The conservation property, bit-exact in integer accounting:
+    components sum to the total ledger, and (when the run's ``Counters``
+    are supplied) the total equals ``attempted - promotions + reclaims``."""
+    comp = np.asarray(att.comp, np.int64)
+    total = np.asarray(att.total, np.int64)
+    ok = bool((comp.sum(axis=-1) == total).all() and (comp >= 0).all())
+    if counters is not None:
+        expect = (np.asarray(counters.attempted_promotions, np.int64)
+                  - np.asarray(counters.promotions, np.int64)
+                  + np.asarray(counters.reclaims, np.int64))
+        ok = ok and bool((total == expect).all())
+    return ok
+
+
+def attribution_summary(spec: AttributionSpec,
+                        att: AttributionState) -> dict:
+    """Plain-numpy operator view of one host's ledger."""
+    comp = np.asarray(att.comp, np.int64)
+    if comp.ndim == 3:
+        raise ValueError("got a batched AttributionState; index the host "
+                         "axis first (tree_map(lambda x: x[h], att))")
+    total = np.asarray(att.total, np.int64)
+    ticks = max(int(att.ticks), 1)
+    denom = np.maximum(total, 1).astype(np.float64)
+    return {
+        "components": comp,                       # [T, N_COMP]
+        "component_names": COMPONENTS,
+        "total": total,                           # [T]
+        "component_share": comp / denom[:, None],
+        "stall_units_per_tick": total / ticks,
+        "stall_latency_mean": np.asarray(att.stall_sum, np.float64) / ticks,
+        "fast_hit_fraction": fast_hit_fraction(att),
+        "ticks": ticks,
+    }

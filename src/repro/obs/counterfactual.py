@@ -1,0 +1,124 @@
+"""Counterfactual interference baselines: each tenant re-run *alone* on the
+same hardware and schedule, under ``vmap``.
+
+The attribution ledger (obs/attribution.py) decomposes a tenant's stall by
+*mechanism*; this harness quantifies stall by *neighborhood* — the paper's
+noisy-neighbor question posed causally: "how much faster would tenant i be
+with the box to itself?" For each tenant the schedule is masked so only
+that tenant's slots are populated (``want``/``rates`` of every other slot
+zeroed), and all T isolated runs advance under one ``vmap`` of the SAME
+compiled tick the stacked run used — same policy, same pool, same horizon.
+
+The interference index is the isolated-minus-stacked delta of the
+fast-hit fraction (share of access mass served from the fast tier, read
+from the ledger's ``acc_fast``/``acc_slow``):
+
+    interference[i] = fast_hit_isolated[i] - fast_hit_stacked[i]
+
+An isolated tenant contends with nobody, so the index is >= 0 on clean
+fleets (up to f32 accumulation noise) and strictly positive for victims of
+an injected noisy neighbor — the §V-B5 quantification, but measured
+against a true counterfactual instead of a baseline time window.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TieringConfig
+from repro.core.churn import ChurnSchedule, make_churn_tick
+from repro.core.state import init_state, stack_states
+from repro.obs.attribution import (AttributionSpec, fast_hit_fraction,
+                                   make_attribution)
+
+
+@dataclass
+class CounterfactualResult:
+    """Per-tenant stacked-vs-isolated comparison (all [T] numpy)."""
+    fast_hit_stacked: np.ndarray    # fast-hit fraction, tenants stacked
+    fast_hit_isolated: np.ndarray   # ... each tenant alone on the host
+    interference: np.ndarray        # isolated - stacked (>= 0 expected)
+    stall_stacked: np.ndarray       # mean modeled stall latency, stacked
+    stall_isolated: np.ndarray      # ... isolated
+    active: np.ndarray              # bool: slot ever scheduled
+    stacked_state: object = None    # final TierState of the stacked run
+    isolated_states: object = None  # batched [T, ...] final TierStates
+
+    def summary(self) -> dict:
+        act = self.active
+        return {
+            "tenants": int(self.active.shape[0]),
+            "active_tenants": int(act.sum()),
+            "interference": self.interference,
+            "max_interference": float(self.interference[act].max())
+            if act.any() else 0.0,
+            "mean_interference": float(self.interference[act].mean())
+            if act.any() else 0.0,
+            "stall_amplification": np.where(
+                self.stall_isolated > 1e-9,
+                self.stall_stacked / np.maximum(self.stall_isolated, 1e-9),
+                np.where(self.stall_stacked > 1e-9, np.inf, 1.0)),
+        }
+
+
+def isolate_schedules(schedule: ChurnSchedule
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Mask a [ticks, T] churn schedule into T single-tenant schedules:
+    returns (want [T, ticks, T], rates [T, ticks, T, S]) where run i keeps
+    only tenant i's slots populated."""
+    want = np.asarray(schedule.want)
+    rates = np.asarray(schedule.rates)
+    T = want.shape[1]
+    eye = np.eye(T)
+    want_iso = (want[None] * eye[:, None, :]).astype(want.dtype)
+    rates_iso = (rates[None] * eye[:, None, :, None]).astype(rates.dtype)
+    return want_iso, rates_iso
+
+
+def counterfactual_run(cfg: TieringConfig, schedule: ChurnSchedule,
+                       mode: str = "equilibria", k_max: int = 64,
+                       n_pages: Optional[int] = None,
+                       spec: Optional[AttributionSpec] = None
+                       ) -> CounterfactualResult:
+    """Run the stacked schedule once and every tenant's isolated schedule
+    under one vmap, both through the attribution-carrying unified tick."""
+    T = cfg.n_tenants
+    L = n_pages if n_pages is not None else \
+        cfg.n_fast_pages + cfg.n_slow_pages
+    spec = make_attribution(T, cfg.lat_fast) if spec is None else spec
+    tick = make_churn_tick(cfg, L, mode=mode, k_max=k_max, attrib=spec)
+    state0 = init_state(cfg, L, attrib=spec)
+    rates = jnp.asarray(schedule.rates, jnp.float32)
+    want = jnp.asarray(schedule.want, jnp.int32)
+
+    @jax.jit
+    def run(state, r, w):
+        return jax.lax.scan(tick, state, (r, w))[0]
+
+    stacked = run(state0, rates, want)
+
+    want_iso, rates_iso = isolate_schedules(schedule)
+    isolated = jax.jit(jax.vmap(run, in_axes=(0, 0, 0)))(
+        stack_states(state0, T), jnp.asarray(rates_iso, jnp.float32),
+        jnp.asarray(want_iso, jnp.int32))
+
+    f_stacked = fast_hit_fraction(stacked.attrib)              # [T]
+    f_iso = fast_hit_fraction(isolated.attrib)                 # [T, T]
+    f_iso_diag = np.diagonal(f_iso).copy()
+    active = np.asarray(schedule.want).max(axis=0) > 0
+    ticks = max(int(stacked.attrib.ticks), 1)
+    stall_stacked = np.asarray(stacked.attrib.stall_sum, np.float64) / ticks
+    stall_iso = np.diagonal(
+        np.asarray(isolated.attrib.stall_sum, np.float64)).copy() / ticks
+    interference = np.where(active, f_iso_diag - f_stacked, 0.0)
+    return CounterfactualResult(
+        fast_hit_stacked=f_stacked, fast_hit_isolated=f_iso_diag,
+        interference=interference,
+        stall_stacked=np.where(active, stall_stacked, 0.0),
+        stall_isolated=np.where(active, stall_iso, 0.0),
+        active=active,
+        stacked_state=stacked, isolated_states=isolated)

@@ -21,6 +21,7 @@ import numpy as np
 from repro.configs.base import TieringConfig
 from repro.core.workloads import (ChurnSlot, build_churn_schedule, cache_like,
                                   spark_like, thrasher, web_like)
+from repro.obs.attribution import COMPONENTS
 from repro.obs.export import (rollout_exposition, validate_chrome_trace,
                               validate_exposition, write_chrome_trace)
 from repro.obs.fleet import RolloutSummary, fleet_rollout, stack_schedules
@@ -71,8 +72,10 @@ def _md_table(headers: Sequence[str], rows: Sequence[Sequence]) -> str:
 def render_dashboard(roll: RolloutSummary,
                      quantiles: Sequence[float] = (0.5, 0.95, 0.99)) -> str:
     """The fleet roll-up as markdown: overview, pathology counters
-    (host x tenant x kind from the streamed DetectorState), and
-    fast-residency percentiles from the in-graph log2 histograms."""
+    (host x tenant x kind from the streamed DetectorState), the slowdown
+    attribution ledger (stall units by cause, fleet component shares and
+    sketch percentiles), and fast-residency percentiles from the in-graph
+    log2 histograms."""
     parts = ["# Fleet telemetry roll-up", ""]
     parts.append(_md_table(
         ["hosts", "ticks", "host-ticks/s", "mean latency", "migrations/tick"],
@@ -106,6 +109,34 @@ def render_dashboard(roll: RolloutSummary,
             parts.append(_md_table(
                 ["host", "tenant", "kind", "severity", "first flag tick",
                  "flag ticks"], rows))
+    parts.append("")
+
+    parts.append("## Slowdown attribution (stall units by cause)")
+    if roll.attribution is None:
+        parts.append("_rollout ran with attrib=False_")
+    else:
+        comp = roll.attribution_components()        # [H, T, C]
+        total = roll.attribution_totals()           # [H, T]
+        fhit = roll.fast_hit_fraction()             # [H, T]
+        names = list(COMPONENTS)
+        rows = []
+        for h in range(roll.n_hosts):
+            for t in range(comp.shape[1]):
+                rows.append([h, t, int(total[h, t])]
+                            + [int(c) for c in comp[h, t]]
+                            + [f"{fhit[h, t]:.3f}"])
+        parts.append(_md_table(
+            ["host", "tenant", "stall units"] + names + ["fast-hit"], rows))
+        parts.append("")
+        rup = roll.attribution_rollup()
+        shares = rup["component_shares"]
+        parts.append(_md_table(
+            ["fleet stall units"] + names
+            + [f"p{int(q * 100)}/tick" for q in quantiles] + ["conserved"],
+            [[rup["stall_units_total"]]
+             + [f"{shares[k]:.1%}" for k in names]
+             + [f"{v:.0f}" for v in roll.stall_percentiles(quantiles)]
+             + [rup["conserved"]]]))
     parts.append("")
 
     parts.append("## Fast-tier residency (ticks, log2-bucket lower edges)")

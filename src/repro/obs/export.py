@@ -23,9 +23,11 @@ from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.attribution import COMPONENTS
+from repro.obs.sketch import sketch_edges, sketch_percentile
 from repro.obs.stats import bucket_edges, hist_percentile
 from repro.obs.streaming import KINDS
-from repro.obs.trace import DIR_PROMOTE
+from repro.obs.trace import DIR_PROMOTE, ring_summary
 
 TICK_US = 1000          # one engine tick rendered as 1ms of trace time
 QUANTILES = (0.5, 0.95, 0.99)
@@ -113,8 +115,9 @@ def write_chrome_trace(path: str, host_events: Mapping[int, np.ndarray],
 
 def validate_chrome_trace(trace) -> int:
     """Raise ValueError unless ``trace`` is a well-formed Chrome-trace object
-    with per-track monotone timestamps. Accepts the object or its JSON text.
-    Returns the number of non-metadata events validated."""
+    with per-track monotone timestamps and balanced B/E duration spans.
+    Accepts the object or its JSON text. Returns the number of non-metadata
+    events validated."""
     if isinstance(trace, (str, bytes)):
         trace = json.loads(trace)
     if not isinstance(trace, dict) or "traceEvents" not in trace:
@@ -123,6 +126,7 @@ def validate_chrome_trace(trace) -> int:
     if not isinstance(events, list):
         raise ValueError("'traceEvents' must be a list")
     last_ts: Dict[Tuple[int, int], float] = {}
+    open_spans: Dict[Tuple[int, int], List[str]] = {}
     n = 0
     for i, e in enumerate(events):
         if not isinstance(e, dict) or "ph" not in e:
@@ -139,16 +143,32 @@ def validate_chrome_trace(trace) -> int:
         if e["ts"] < last_ts.get(key, float("-inf")):
             raise ValueError(f"event {i}: ts not monotone on track {key}")
         last_ts[key] = e["ts"]
+        # B/E duration events nest as a per-track stack (trace-format spec)
+        if ph == "B":
+            open_spans.setdefault(key, []).append(e["name"])
+        elif ph == "E":
+            stack = open_spans.get(key)
+            if not stack:
+                raise ValueError(f"event {i}: 'E' with no open 'B' on "
+                                 f"track {key}")
+            stack.pop()
         n += 1
+    for key, stack in open_spans.items():
+        if stack:
+            raise ValueError(f"track {key}: unclosed 'B' span(s) "
+                             f"{stack!r} at end of trace")
     return n
 
 
 # ------------------------------------------------- Prometheus text ----------
 _NAME_RE = re.compile(r"[a-zA-Z_:][a-zA-Z0-9_:]*")
+# label values allow exactly three escapes: \\ \" \n (text-format spec);
+# a stray backslash before anything else is a malformed sample
+_LABEL_VAL = r"(?:\\[\\\"n]|[^\"\\\n])*"
 _SAMPLE_RE = re.compile(
     r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
-    r"(?:\{(?P<labels>[a-zA-Z_][a-zA-Z0-9_]*=\"(?:\\.|[^\"\\\n])*\""
-    r"(?:,[a-zA-Z_][a-zA-Z0-9_]*=\"(?:\\.|[^\"\\\n])*\")*,?)?\})?"
+    r"(?:\{(?P<labels>[a-zA-Z_][a-zA-Z0-9_]*=\"" + _LABEL_VAL + r"\""
+    r"(?:,[a-zA-Z_][a-zA-Z0-9_]*=\"" + _LABEL_VAL + r"\")*,?)?\})?"
     r" (?P<value>[+-]?(?:[0-9]*\.?[0-9]+(?:[eE][+-]?[0-9]+)?|Inf|NaN))"
     r"(?: [0-9]+)?$")
 _TYPES = ("counter", "gauge", "histogram", "summary", "untyped")
@@ -191,6 +211,12 @@ def fleet_exposition(counters: Mapping[str, np.ndarray],
                      flag_ticks: Optional[np.ndarray] = None,
                      first_flag: Optional[np.ndarray] = None,
                      kinds: Sequence[str] = KINDS,
+                     stall_components: Optional[np.ndarray] = None,
+                     stall_totals: Optional[np.ndarray] = None,
+                     stall_sketch: Optional[np.ndarray] = None,
+                     component_names: Sequence[str] = COMPONENTS,
+                     ring_events: Optional[np.ndarray] = None,
+                     ring_dropped: Optional[np.ndarray] = None,
                      prefix: str = "equilibria") -> str:
     """Fleet telemetry as Prometheus text exposition.
 
@@ -201,6 +227,14 @@ def fleet_exposition(counters: Mapping[str, np.ndarray],
                 bucket, i.e. the next bucket's lower edge) plus
                 p50/p95/p99 quantile gauges via ``hist_percentile``.
     flag_ticks / first_flag: [H, T, K] streaming pathology counters.
+    stall_components / stall_totals: attribution-ledger stall units
+                ([H, T, C] by cause and [H, T] totals) -> labelled
+                counters; the conservation invariant makes the component
+                series sum to the total series exactly.
+    stall_sketch: merged [SKETCH_BUCKETS] per-tick stall histogram ->
+                one fleet-level native histogram + quantile gauges.
+    ring_events / ring_dropped: [H] migration-ring wrap accounting
+                (``ring_summary``): events ever recorded vs overwritten.
     """
     lines: List[str] = []
     for metric in sorted(counters):
@@ -248,6 +282,60 @@ def fleet_exposition(counters: Mapping[str, np.ndarray],
             qname, "Residency percentile (bucket lower edge).", "gauge",
             qsamples)
 
+    if stall_components is not None:
+        stall_components = np.asarray(stall_components)
+        H, T, C = stall_components.shape
+        lines += prom_lines(
+            f"{prefix}_stall_component_total",
+            "Cumulative attributed stall units by cause (conserves: "
+            "components sum to stall_units_total).", "counter",
+            [({"host": h, "tenant": t, "component": component_names[c]},
+              float(stall_components[h, t, c]))
+             for h in range(H) for t in range(T) for c in range(C)])
+    if stall_totals is not None:
+        stall_totals = np.asarray(stall_totals)
+        H, T = stall_totals.shape
+        lines += prom_lines(
+            f"{prefix}_stall_units_total",
+            "Cumulative attributed stall units per host/tenant.", "counter",
+            [({"host": h, "tenant": t}, float(stall_totals[h, t]))
+             for h in range(H) for t in range(T)])
+    if stall_sketch is not None:
+        stall_sketch = np.asarray(stall_sketch)
+        edges = np.asarray(sketch_edges())
+        cum = np.cumsum(stall_sketch.astype(np.int64))
+        name = f"{prefix}_stall_units_per_tick"
+        les = [("%g" % e) for e in edges[1:]] + ["+Inf"]
+        samples = [({"__name__": f"{name}_bucket", "le": le},
+                    float(cum[min(i, len(cum) - 1)]))
+                   for i, le in enumerate(les)]
+        samples.append(({"__name__": f"{name}_count"}, float(cum[-1])))
+        samples.append(({"__name__": f"{name}_sum"},
+                        float((stall_sketch * edges[:-1]).sum())))
+        lines += prom_lines(
+            name, "Fleet per-tenant-tick total stall units (mergeable "
+            "sketch; sum approximated by bucket lower edges).",
+            "histogram", samples, suffixed=True)
+        lines += prom_lines(
+            f"{prefix}_stall_units_quantile",
+            "Stall-units percentile across tenant-ticks (sketch bucket "
+            "lower edge).", "gauge",
+            [({"quantile": q}, float(sketch_percentile(stall_sketch, q)))
+             for q in QUANTILES])
+    if ring_events is not None:
+        ring_events = np.asarray(ring_events).reshape(-1)
+        lines += prom_lines(
+            f"{prefix}_ring_events_total",
+            "Migration events ever recorded into the host's ring.",
+            "counter",
+            [({"host": h}, float(v)) for h, v in enumerate(ring_events)])
+    if ring_dropped is not None:
+        ring_dropped = np.asarray(ring_dropped).reshape(-1)
+        lines += prom_lines(
+            f"{prefix}_ring_dropped_total",
+            "Migration events lost to ring wraparound (capacity "
+            "overwrite).", "counter",
+            [({"host": h}, float(v)) for h, v in enumerate(ring_dropped)])
     if flag_ticks is not None:
         flag_ticks = np.asarray(flag_ticks)
         H, T, K = flag_ticks.shape
@@ -273,15 +361,39 @@ def fleet_exposition(counters: Mapping[str, np.ndarray],
 
 def rollout_exposition(rollout, prefix: str = "equilibria") -> str:
     """Exposition of a ``fleet_rollout`` RolloutSummary: Counters totals,
-    residency histograms and (when the rollout streamed detectors) the
-    pathology flag counters."""
+    residency histograms, migration-ring wrap accounting, and — when the
+    rollout streamed them — the pathology flag counters and the slowdown
+    attribution ledger (component/total counters + the fleet stall
+    sketch)."""
     counters = rollout.counters()
     det = rollout.final_state.det
+    att = rollout.final_state.attrib if rollout.attribution is not None \
+        else None
+    ring = ring_summary(rollout.final_state.ring)
     return fleet_exposition(
         dict(counters._asdict()),
         resid_hist=np.asarray(rollout.final_state.stats.resid_hist),
         flag_ticks=None if det is None else det.flag_ticks,
         first_flag=None if det is None else det.first_flag,
+        stall_components=None if att is None else np.asarray(att.comp),
+        stall_totals=None if att is None else np.asarray(att.total),
+        stall_sketch=None if att is None else rollout.stall_sketch(),
+        ring_events=ring["recorded"], ring_dropped=ring["dropped"],
+        prefix=prefix)
+
+
+def kv_exposition(cache, prefix: str = "equilibria_kv") -> str:
+    """Exposition of a serving-path ``TieredKVCache``: the KV tiering
+    counters (promotions/demotions/sync demotions/thrash events per
+    tenant, host label 0 — one cache per serving host) and its migration
+    ring's wrap accounting."""
+    counters = {k: np.asarray(v)[None, :]
+                for k, v in cache.counters._asdict().items()}
+    ring = ring_summary(cache.ring)
+    return fleet_exposition(
+        counters,
+        ring_events=np.asarray([ring["recorded"]]),
+        ring_dropped=np.asarray([ring["dropped"]]),
         prefix=prefix)
 
 

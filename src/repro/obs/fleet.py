@@ -47,7 +47,11 @@ from repro.core.workloads import (ChurnSlot, TenantWorkload, as_churn_slots,
                                   build_churn_schedule, build_trace,
                                   cache_like, ci_like, microbenchmark,
                                   spark_like, thrasher, web_like)
+from repro.obs.attribution import (COMPONENTS, AttributionSpec,
+                                   attribution_conserved, fast_hit_fraction,
+                                   make_attribution)
 from repro.obs.pathology import Pathology, count_by_kind, detect_all
+from repro.obs.sketch import sketch_merge, sketch_percentiles
 from repro.obs.stats import stats_summary
 from repro.obs.streaming import (KINDS, DetectorSpec, make_detector,
                                  streaming_pathologies)
@@ -335,6 +339,7 @@ class RolloutSummary:
     migrations_per_tick: np.ndarray  # [H]
     final_state: object = None       # batched TierState [H, ...]
     detector: Optional[DetectorSpec] = None
+    attribution: Optional[AttributionSpec] = None
 
     @property
     def host_ticks_per_s(self) -> float:
@@ -387,6 +392,63 @@ class RolloutSummary:
                     out.add((h, p.tenant))
         return sorted(out)
 
+    # ---- slowdown attribution ledger (obs/attribution.py) ----------------
+    def _att(self):
+        if self.attribution is None:
+            raise ValueError("rollout ran with attrib=False")
+        return self.final_state.attrib
+
+    def attribution_components(self) -> np.ndarray:
+        """[H, T, len(COMPONENTS)] int64 cumulative stall units by cause."""
+        return np.asarray(self._att().comp, np.int64)
+
+    def attribution_totals(self) -> np.ndarray:
+        """[H, T] int64 cumulative stall units (== components summed)."""
+        return np.asarray(self._att().total, np.int64)
+
+    def fast_hit_fraction(self) -> np.ndarray:
+        """[H, T] fraction of access mass served from the fast tier."""
+        return fast_hit_fraction(self._att())
+
+    def stall_sketch(self) -> np.ndarray:
+        """Fleet-merged per-tick stall-unit histogram ([SKETCH_BUCKETS])."""
+        return sketch_merge(self._att().sketch)
+
+    def stall_percentiles(self, qs=(0.5, 0.95, 0.99)) -> np.ndarray:
+        """Fleet-wide per-tick total-stall percentiles from the merged
+        sketch — O(1) output memory at any horizon or fleet size."""
+        return np.asarray(sketch_percentiles(self.stall_sketch(), qs))
+
+    def attribution_conserved(self) -> bool:
+        """Every host's ledger conserves: components sum to the total and
+        the total matches the counter identity, bit-exact."""
+        return attribution_conserved(self._att(), self.final_state.counters)
+
+    def attribution_rollup(self) -> dict:
+        """Operator roll-up: fleet component shares, worst tenants, sketch
+        percentiles (O(H * T) host memory, like ``pathology_rollup``)."""
+        comp = self.attribution_components()
+        total = self.attribution_totals()
+        fleet = comp.sum(axis=(0, 1))
+        denom = max(int(fleet.sum()), 1)
+        worst = np.unravel_index(np.argmax(total), total.shape)
+        p50, p95, p99 = self.stall_percentiles((0.5, 0.95, 0.99))
+        return {
+            "hosts": self.n_hosts,
+            "ticks": self.ticks,
+            "stall_units_total": int(total.sum()),
+            "component_totals": {k: int(v)
+                                 for k, v in zip(COMPONENTS, fleet)},
+            "component_shares": {k: float(v) / denom
+                                 for k, v in zip(COMPONENTS, fleet)},
+            "worst_tenant": (int(worst[0]), int(worst[1])),
+            "worst_tenant_stall": int(total[worst]),
+            "stall_p50": float(p50),
+            "stall_p95": float(p95),
+            "stall_p99": float(p99),
+            "conserved": self.attribution_conserved(),
+        }
+
     def pathology_rollup(self) -> dict:
         """Operator roll-up of the streamed pathology state (the fleet-scale
         analogue of ``FleetResult.rollup``, O(H * T) not O(H * ticks))."""
@@ -408,7 +470,7 @@ def fleet_rollout(cfg: TieringConfig, want: np.ndarray, rates: np.ndarray,
                   mode: str = "equilibria", k_max: int = 64,
                   chunk: int = 256, n_pages: Optional[int] = None,
                   shard: bool = True, warmup: bool = False,
-                  detect: bool = True) -> RolloutSummary:
+                  detect: bool = True, attrib: bool = True) -> RolloutSummary:
     """Advance a fleet over a long horizon without host round-trips or
     memory blowup.
 
@@ -433,6 +495,12 @@ def fleet_rollout(cfg: TieringConfig, want: np.ndarray, rates: np.ndarray,
     and first-flag ticks at any horizon, O(H * T) extra memory — the
     observability the chunked rollout exists to keep while never
     materializing ``[ticks, ...]`` traces.
+
+    ``attrib=True`` (default) additionally carries the per-tenant slowdown
+    attribution ledger (obs/attribution.py): cumulative stall units by
+    cause, fast-tier access mass, and a fixed-size mergeable stall sketch —
+    again O(H * T) state, so fleet attribution percentiles come out of a
+    10k-tick rollout in O(1) output memory (``attribution_rollup``).
     """
     want = np.asarray(want)
     rates = np.asarray(rates)
@@ -447,7 +515,9 @@ def fleet_rollout(cfg: TieringConfig, want: np.ndarray, rates: np.ndarray,
     cfg = cfg.with_(n_tenants=T)
     det_spec = (make_detector(ticks, T, cfg.lower_protection)
                 if detect else None)
-    tick = make_churn_tick(cfg, L, mode=mode, k_max=k_max, detector=det_spec)
+    att_spec = make_attribution(T, cfg.lat_fast) if attrib else None
+    tick = make_churn_tick(cfg, L, mode=mode, k_max=k_max, detector=det_spec,
+                           attrib=att_spec)
     vtick = jax.vmap(tick)
     want_j = jnp.asarray(want, jnp.int32)
     rates_j = jnp.asarray(rates, jnp.float32)
@@ -479,7 +549,8 @@ def fleet_rollout(cfg: TieringConfig, want: np.ndarray, rates: np.ndarray,
     chunk = max(min(chunk, ticks), 1)
     D = jax.local_device_count()
     use_pmap = bool(shard) and D > 1 and H % D == 0
-    states = stack_states(init_state(cfg, L, detector=det_spec), H)
+    states = stack_states(init_state(cfg, L, detector=det_spec,
+                                     attrib=att_spec), H)
     if use_pmap:
         def resh(x):
             return jnp.reshape(x, (D, H // D) + x.shape[1:])
@@ -502,7 +573,8 @@ def fleet_rollout(cfg: TieringConfig, want: np.ndarray, rates: np.ndarray,
     if warmup:
         # compile (and once-run) every chunk program on a scratch state —
         # donation consumes the scratch buffers, the real fleet is untouched
-        scratch = stack_states(init_state(cfg, L, detector=det_spec), H)
+        scratch = stack_states(init_state(cfg, L, detector=det_spec,
+                                          attrib=att_spec), H)
         if use_pmap:
             scratch = jax.tree_util.tree_map(resh, scratch)
         scratch, _ = run_chunk(scratch, arch, 0)
@@ -545,4 +617,4 @@ def fleet_rollout(cfg: TieringConfig, want: np.ndarray, rates: np.ndarray,
         latency_mean=lat_sum / ticks,
         throughput_mean=thr_sum / ticks,
         migrations_per_tick=mig_sum / ticks,
-        final_state=states, detector=det_spec)
+        final_state=states, detector=det_spec, attribution=att_spec)

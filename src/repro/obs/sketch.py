@@ -1,0 +1,103 @@
+"""Fixed-size mergeable quantile sketch for streaming fleet percentiles.
+
+``fleet_rollout`` must aggregate per-tenant attribution percentiles across
+hosts in O(1) output memory — the seam the ROADMAP's 10k-host scale-out
+needs (HybridTier-style sketch tracking, PAPERS.md). A full value stream is
+O(H * T * ticks); this sketch is a histogram of SKETCH_BUCKETS int32
+counters per host, updated with one scatter-add inside the compiled tick
+and merged across hosts by plain addition (counts of disjoint streams sum).
+
+Bucket geometry (host-side constants, baked into the traced add):
+
+  * ``N_LINEAR`` exact unit buckets for values ``0 .. N_LINEAR-1`` — the
+    integer stall units the attribution ledger emits are small most ticks,
+    so the common range pays ZERO quantization error.
+  * ``N_LOG`` log2-subdivided buckets beyond (``LOG_SUB`` per octave,
+    relative width ``2^(1/LOG_SUB) - 1`` ~ 19%), covering up to
+    ``N_LINEAR * 2^(N_LOG / LOG_SUB)``; larger values clamp into the last
+    bucket.
+
+``sketch_percentile`` follows the ``obs.stats.hist_percentile`` spec — the
+LOWER EDGE of the first bucket where cumulative mass reaches ``q * total``
+(empty sketch -> 0.0) — so its rank error is bounded by the mass of a
+single bucket: exactly 0 for integer data in the linear range, and the
+per-bucket mass fraction in the log tail (<= 2% on the attribution
+acceptance distribution; pinned by tests/test_attribution.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+N_LINEAR = 128          # exact unit buckets: values 0..127
+LOG_SUB = 4             # log2 sub-buckets per octave beyond the linear range
+N_LOG = 36              # covers N_LINEAR * 2^(36/4) = 65536 before clamping
+SKETCH_BUCKETS = N_LINEAR + N_LOG
+_LOG0 = float(np.log2(N_LINEAR))
+
+
+def init_sketch(batch_shape: Sequence[int] = ()) -> jax.Array:
+    """Zero sketch counts, optionally with leading batch axes ([H] hosts)."""
+    return jnp.zeros(tuple(batch_shape) + (SKETCH_BUCKETS,), jnp.int32)
+
+
+def sketch_bucket(values: jax.Array) -> jax.Array:
+    """Bucket index of each value (jnp; works under jit/scan/vmap).
+    Negative values clamp to bucket 0, huge values to the last bucket."""
+    v = jnp.maximum(values.astype(jnp.float32), 0.0)
+    lin = jnp.minimum(v.astype(jnp.int32), N_LINEAR - 1)
+    logb = jnp.floor(
+        (jnp.log2(jnp.maximum(v, float(N_LINEAR))) - _LOG0) * LOG_SUB
+    ).astype(jnp.int32)
+    logb = N_LINEAR + jnp.clip(logb, 0, N_LOG - 1)
+    return jnp.where(v < N_LINEAR, lin, logb)
+
+
+def sketch_add(counts: jax.Array, values: jax.Array,
+               weights: Optional[jax.Array] = None) -> jax.Array:
+    """Fold ``values`` (any shape) into a [SKETCH_BUCKETS] sketch — one
+    scatter-add, so a vmapped tick batches it along the host axis for free."""
+    b = sketch_bucket(values).reshape(-1)
+    w = (jnp.ones_like(b) if weights is None
+         else weights.reshape(-1).astype(jnp.int32))
+    return counts.at[b].add(w)
+
+
+def sketch_edges() -> np.ndarray:
+    """Host-side: inclusive lower edge of each bucket, [SKETCH_BUCKETS + 1]
+    (the trailing entry is the exclusive top of the covered range)."""
+    lin = np.arange(N_LINEAR, dtype=np.float64)
+    log = N_LINEAR * 2.0 ** (np.arange(N_LOG + 1, dtype=np.float64) / LOG_SUB)
+    return np.concatenate([lin, log])
+
+
+def sketch_merge(counts) -> np.ndarray:
+    """Merge sketches by summing every leading axis: [..., NB] -> [NB].
+    Counts of disjoint value streams add — the mergeability that lets a
+    fleet report one set of percentiles from per-host sketches."""
+    c = np.asarray(counts, dtype=np.int64)
+    return c.reshape(-1, c.shape[-1]).sum(axis=0)
+
+
+def sketch_count(counts) -> int:
+    return int(np.asarray(counts, dtype=np.int64).sum())
+
+
+def sketch_percentile(counts, q: float) -> float:
+    """The ``hist_percentile`` spec on sketch geometry: lower edge of the
+    first bucket where cumulative mass >= q * total; empty -> 0.0."""
+    c = sketch_merge(counts)
+    cum = np.cumsum(c)
+    total = cum[-1]
+    if total == 0:
+        return 0.0
+    idx = int(np.argmax(cum >= q * total))
+    return float(sketch_edges()[idx])
+
+
+def sketch_percentiles(counts, qs: Sequence[float]) -> np.ndarray:
+    c = sketch_merge(counts)   # merge once for many quantiles
+    return np.array([sketch_percentile(c, q) for q in qs])

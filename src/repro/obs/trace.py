@@ -88,3 +88,19 @@ def decode_ring(ring: MigrationRing) -> tuple[np.ndarray, int]:
     out["direction"] = data[order, COL_DIR]
     out["hotness"] = data[order, COL_HOT].view(np.float32)
     return out, max(head - C, 0)
+
+
+def ring_summary(ring: MigrationRing) -> dict:
+    """Wraparound accounting for a ring (scalar head) or a fleet-batched
+    ring (head [...]): how many events were ever recorded, how many the
+    fixed capacity retains, and how many wrap dropped. Exported as the
+    ``ring_events_total`` / ``ring_dropped_total`` Prometheus counters so
+    operators can tell a quiet host from a ring that silently wrapped."""
+    C = ring.data.shape[-2]
+    head = np.asarray(ring.head, np.int64)
+    return {
+        "capacity": C,
+        "recorded": head if head.ndim else int(head),
+        "retained": np.minimum(head, C) if head.ndim else int(min(int(head), C)),
+        "dropped": np.maximum(head - C, 0) if head.ndim else int(max(int(head) - C, 0)),
+    }

@@ -63,6 +63,18 @@ def init_serve_state(cfg: ModelConfig, tcfg: TieringConfig, batch: int,
     return state
 
 
+def serve_exposition(state: Dict[str, object],
+                     prefix: str = "equilibria_kv") -> str:
+    """Prometheus text exposition of a serve state's KV tiering counters
+    (``export.kv_exposition``). Raises ValueError for attention-free
+    states (pure-SSM serving carries no paged KV cache to meter)."""
+    from repro.obs.export import kv_exposition
+    if "kv" not in state:
+        raise ValueError("serve state has no tiered KV cache "
+                         "(attention-free family)")
+    return kv_exposition(state["kv"], prefix=prefix)
+
+
 def compute_cross_kv(params, cfg: ModelConfig, enc: jax.Array):
     """Precompute per-layer cross-attention K/V from the encoder output
     (whisper) or stub image embeddings (vlm). enc: [B, T, D].

@@ -1,0 +1,271 @@
+"""Slowdown attribution ledger (obs/attribution.py) + counterfactual
+baselines (obs/counterfactual.py) + the mergeable stall sketch
+(obs/sketch.py).
+
+The load-bearing contract is conservation: every tick, the ledger's five
+components sum to the total modeled stall in *integer* accounting, and the
+cumulative total matches the counter identity
+``attempted_promotions - promotions + reclaims`` bit-exact — across every
+policy mode (including tpp, whose global promotion selection can hand a
+tenant more than its per-tenant quota cascade), both engines, and the
+chunked fleet rollout. Counterfactual interference (isolated-minus-stacked
+fast-hit delta) must be non-negative on clean hosts and strictly positive
+for victims of an injected thrasher. Sketch percentiles follow the
+``hist_percentile`` lower-edge spec, are exact in the integer linear
+range, and merge losslessly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TieringConfig
+from repro.core.churn import make_churn_tick, run_churn_engine
+from repro.core.engine import run_engine
+from repro.core.state import init_state
+from repro.core.workloads import (ChurnSlot, build_churn_schedule,
+                                  build_trace, cache_like, spark_like,
+                                  suggest_churn_policy, thrasher, web_like)
+from repro.obs import sketch as SK
+from repro.obs.attribution import (COMPONENTS, AttribSignals,
+                                   attribution_components,
+                                   attribution_conserved,
+                                   attribution_summary, fast_hit_fraction,
+                                   make_attribution)
+from repro.obs.counterfactual import counterfactual_run, isolate_schedules
+
+_TICKS = 100
+
+
+def _pressured(noisy: bool = False, ticks: int = _TICKS):
+    """4 tenants oversubscribing a 64-page fast tier ~2.2x."""
+    slots = [ChurnSlot(web_like(40), [(0, ticks)]),
+             ChurnSlot(cache_like(40), [(0, ticks)]),
+             ChurnSlot(spark_like(32), [(4, ticks)]),
+             ChurnSlot(thrasher(32, fast_share=10), [(ticks // 5, ticks)])
+             if noisy else
+             ChurnSlot(web_like(32), [(ticks // 5, ticks)])]
+    prot, bound = suggest_churn_policy(slots)
+    cfg = TieringConfig(n_tenants=4, n_fast_pages=64, n_slow_pages=128,
+                        lower_protection=prot, upper_bound=bound, p_base=16)
+    return cfg, build_churn_schedule(slots, ticks)
+
+
+# ----------------------------------------------------------- conservation ----
+@pytest.mark.parametrize("mode", ["equilibria", "tpp", "memtis", "static"])
+def test_conservation_every_mode(mode):
+    cfg, sched = _pressured(noisy=True)
+    spec = make_attribution(cfg.n_tenants, cfg.lat_fast)
+    final, _ = run_churn_engine(cfg, sched, mode=mode, k_max=32, attrib=spec)
+    att = final.attrib
+    comp = np.asarray(att.comp, np.int64)
+    total = np.asarray(att.total, np.int64)
+    c = final.counters
+    ident = (np.asarray(c.attempted_promotions, np.int64)
+             - np.asarray(c.promotions, np.int64)
+             + np.asarray(c.reclaims, np.int64))
+    assert (comp >= 0).all(), mode
+    assert (comp.sum(axis=-1) == total).all(), mode
+    assert (total == ident).all(), mode
+    assert attribution_conserved(att, c)
+    assert total.sum() > 0, "pressured host must accumulate stall"
+
+
+def test_conservation_static_engine():
+    cfg = TieringConfig(n_tenants=3, n_fast_pages=24, n_slow_pages=60,
+                        lower_protection=(4, 4, 0), upper_bound=(0, 0, 10),
+                        p_base=8)
+    owner, accesses, alive = build_trace(
+        [web_like(24), cache_like(24), thrasher(24, fast_share=8)], 80)
+    spec = make_attribution(3, cfg.lat_fast)
+    final, _ = run_engine(cfg, owner, accesses, alive, k_max=16, attrib=spec)
+    assert attribution_conserved(final.attrib, final.counters)
+    assert int(np.asarray(final.attrib.total).sum()) > 0
+
+
+def test_no_throttle_ablation_zeroes_component():
+    cfg, sched = _pressured(noisy=True)
+    cfg = cfg.with_(enable_promo_throttle=False)
+    spec = make_attribution(cfg.n_tenants, cfg.lat_fast)
+    final, _ = run_churn_engine(cfg, sched, k_max=32, attrib=spec)
+    comp = np.asarray(final.attrib.comp)
+    assert (comp[:, COMPONENTS.index("throttled")] == 0).all()
+    assert attribution_conserved(final.attrib, final.counters)
+
+
+def test_components_unit_decomposition():
+    sig = AttribSignals(
+        cand=jnp.asarray([10, 6, 4]), promoted=jnp.asarray([2, 6, 6]),
+        quota_base=jnp.asarray([8, 6, 4]), quota_eq2=jnp.asarray([5, 6, 4]),
+        quota_mit=jnp.asarray([3, 6, 4]), freed=jnp.asarray([1, 0, 2]),
+        a_fast=jnp.zeros(3), a_slow=jnp.zeros(3), latency=jnp.ones(3))
+    comp = np.asarray(attribution_components(sig))
+    # tenant 0: hot 2, throttled 3, mitigated 2, reclaim 1, contention 1
+    assert comp[0].tolist() == [2, 3, 2, 1, 1]
+    # tenant 1: everything promoted, nothing deferred
+    assert comp[1].tolist() == [0, 0, 0, 0, 0]
+    # tenant 2: tpp-style global selection spill (promoted > quota_mit):
+    # the negative spill folds into hot_resident, contention floors at 0
+    assert comp[2].tolist() == [-2, 0, 0, 2, 0]
+    assert (comp.sum(axis=-1) == np.asarray(
+        sig.cand - sig.promoted + sig.freed)).all()
+
+
+def test_summary_rejects_batched_state():
+    from repro.obs.attribution import init_attribution
+    spec = make_attribution(2)
+    att = jax.tree_util.tree_map(lambda x: jnp.stack([x, x]),
+                                 init_attribution(spec))
+    with pytest.raises(ValueError):
+        attribution_summary(spec, att)
+
+
+def test_tick_jaxpr_constant_in_horizon_and_tenants():
+    from repro.obs.streaming import make_detector
+
+    def eqns(ticks, T):
+        cfg = TieringConfig(n_tenants=T, n_fast_pages=16, n_slow_pages=24,
+                            lower_protection=(3, 3), upper_bound=(0, 6))
+        det = make_detector(ticks, T, cfg.lower_protection)
+        att = make_attribution(T, cfg.lat_fast)
+        tick = make_churn_tick(cfg, 40, k_max=16, detector=det, attrib=att)
+        state = init_state(cfg, 40, detector=det, attrib=att)
+        return len(jax.make_jaxpr(tick)(
+            state, (jnp.zeros((T, 8), jnp.float32),
+                    jnp.zeros((T,), jnp.int32))).eqns)
+
+    base = eqns(50, 3)
+    assert eqns(500, 3) == base     # horizon is data
+    assert eqns(50, 6) == base      # tenant count is data
+
+
+# ---------------------------------------------------------- fleet rollout ----
+def _demo_roll(ticks=80, hosts=2, **kw):
+    from repro.obs.dashboard import demo_fleet
+    return demo_fleet(hosts=hosts, ticks=ticks, chunk=40, **kw)
+
+
+def test_fleet_rollout_attribution_accessors():
+    cfg, roll = _demo_roll()
+    H, T = roll.n_hosts, cfg.n_tenants
+    comp = roll.attribution_components()
+    assert comp.shape == (H, T, len(COMPONENTS))
+    assert roll.attribution_totals().shape == (H, T)
+    fhit = roll.fast_hit_fraction()
+    assert fhit.shape == (H, T) and (fhit >= 0).all() and (fhit <= 1).all()
+    assert roll.attribution_conserved()
+    rup = roll.attribution_rollup()
+    assert rup["conserved"] is True
+    assert rup["stall_units_total"] == int(comp.sum())
+    assert abs(sum(rup["component_shares"].values()) - 1.0) < 1e-9 \
+        or rup["stall_units_total"] == 0
+    p50, p95, p99 = roll.stall_percentiles((0.5, 0.95, 0.99))
+    assert p50 <= p95 <= p99
+
+
+def test_fleet_rollout_attrib_false_raises():
+    from repro.core.workloads import build_churn_schedule
+    from repro.obs.fleet import fleet_rollout, stack_schedules
+    cfg, sched = _pressured()
+    want, rates = stack_schedules([sched, sched])
+    roll = fleet_rollout(cfg, want, rates, 40, chunk=20, k_max=16,
+                         attrib=False, detect=False)
+    assert roll.final_state.attrib is None
+    with pytest.raises(ValueError):
+        roll.attribution_totals()
+
+
+def test_chunked_rollout_chunk_invariant():
+    """The ledger riding the donated carry must not depend on chunking."""
+    from repro.obs.fleet import fleet_rollout, stack_schedules
+    cfg, sched = _pressured(noisy=True, ticks=80)
+    want, rates = stack_schedules([sched, sched])
+    rolls = [fleet_rollout(cfg, want, rates, 80, chunk=c, k_max=16,
+                           detect=False) for c in (20, 80)]
+    a, b = (r.final_state.attrib for r in rolls)
+    assert (np.asarray(a.comp) == np.asarray(b.comp)).all()
+    assert (np.asarray(a.total) == np.asarray(b.total)).all()
+    assert (np.asarray(a.sketch) == np.asarray(b.sketch)).all()
+
+
+# -------------------------------------------------------- counterfactuals ----
+def test_isolate_schedules_masks_other_tenants():
+    _, sched = _pressured()
+    want_iso, rates_iso = isolate_schedules(sched)
+    T = sched.want.shape[1]
+    for i in range(T):
+        assert (want_iso[i][:, i] == sched.want[:, i]).all()
+        others = [j for j in range(T) if j != i]
+        assert (want_iso[i][:, others] == 0).all()
+        assert (rates_iso[i][:, others] == 0).all()
+
+
+def test_counterfactual_clean_nonnegative():
+    cfg, sched = _pressured(noisy=False, ticks=80)
+    res = counterfactual_run(cfg, sched, k_max=32)
+    assert res.active.all()
+    assert (res.interference >= -1e-6).all()
+    assert attribution_conserved(res.stacked_state.attrib,
+                                 res.stacked_state.counters)
+
+
+def test_counterfactual_noisy_victim_positive():
+    cfg_c, sched_c = _pressured(noisy=False, ticks=80)
+    cfg_n, sched_n = _pressured(noisy=True, ticks=80)
+    clean = counterfactual_run(cfg_c, sched_c, k_max=32)
+    noisy = counterfactual_run(cfg_n, sched_n, k_max=32)
+    delta = noisy.interference - clean.interference
+    victim = int(np.argmax(delta))
+    assert noisy.interference[victim] > 0.01
+    assert delta[victim] > 0.05
+    s = noisy.summary()
+    assert s["active_tenants"] == 4
+    assert s["max_interference"] >= noisy.interference[victim] - 1e-9
+
+
+def test_fast_hit_fraction_empty_is_one():
+    spec = make_attribution(3)
+    from repro.obs.attribution import init_attribution
+    att = init_attribution(spec)
+    assert (fast_hit_fraction(att) == 1.0).all()
+
+
+# ------------------------------------------------------------ stall sketch ----
+def test_sketch_exact_in_linear_range():
+    values = np.array([0, 1, 1, 5, 17, 100, 127] * 3)
+    counts = SK.sketch_add(SK.init_sketch(), jnp.asarray(values, jnp.float32))
+    assert int(SK.sketch_count(counts)) == values.size
+    for q in (0.1, 0.5, 0.9, 0.99):
+        exact = np.sort(values)[min(int(np.ceil(q * values.size)) - 1,
+                                    values.size - 1)]
+        assert int(SK.sketch_percentile(counts, q)) == int(exact), q
+
+
+def test_sketch_merge_equals_pooled():
+    rng = np.random.default_rng(3)
+    vals = rng.integers(0, 4000, size=(8, 64)).astype(np.float32)
+    batched = jax.vmap(SK.sketch_add)(SK.init_sketch((8,)),
+                                      jnp.asarray(vals))
+    pooled = SK.sketch_add(SK.init_sketch(), jnp.asarray(vals.reshape(-1)))
+    assert (np.asarray(SK.sketch_merge(batched))
+            == np.asarray(pooled, np.int64)).all()
+
+
+def test_sketch_rank_error_bound():
+    from benchmarks.attribution import _sketch_rank_error
+    assert _sketch_rank_error(n_hosts=16, per_host=256) <= 0.02
+
+
+def test_sketch_edges_and_empty():
+    edges = np.asarray(SK.sketch_edges())
+    assert edges.shape == (SK.SKETCH_BUCKETS + 1,)
+    assert (np.diff(edges) > 0).all()
+    assert (edges[:SK.N_LINEAR] == np.arange(SK.N_LINEAR)).all()
+    assert float(SK.sketch_percentile(SK.init_sketch(), 0.99)) == 0.0
+
+
+def test_sketch_weighted_add():
+    counts = SK.sketch_add(SK.init_sketch(), jnp.asarray([3.0, 3.0, 900.0]),
+                           weights=jnp.asarray([2, 3, 4], jnp.int32))
+    assert int(SK.sketch_count(counts)) == 9
+    assert int(np.asarray(counts)[3]) == 5

@@ -1,0 +1,211 @@
+"""Exporter validator negative paths + new metric families.
+
+The validators guard the CI exporter smoke, so they must actually reject
+malformed artifacts — each rejection case here is a real corruption mode:
+non-monotone track timestamps and unpaired B/E spans for Chrome traces;
+bad label escapes, non-cumulative histogram buckets, missing ``+Inf``,
+``_count`` mismatches and undeclared/duplicate families for Prometheus
+text exposition. Also pinned: the attribution/ring metric families emitted
+by ``rollout_exposition`` and the serving-path ``kv_exposition``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.obs.export import (kv_exposition, prom_lines, rollout_exposition,
+                              validate_chrome_trace, validate_exposition)
+from repro.obs.trace import init_ring, ring_summary
+
+
+def _trace(events):
+    return {"traceEvents": events}
+
+
+def _ev(ph="X", ts=0, pid=0, tid=0, name="e", **kw):
+    return {"ph": ph, "ts": ts, "pid": pid, "tid": tid, "name": name, **kw}
+
+
+# ------------------------------------------------------- chrome trace ----
+def test_chrome_valid_complete_events():
+    n = validate_chrome_trace(_trace([
+        {"ph": "M", "name": "process_name", "pid": 0, "tid": 0,
+         "args": {"name": "host0"}},
+        _ev(ts=0, dur=5), _ev(ts=3, dur=1), _ev(ts=3, tid=1, dur=2)]))
+    assert n == 3
+
+
+def test_chrome_rejects_nonmonotone_track():
+    with pytest.raises(ValueError, match="not monotone"):
+        validate_chrome_trace(_trace([_ev(ts=5, dur=1), _ev(ts=4, dur=1)]))
+    # same timestamps on *different* tracks are fine
+    assert validate_chrome_trace(_trace([_ev(ts=5, tid=0, dur=1),
+                                         _ev(ts=4, tid=1, dur=1)])) == 2
+
+
+def test_chrome_rejects_negative_dur_and_missing_fields():
+    with pytest.raises(ValueError, match="dur"):
+        validate_chrome_trace(_trace([_ev(ts=0, dur=-1)]))
+    with pytest.raises(ValueError, match="missing 'ts'"):
+        validate_chrome_trace(_trace([{"ph": "X", "pid": 0, "tid": 0,
+                                       "name": "e", "dur": 1}]))
+    with pytest.raises(ValueError, match="traceEvents"):
+        validate_chrome_trace({"foo": []})
+
+
+def test_chrome_balanced_be_spans_pass():
+    assert validate_chrome_trace(_trace([
+        _ev(ph="B", ts=0), _ev(ph="B", ts=1, name="inner"),
+        _ev(ph="E", ts=2), _ev(ph="E", ts=3)])) == 4
+
+
+def test_chrome_rejects_end_without_begin():
+    with pytest.raises(ValueError, match="no open 'B'"):
+        validate_chrome_trace(_trace([_ev(ph="E", ts=0)]))
+    # B on one track does not open a span on another
+    with pytest.raises(ValueError, match="no open 'B'"):
+        validate_chrome_trace(_trace([_ev(ph="B", ts=0, tid=0),
+                                      _ev(ph="E", ts=1, tid=1)]))
+
+
+def test_chrome_rejects_unclosed_begin():
+    with pytest.raises(ValueError, match="unclosed 'B'"):
+        validate_chrome_trace(_trace([_ev(ph="B", ts=0),
+                                      _ev(ph="E", ts=1),
+                                      _ev(ph="B", ts=2, name="left_open")]))
+
+
+# --------------------------------------------------- prometheus text ----
+_GOOD = """# HELP m_total Things.
+# TYPE m_total counter
+m_total{host="0",tenant="1"} 3
+"""
+
+
+def test_exposition_valid_passes():
+    assert validate_exposition(_GOOD) == 1
+
+
+def test_exposition_rejects_bad_escape():
+    bad = '# HELP m_total T.\n# TYPE m_total counter\n' \
+          'm_total{host="a\\qb"} 1\n'
+    with pytest.raises(ValueError, match="not a valid sample"):
+        validate_exposition(bad)
+
+
+def test_exposition_accepts_legal_escapes():
+    text = "\n".join(prom_lines(
+        "m_total", "T.", "counter",
+        [({"host": 'a\\b'}, 1.0), ({"host": 'say "hi"\nok'}, 2.0)])) + "\n"
+    assert validate_exposition(text) == 2
+
+
+def test_exposition_rejects_noncumulative_buckets():
+    bad = ('# HELP h T.\n# TYPE h histogram\n'
+           'h_bucket{le="1"} 5\nh_bucket{le="2"} 3\n'
+           'h_bucket{le="+Inf"} 5\nh_count 5\n')
+    with pytest.raises(ValueError, match="not cumulative"):
+        validate_exposition(bad)
+
+
+def test_exposition_rejects_missing_inf_bucket():
+    bad = ('# HELP h T.\n# TYPE h histogram\n'
+           'h_bucket{le="1"} 5\nh_bucket{le="2"} 6\nh_count 6\n')
+    with pytest.raises(ValueError, match=r"missing \+Inf"):
+        validate_exposition(bad)
+
+
+def test_exposition_rejects_count_mismatch():
+    bad = ('# HELP h T.\n# TYPE h histogram\n'
+           'h_bucket{le="1"} 5\nh_bucket{le="+Inf"} 6\nh_count 7\n')
+    with pytest.raises(ValueError, match="_count"):
+        validate_exposition(bad)
+
+
+def test_exposition_rejects_undeclared_and_duplicate():
+    with pytest.raises(ValueError, match="no TYPE"):
+        validate_exposition('m_total 1\n')
+    dup = ('# TYPE m_total counter\n# TYPE m_total counter\nm_total 1\n')
+    with pytest.raises(ValueError, match="duplicate TYPE"):
+        validate_exposition(dup)
+
+
+# ------------------------------------- attribution / ring families ----
+def _small_rollout():
+    from repro.obs.dashboard import demo_fleet
+    return demo_fleet(hosts=2, ticks=80, chunk=40, noisy=True)
+
+
+def test_rollout_exposition_attribution_families():
+    cfg, roll = _small_rollout()
+    text = rollout_exposition(roll)
+    assert validate_exposition(text) > 0
+    for family in ("equilibria_stall_component_total",
+                   "equilibria_stall_units_total",
+                   "equilibria_stall_units_per_tick_bucket",
+                   "equilibria_stall_units_quantile",
+                   "equilibria_ring_events_total",
+                   "equilibria_ring_dropped_total"):
+        assert family in text, family
+    # the exported component series conserve: per (host, tenant), the
+    # component samples sum to the stall_units_total sample
+    import re
+    comp, total = {}, {}
+    for line in text.splitlines():
+        m = re.match(r'equilibria_stall_(component|units)_total'
+                     r'\{host="(\d+)"(?:,tenant="(\d+)")?'
+                     r'(?:,component="\w+")?,?\} (\S+)', line)
+        if not m:
+            continue
+        key = (m.group(2), m.group(3))
+        if m.group(1) == "component":
+            comp[key] = comp.get(key, 0.0) + float(m.group(4))
+        else:
+            total[key] = float(m.group(4))
+    assert comp and comp == total
+
+
+def test_ring_summary_scalar_and_batched():
+    ring = init_ring(8)
+    s = ring_summary(ring)
+    assert s == {"capacity": 8, "recorded": 0, "retained": 0, "dropped": 0}
+    batched = ring._replace(
+        data=np.broadcast_to(np.asarray(ring.data), (3, 8, 5)),
+        head=np.asarray([2, 8, 13]))
+    s = ring_summary(batched)
+    assert s["retained"].tolist() == [2, 8, 8]
+    assert s["dropped"].tolist() == [0, 0, 5]
+
+
+def test_kv_and_serve_exposition():
+    from repro.configs import get_smoke_config
+    from repro.configs.base import TieringConfig
+    from repro.memtier.kvcache import init_cache, kv_tier_counters
+    from repro.serve.decode import init_serve_state, serve_exposition
+    cfg = dataclasses.replace(get_smoke_config("llama32_1b"),
+                              dtype="float32", param_dtype="float32")
+    tcfg = TieringConfig(n_tenants=2, page_tokens=4, thrash_table_slots=64,
+                         lower_protection=(2, 2), upper_bound=(3, 3))
+    cache = init_cache(cfg, tcfg, batch=2, seq=16)
+    counters = kv_tier_counters(cache)
+    assert set(counters) == set(cache.counters._asdict())
+    assert all(v.shape == (2,) for v in counters.values())
+    text = kv_exposition(cache)
+    assert validate_exposition(text) > 0
+    assert "equilibria_kv_promotions_total" in text
+    assert "equilibria_kv_ring_dropped_total" in text
+
+    state = init_serve_state(cfg, tcfg, 2, 16)
+    assert validate_exposition(serve_exposition(state)) > 0
+    with pytest.raises(ValueError, match="no tiered KV cache"):
+        serve_exposition({"mamba": None})
+
+
+def test_dashboard_attribution_section():
+    from repro.obs.dashboard import render_dashboard
+    cfg, roll = _small_rollout()
+    md = render_dashboard(roll)
+    assert "## Slowdown attribution" in md
+    for name in ("hot_resident", "throttled", "mitigated", "reclaim",
+                 "contention", "fast-hit", "conserved"):
+        assert name in md, name
