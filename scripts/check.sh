@@ -17,6 +17,9 @@ fi
 echo "== tier-1 tests =="
 python -m pytest -x -q "${MARK[@]}"
 
+echo "== static analysis gate (jaxpr passes + repo lint vs committed baseline) =="
+python -m repro.analysis --gate
+
 echo "== obs fleet smoke (4 hosts) =="
 python -m benchmarks.fleet_obs --smoke
 

@@ -1,0 +1,45 @@
+# Static analysis & invariant gating for the compiled tiering graph.
+"""``repro.analysis`` — machine-checked structural invariants.
+
+Equilibria's scale claims rest on properties of the *compiled artifact*,
+not just runtime behavior: the tick must stay pure (no host round-trips),
+its integer state must not overflow at fleet horizons, its jaxpr must be
+constant in tenants/horizon/events, and the chunked rollout's donated
+carries must really alias. This package proves those properties once, for
+every engine, instead of re-asserting fragments per test:
+
+  jaxpr_audit  — composable passes over a ``ClosedJaxpr`` (recursing into
+                 scan/cond/while/pjit sub-jaxprs): purity, dtype
+                 discipline, integer-overflow interval analysis, donation
+                 aliasing.
+  constancy    — the shared "jaxpr invariant under parameter sweep"
+                 harness (eqn count + primitive histogram) used by the
+                 test suite and the CLI gate.
+  lint         — AST rules for graph code (no Python loops over tenants
+                 in core/, no ``np.`` inside traced closures, seam
+                 keywords default to None).
+  targets      — the real audit targets: the unified tick (4 policy modes
+                 x both ownership providers), the fleet rollout chunk
+                 program, and the four Pallas kernel wrappers.
+  fixtures     — known-bad programs each pass must flag (analyzer tests).
+
+CLI: ``python -m repro.analysis`` (see ``--help``); ``--gate`` fails on
+any finding not in the committed baseline (``analysis/baseline.json``) and
+is wired into ``scripts/check.sh``.
+"""
+from repro.analysis.constancy import (JaxprSignature, assert_jaxpr_constant,
+                                      jaxpr_signature, signature_of)
+from repro.analysis.findings import Finding, Report
+from repro.analysis.jaxpr_audit import (audit_jaxpr, donation_pass,
+                                        dtype_pass, overflow_pass,
+                                        purity_pass)
+from repro.analysis.lint import lint_paths, lint_source
+
+__all__ = [
+    "Finding", "Report",
+    "JaxprSignature", "jaxpr_signature", "signature_of",
+    "assert_jaxpr_constant",
+    "audit_jaxpr", "purity_pass", "dtype_pass", "overflow_pass",
+    "donation_pass",
+    "lint_paths", "lint_source",
+]

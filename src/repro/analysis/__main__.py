@@ -1,0 +1,175 @@
+"""``python -m repro.analysis`` — audit the compiled tiering graphs.
+
+Default run: trace every real target (unified tick: 4 policy modes x both
+ownership providers, the L=256k/T=64 scale point, the fleet chunk program,
+the four kernel wrappers), run the jaxpr passes + constancy sweeps, and
+AST-lint ``src/repro``. Findings print keyed as ``pass:target:slug``.
+
+  --gate            exit 1 on any finding not in the committed baseline
+                    (analysis/baseline.json); stale baseline keys warn.
+  --write-baseline  accept the current findings as the new baseline.
+  --fixture NAME    audit a known-bad fixture instead of the real targets
+                    (purity|dtype|overflow|constancy|donation|lint|clean);
+                    fixtures are never baselined, so --gate exits non-zero
+                    iff the fixture is flagged. Used by the analyzer's own
+                    CI checks.
+  --fast            skip the scale + fleet targets (quick local loop).
+  --json            machine-readable report on stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.analysis import constancy as C
+from repro.analysis import fixtures as FX
+from repro.analysis import lint as LI
+from repro.analysis.findings import (BASELINE_PATH, Finding, Report,
+                                     load_baseline, write_baseline)
+from repro.analysis.jaxpr_audit import (donation_pass, dtype_pass,
+                                        overflow_pass, purity_pass)
+
+_REPO_SRC = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), os.pardir))      # src/repro
+
+
+def _audit_target(t, report: Report) -> None:
+    purity_pass(t.closed, t.name, report)
+    dtype_pass(t.closed, t.name, report, carry_pairs=t.carry_pairs)
+    if t.input_ivals is not None:
+        overflow_pass(t.closed, t.name, report, t.input_ivals,
+                      t.carry_pairs, t.horizon)
+    if t.donation is not None:
+        fn, args, donate = t.donation
+        donation_pass(fn, args, donate, t.name, report)
+
+
+def _run_real(report: Report, fast: bool, verbose: bool) -> None:
+    from repro.analysis import targets as TG
+    for t in TG.all_targets(scale=not fast, fleet=not fast):
+        t0 = time.perf_counter()
+        _audit_target(t, report)
+        if verbose:
+            print(f"  audited {t.name:28s} "
+                  f"({time.perf_counter() - t0:.2f}s)", file=sys.stderr)
+    for name, (build, params) in TG.tick_constancy_sweeps().items():
+        ok, _sig, diff = C.check_constant(build, params)
+        if not ok:
+            report.add(Finding("constancy", name, "sweep",
+                               "; ".join(diff)[:500]))
+        if verbose:
+            print(f"  constancy {name}: {'ok' if ok else 'VIOLATED'}",
+                  file=sys.stderr)
+    LI.lint_paths([_REPO_SRC], report,
+                  root=os.path.normpath(os.path.join(_REPO_SRC, os.pardir)))
+
+
+def _run_fixture(name: str, report: Report) -> None:
+    if name == "purity":
+        purity_pass(FX.bad_purity(), "fixture:purity", report)
+    elif name == "dtype":
+        dtype_pass(FX.bad_dtype(), "fixture:dtype", report)
+    elif name == "overflow":
+        for tag, fx in (("carry", FX.bad_overflow_carry),
+                        ("scan", FX.bad_overflow_scan),
+                        ("f32", FX.bad_overflow_f32)):
+            closed, pairs, ivals, horizon = fx()
+            overflow_pass(closed, f"fixture:overflow:{tag}", report, ivals,
+                          pairs, horizon)
+    elif name == "constancy":
+        ok, _sig, diff = C.check_constant(FX.bad_constancy_build, (2, 5))
+        if not ok:
+            report.add(Finding("constancy", "fixture:constancy", "sweep",
+                               "; ".join(diff)[:500]))
+    elif name == "donation":
+        fn, args, donate = FX.bad_donation()
+        donation_pass(fn, args, donate, "fixture:donation", report)
+    elif name == "lint":
+        for tag, src in (("tenant", FX.BAD_LINT_TENANT_LOOP),
+                         ("np", FX.BAD_LINT_NP_IN_GRAPH),
+                         ("seam", FX.BAD_LINT_SEAM_DEFAULT)):
+            report.extend(LI.lint_source(src, f"fixture:lint:{tag}",
+                                         in_core=True))
+    elif name == "clean":
+        closed, pairs, ivals, horizon = FX.clean_tick()
+        purity_pass(closed, "fixture:clean", report)
+        dtype_pass(closed, "fixture:clean", report, carry_pairs=pairs)
+        overflow_pass(closed, "fixture:clean", report, ivals, pairs, horizon)
+        ok, _sig, diff = C.check_constant(FX.good_constancy_build, (2, 5))
+        if not ok:
+            report.add(Finding("constancy", "fixture:clean", "sweep",
+                               "; ".join(diff)[:500]))
+        fn, args, donate = FX.good_donation()
+        donation_pass(fn, args, donate, "fixture:clean", report)
+        report.extend(LI.lint_source(FX.CLEAN_LINT, "fixture:clean",
+                                     in_core=True))
+    else:
+        raise SystemExit(f"unknown fixture {name!r}; "
+                         f"choose from {FX.FIXTURES}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static analysis of the compiled tiering graphs.")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 1 on findings not in the committed baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept current findings as the baseline")
+    ap.add_argument("--fixture", choices=FX.FIXTURES,
+                    help="audit a known-bad fixture instead of real targets")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the scale + fleet targets")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable report on stdout")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    report = Report()
+    if args.fixture:
+        _run_fixture(args.fixture, report)
+        baseline = []           # fixtures are never baselined
+    else:
+        _run_real(report, fast=args.fast, verbose=args.verbose)
+        baseline = load_baseline()
+
+    if args.write_baseline and not args.fixture:
+        path = write_baseline(report)
+        print(f"baseline written: {path} ({len(report.keys())} keys)")
+
+    new = report.new_vs(baseline)
+    stale = report.stale_vs(baseline)
+
+    if args.as_json:
+        out = report.to_json()
+        out["new"] = [f.key for f in new]
+        out["stale"] = stale
+        print(json.dumps(out, indent=2))
+    else:
+        n_base = len(report.findings) - len(new)
+        print(f"analysis: {len(report.findings)} findings "
+              f"({len(new)} new, {n_base} baselined), "
+              f"{len(report.notes)} notes")
+        for f in new:
+            print(f"NEW {f}")
+        if args.verbose:
+            for f in sorted(report.findings, key=lambda f: f.key):
+                if f not in new:
+                    print(f"    {f.key}  [baselined]")
+            for n in report.notes:
+                print(f"note: {n}")
+        for k in stale:
+            print(f"stale baseline entry (no longer fires): {k}")
+
+    if args.gate and new:
+        print(f"GATE: {len(new)} finding(s) not in baseline "
+              f"({BASELINE_PATH})", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,112 @@
+"""The shared "jaxpr invariant under parameter sweep" harness.
+
+Scale-independence is a load-bearing claim: the compiled tick's program
+must not change shape with tenant count, horizon, or event schedule —
+otherwise compile cost and cache behavior stop being O(1) in fleet size.
+Five test files used to pin this with hand-rolled
+``len(jax.make_jaxpr(...).eqns)`` equalities; this module is the single
+implementation they now share, and it pins the *primitive histogram* too
+(sub-jaxprs included), so a rewrite that keeps the eqn count but swaps
+ops (e.g. a gather becoming a tenant-unrolled select chain) still trips.
+
+Usage::
+
+    sig = jaxpr_signature(fn, *args)                  # one trace
+    assert_jaxpr_constant(build, params)              # sweep a parameter
+      # where build(p) returns (fn, args) — traced per parameter value
+
+``assert_jaxpr_constant`` raises AssertionError with a primitive-level
+diff on violation, so the failing op mix is visible in the test output.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, List, NamedTuple, Sequence, Tuple
+
+import jax
+
+from repro.analysis.walk import n_eqns, prim_histogram
+
+
+class JaxprSignature(NamedTuple):
+    """Structural fingerprint of a traced program (sub-jaxprs included)."""
+    n_eqns: int
+    prims: Tuple[Tuple[str, int], ...]   # sorted (primitive, count)
+
+    def histogram(self) -> dict:
+        return dict(self.prims)
+
+    def diff(self, other: "JaxprSignature") -> List[str]:
+        """Human-readable per-primitive delta (empty iff equal)."""
+        lines: List[str] = []
+        if self.n_eqns != other.n_eqns:
+            lines.append(f"eqn count: {self.n_eqns} != {other.n_eqns}")
+        a, b = self.histogram(), other.histogram()
+        for name in sorted(set(a) | set(b)):
+            if a.get(name, 0) != b.get(name, 0):
+                lines.append(f"  {name}: {a.get(name, 0)} -> {b.get(name, 0)}")
+        return lines
+
+    def __str__(self) -> str:
+        return (f"JaxprSignature(eqns={self.n_eqns}, "
+                f"prims={len(self.prims)} kinds)")
+
+
+def signature_of(closed) -> JaxprSignature:
+    """Signature of an already-traced ClosedJaxpr."""
+    hist = prim_histogram(closed)
+    return JaxprSignature(n_eqns(closed),
+                          tuple(sorted(hist.items())))
+
+
+def jaxpr_signature(fn: Callable, *args, **kwargs) -> JaxprSignature:
+    """Trace ``fn(*args, **kwargs)`` and fingerprint the program."""
+    return signature_of(jax.make_jaxpr(fn)(*args, **kwargs))
+
+
+def sweep_signatures(build: Callable, params: Sequence,
+                     ) -> List[Tuple[object, JaxprSignature]]:
+    """Trace ``build(p)`` for each parameter value.
+
+    ``build(p)`` returns ``(fn, args)`` (args a tuple) or a ClosedJaxpr
+    directly. Returns [(param, signature), ...] in sweep order.
+    """
+    out = []
+    for p in params:
+        built = build(p)
+        if hasattr(built, "jaxpr"):           # already a ClosedJaxpr
+            sig = signature_of(built)
+        else:
+            fn, args = built
+            sig = jaxpr_signature(fn, *args)
+        out.append((p, sig))
+    return out
+
+
+def assert_jaxpr_constant(build: Callable, params: Sequence,
+                          label: str = "") -> JaxprSignature:
+    """Assert the traced program is identical across a parameter sweep.
+
+    Raises AssertionError naming the first divergent parameter with a
+    primitive-level diff. Returns the common signature on success.
+    """
+    sigs = sweep_signatures(build, params)
+    (p0, base) = sigs[0]
+    for p, sig in sigs[1:]:
+        if sig != base:
+            diff = "\n".join(base.diff(sig)) or "(histograms equal but "\
+                "tuple order differs — report this)"
+            raise AssertionError(
+                f"jaxpr not constant{f' [{label}]' if label else ''}: "
+                f"param {p0!r} vs {p!r}:\n{diff}")
+    return base
+
+
+def check_constant(build: Callable, params: Sequence,
+                   ) -> Tuple[bool, JaxprSignature, List[str]]:
+    """Non-raising variant for the CLI gate: (ok, base_signature, diff)."""
+    try:
+        base = assert_jaxpr_constant(build, params)
+        return True, base, []
+    except AssertionError as e:
+        sigs = sweep_signatures(build, params[:1])
+        return False, sigs[0][1], str(e).splitlines()

@@ -1,0 +1,116 @@
+"""Findings and the committed baseline: the audit's currency.
+
+A ``Finding`` is one violation of a structural invariant, keyed by a
+*stable* identifier (pass, target, detail slug — never line numbers or
+numeric bounds, which drift) so a committed baseline can acknowledge known
+violations while any NEW violation fails the gate. The model is a classic
+ratchet lint: ``--write-baseline`` records the current findings,
+``--gate`` fails on findings not in the baseline and reports baseline
+entries that no longer fire (stale — safe to prune, never fatal).
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One structural violation.
+
+    key: stable identity for baseline matching — ``pass:target:slug``.
+    message: human diagnosis (bounds, dtypes, line numbers live here; the
+        message may change without invalidating the baseline entry).
+    """
+    pass_name: str        # purity | dtype | overflow | constancy | donation | lint
+    target: str           # audit target name (e.g. tick:static:equilibria)
+    slug: str             # stable detail (leaf path, rule:qualname, ...)
+    message: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.pass_name}:{self.target}:{self.slug}"
+
+    def __str__(self) -> str:
+        return f"[{self.pass_name}] {self.target} :: {self.slug}\n    {self.message}"
+
+
+@dataclass
+class Report:
+    """All findings of one audit run plus baseline bookkeeping."""
+    findings: List[Finding] = field(default_factory=list)
+    # approximation notes (e.g. primitives the interval analysis treated as
+    # unbounded) — informational, never gated
+    notes: List[str] = field(default_factory=list)
+
+    def add(self, finding: Finding) -> None:
+        self.findings.append(finding)
+
+    def extend(self, findings: Sequence[Finding]) -> None:
+        self.findings.extend(findings)
+
+    def note(self, msg: str) -> None:
+        if msg not in self.notes:
+            self.notes.append(msg)
+
+    def keys(self) -> List[str]:
+        return sorted({f.key for f in self.findings})
+
+    def new_vs(self, baseline: Sequence[str]) -> List[Finding]:
+        """Findings whose key is not acknowledged by the baseline."""
+        known = set(baseline)
+        out, seen = [], set()
+        for f in sorted(self.findings, key=lambda f: f.key):
+            if f.key not in known and f.key not in seen:
+                seen.add(f.key)
+                out.append(f)
+        return out
+
+    def stale_vs(self, baseline: Sequence[str]) -> List[str]:
+        """Baseline keys that no longer fire (candidates for pruning)."""
+        have = {f.key for f in self.findings}
+        return sorted(k for k in baseline if k not in have)
+
+    def to_json(self) -> dict:
+        return {
+            "findings": [
+                {"pass": f.pass_name, "target": f.target, "slug": f.slug,
+                 "message": f.message}
+                for f in sorted(self.findings, key=lambda f: f.key)],
+            "notes": list(self.notes),
+        }
+
+
+def load_baseline(path: Optional[str] = None) -> List[str]:
+    """Committed findings baseline -> list of acknowledged keys."""
+    path = BASELINE_PATH if path is None else path
+    if not os.path.exists(path):
+        return []
+    with open(path) as fh:
+        data = json.load(fh)
+    return list(data.get("accepted", []))
+
+
+def write_baseline(report: Report, path: Optional[str] = None,
+                   reasons: Optional[Dict[str, str]] = None) -> str:
+    """Record the current findings as the accepted baseline."""
+    path = BASELINE_PATH if path is None else path
+    old_reasons: Dict[str, str] = {}
+    if os.path.exists(path):
+        with open(path) as fh:
+            old_reasons = json.load(fh).get("reasons", {})
+    keys = report.keys()
+    data = {
+        "accepted": keys,
+        # free-form per-key justification, preserved across rewrites
+        "reasons": {k: (reasons or {}).get(k, old_reasons.get(k, ""))
+                    for k in keys},
+    }
+    with open(path, "w") as fh:
+        json.dump(data, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return path

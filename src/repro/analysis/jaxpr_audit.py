@@ -1,0 +1,291 @@
+"""Composable jaxpr-level audit passes.
+
+Each pass inspects one ``ClosedJaxpr`` (recursing through scan/cond/
+while/pjit sub-jaxprs via :mod:`repro.analysis.walk`) and appends
+:class:`~repro.analysis.findings.Finding` objects to a shared
+:class:`~repro.analysis.findings.Report`:
+
+  purity_pass    — the compiled graph must not re-enter Python: no
+                   ``io_callback``/``pure_callback``/``debug_print``,
+                   no infeed/outfeed, no ordered effects.
+  dtype_pass     — no 64-bit or complex leaks (x64 is globally off; a
+                   64-bit aval means someone smuggled in an escape
+                   hatch), no weak-type top-level outputs, carried state
+                   keeps its declared width end to end.
+  overflow_pass  — interval analysis (:mod:`repro.analysis.interval`)
+                   over the integer dataflow: per-tick growth of each
+                   carried counter, extrapolated to the declared fleet
+                   horizon, plus in-graph scan-carry wrap and
+                   int->float32 precision-loss events.
+  donation_pass  — ``donate_argnums`` must survive to the lowered
+                   artifact as input/output aliases (O(1) rollout
+                   memory), checked both structurally on the jaxpr and
+                   on the lowered StableHLO text.
+
+Passes never raise on violations — they report. The CLI/gate decides
+what is fatal by diffing against the committed baseline.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis.findings import Finding, Report
+from repro.analysis.interval import (EvalContext, Interval, IntervalEvaluator,
+                                     dtype_interval)
+from repro.analysis.walk import ClosedJaxpr, iter_eqns
+
+INT32_MAX = 2 ** 31 - 1
+
+# primitives that re-enter the Python host from inside the compiled graph
+_CALLBACK_PRIMS = {
+    "io_callback", "pure_callback", "debug_callback", "debug_print",
+    "host_callback_call", "outside_call", "infeed", "outfeed",
+}
+
+_WIDE_DTYPES = {"float64", "int64", "uint64", "complex64", "complex128"}
+
+
+# --------------------------------------------------------------- purity ----
+def purity_pass(closed: ClosedJaxpr, target: str, report: Report) -> None:
+    """No host callbacks, debug prints, or IO effects anywhere in the graph."""
+    seen: Dict[str, int] = {}
+    for eqn, path in iter_eqns(closed):
+        name = eqn.primitive.name
+        hit = None
+        if name in _CALLBACK_PRIMS:
+            hit = name
+        else:
+            for eff in getattr(eqn, "effects", ()) or ():
+                eff_name = type(eff).__name__
+                if any(k in eff_name for k in ("IO", "Callback", "Debug",
+                                               "Ordered")):
+                    hit = f"{name}+{eff_name}"
+                    break
+        if hit is None:
+            continue
+        base = f"{hit}@{path}" if path else hit
+        k = seen.get(base, 0)
+        seen[base] = k + 1
+        slug = base if k == 0 else f"{base}#{k}"
+        report.add(Finding(
+            "purity", target, slug,
+            f"host re-entry `{name}` at {path or '<top>'} — the compiled "
+            f"tick must stay pure (no Python round-trips on the hot path)"))
+    effects = getattr(closed, "effects", None)
+    if effects:
+        for eff in effects:
+            eff_name = type(eff).__name__
+            report.add(Finding(
+                "purity", target, f"effect:{eff_name}",
+                f"closed jaxpr carries effect {eff_name}; a pure graph has "
+                f"an empty effect set"))
+
+
+# ---------------------------------------------------------------- dtype ----
+def dtype_pass(closed: ClosedJaxpr, target: str, report: Report,
+               carry_pairs: Optional[Sequence[Tuple[int, int, str]]] = None,
+               ) -> None:
+    """No 64-bit/complex promotion; no weak-type outputs; stable carry widths.
+
+    carry_pairs: (invar_idx, outvar_idx, name) triples pairing carried
+    state leaves, used to check declared integer widths survive the tick.
+    """
+    wide_seen = set()
+
+    def check_aval(aval, where):
+        dtype = getattr(aval, "dtype", None)
+        if dtype is None:
+            return
+        name = np.dtype(dtype).name
+        if name in _WIDE_DTYPES and name != "complex64":
+            key = (name, where)
+            if key not in wide_seen:
+                wide_seen.add(key)
+                report.add(Finding(
+                    "dtype", target, f"{name}@{where}",
+                    f"{name} aval at {where or '<top>'} — x64 is globally "
+                    f"disabled; a 64-bit value in-graph means an enable_x64 "
+                    f"escape hatch leaked into the hot path"))
+
+    for v in closed.jaxpr.invars:
+        check_aval(v.aval, "invar")
+    for eqn, path in iter_eqns(closed):
+        for v in eqn.outvars:
+            check_aval(v.aval, path)
+
+    for i, v in enumerate(closed.jaxpr.outvars):
+        aval = getattr(v, "aval", None)
+        if aval is not None and getattr(aval, "weak_type", False):
+            report.add(Finding(
+                "dtype", target, f"weak-out{i}",
+                f"top-level output {i} is weakly typed "
+                f"({getattr(aval, 'dtype', '?')}) — weak types re-promote "
+                f"at the next op; anchor with an explicit dtype"))
+
+    for in_i, out_i, name in carry_pairs or ():
+        a_in = closed.jaxpr.invars[in_i].aval
+        a_out = getattr(closed.jaxpr.outvars[out_i], "aval", None)
+        d_in = getattr(a_in, "dtype", None)
+        d_out = getattr(a_out, "dtype", None)
+        if d_in is not None and d_out is not None and d_in != d_out:
+            report.add(Finding(
+                "dtype", target, f"width-change:{name}",
+                f"carried state leaf `{name}` enters as {np.dtype(d_in).name} "
+                f"but leaves as {np.dtype(d_out).name} — declared widths in "
+                f"core/state.py must survive the tick"))
+
+
+# ------------------------------------------------------------- overflow ----
+def overflow_pass(closed: ClosedJaxpr, target: str, report: Report,
+                  input_ivals: Sequence[Interval],
+                  carry_pairs: Sequence[Tuple[int, int, str]],
+                  horizon: int) -> EvalContext:
+    """Interval analysis: which carried integers wrap within ``horizon`` ticks.
+
+    input_ivals seed every top-level invar (declared ranges: hotness caps,
+    k caps, L, T...). For each carried integer leaf the per-tick growth
+    ``g = out.hi - in.hi`` is extrapolated: unsafe when
+    ``in.hi + g * horizon > INT32_MAX`` (or the leaf's actual dtype max).
+    In-graph events (scan-carry wrap, int->f32 precision loss) surface as
+    findings too; primitives the evaluator does not model are recorded as
+    notes, never silently ignored.
+    """
+    ev = IntervalEvaluator(EvalContext())
+    outs1 = ev.eval_closed(closed, list(input_ivals))
+
+    # Second evaluation with each carry widened by its first-tick output:
+    # a transient jump (tier -1 -> 1, a saturated gather) settles — its
+    # second-iteration growth is zero — while a genuine cumulative counter
+    # keeps the same per-tick rate. Only *persistent* growth extrapolates.
+    in2 = list(input_ivals)
+    for in_i, out_i, _name in carry_pairs:
+        in2[in_i] = input_ivals[in_i].union(outs1[out_i])
+    outs2 = IntervalEvaluator(EvalContext()).eval_closed(closed, in2)
+
+    for in_i, out_i, name in carry_pairs:
+        var = closed.jaxpr.invars[in_i]
+        dtype = getattr(var.aval, "dtype", None)
+        if dtype is None or not np.issubdtype(np.dtype(dtype), np.integer):
+            continue
+        o1, o2 = outs1[out_i], outs2[out_i]
+        grow = max(o2.hi - o1.hi, 0.0)
+        drop = min(o2.lo - o1.lo, 0.0)
+        top = dtype_interval(dtype)
+        if grow == 0.0 and drop == 0.0:
+            continue
+        hi_h = o1.hi + grow * (horizon - 1)
+        lo_h = o1.lo + drop * (horizon - 1)
+        if hi_h > top.hi or lo_h < top.lo:
+            rate = grow if hi_h > top.hi else -drop
+            safe = int((top.hi - o1.hi) // grow) if hi_h > top.hi else \
+                int((o1.lo - top.lo) // max(-drop, 1.0))
+            report.add(Finding(
+                "overflow", target, f"carry:{name}",
+                f"carried counter `{name}` ({np.dtype(dtype).name}) grows "
+                f"up to {rate:g}/tick; wraps after ~{safe} ticks "
+                f"(< declared horizon {horizon}) — widen the accumulator or "
+                f"re-window it at the chunk boundary"))
+
+    for event in ev.ctx.events:
+        if event.kind == "cast-unbounded":
+            # over-approximation (no finite bound survived to the cast):
+            # informative, not gated
+            report.note(f"overflow/{target}: {event.slug}: {event.detail}")
+        else:
+            # carry-overflow / carry-precision / cast-truncate / cast-precision
+            report.add(Finding("overflow", target, event.slug, event.detail))
+    for prim, n in sorted(ev.ctx.unknown_prims.items()):
+        report.note(f"overflow/{target}: primitive `{prim}` (x{n}) not "
+                    f"modeled; outputs widened to dtype range")
+    return ev.ctx
+
+
+def state_input_intervals(closed: ClosedJaxpr,
+                          overrides: Dict[str, Interval],
+                          names: Sequence[str]) -> List[Interval]:
+    """Seed intervals for every invar: named overrides else dtype range.
+
+    ``names`` aligns 1:1 with ``closed.jaxpr.invars`` (flattened pytree
+    paths from the target builder); any name not overridden is assumed to
+    span its dtype — sound, just less precise.
+    """
+    ivals: List[Interval] = []
+    for var, name in zip(closed.jaxpr.invars, names):
+        if name in overrides:
+            ivals.append(overrides[name])
+        else:
+            dtype = getattr(var.aval, "dtype", None)
+            ivals.append(dtype_interval(dtype) if dtype is not None
+                         else Interval(-math.inf, math.inf, False))
+    return ivals
+
+
+# ------------------------------------------------------------- donation ----
+_ALIAS_RE = re.compile(r"tf\.aliasing_output")
+
+
+def donation_pass(fn: Callable, args: Sequence, donate_argnums: Sequence[int],
+                  target: str, report: Report,
+                  min_aliases: int = 1) -> None:
+    """Donated inputs must alias outputs in the lowered artifact.
+
+    Two layers: (1) structural feasibility — every donated leaf needs a
+    shape/dtype-matching output leaf, else XLA silently drops the
+    donation and the rollout pays double buffers; (2) the lowered
+    StableHLO must carry ``tf.aliasing_output`` attributes (the CPU/TPU
+    lowering of honored donations).
+    """
+    import jax
+
+    jitted = jax.jit(fn, donate_argnums=tuple(donate_argnums))
+    lowered = jitted.lower(*args)
+    closed = jax.make_jaxpr(fn)(*args)
+
+    flat_in, in_tree = jax.tree_util.tree_flatten(args)
+    # leaf index ranges per top-level argument
+    sizes = [len(jax.tree_util.tree_leaves(a)) for a in args]
+    starts = np.cumsum([0] + sizes).tolist()
+    out_specs = [(tuple(v.aval.shape), np.dtype(v.aval.dtype).name)
+                 for v in closed.jaxpr.outvars if hasattr(v, "aval")]
+
+    for argnum in donate_argnums:
+        lo, hi = starts[argnum], starts[argnum + 1]
+        for li in range(lo, hi):
+            var = closed.jaxpr.invars[li]
+            spec = (tuple(var.aval.shape), np.dtype(var.aval.dtype).name)
+            if spec not in out_specs:
+                report.add(Finding(
+                    "donation", target, f"unmatched:arg{argnum}:leaf{li - lo}",
+                    f"donated arg {argnum} leaf {li - lo} {spec} has no "
+                    f"shape/dtype-matching output — XLA drops the donation "
+                    f"and the chunked rollout double-buffers"))
+
+    text = lowered.as_text()
+    n_aliases = len(_ALIAS_RE.findall(text))
+    n_donated_leaves = sum(sizes[a] for a in donate_argnums)
+    if n_donated_leaves and n_aliases < min_aliases:
+        report.add(Finding(
+            "donation", target, "no-aliasing-in-lowered",
+            f"{n_donated_leaves} leaves donated but lowered artifact has "
+            f"{n_aliases} tf.aliasing_output attributes — donation did not "
+            f"survive lowering"))
+
+
+# -------------------------------------------------------------- compose ----
+def audit_jaxpr(closed: ClosedJaxpr, target: str,
+                report: Optional[Report] = None,
+                carry_pairs: Optional[Sequence[Tuple[int, int, str]]] = None,
+                input_ivals: Optional[Sequence[Interval]] = None,
+                horizon: Optional[int] = None) -> Report:
+    """Run purity + dtype (+ overflow when ranges given) on one program."""
+    report = report if report is not None else Report()
+    purity_pass(closed, target, report)
+    dtype_pass(closed, target, report, carry_pairs=carry_pairs)
+    if input_ivals is not None and carry_pairs is not None and horizon:
+        overflow_pass(closed, target, report, input_ivals, carry_pairs,
+                      horizon)
+    return report

@@ -1,0 +1,261 @@
+"""The real audit targets: what `python -m repro.analysis` proves things
+about.
+
+Each target builds a traced program plus the metadata the passes need:
+
+  tick:{static,dynamic}:{mode}  — the unified tick, every policy mode x
+      both ownership providers, at a small shape (tracing cost is
+      shape-independent; the *structure* is what is audited).
+  tick:scale                    — the dynamic tick at the ROADMAP's fleet
+      scale point (L=256k pages, T=64, horizon 10k): where the overflow
+      pass has to prove which int32 counters survive and which do not
+      (the committed baseline acknowledges the unsafe ones; the fix is
+      the chunk-boundary int64 ledger in obs/fleet.py).
+  fleet:chunk                   — the chunked rollout program
+      (obs.fleet.make_fleet_chunk) incl. its scan carries and the
+      donation contract of the donated fleet state.
+  kernel:*                      — the four Pallas kernel wrappers (ref
+      impls: the wrapper graphs, traced on CPU).
+
+Constancy sweeps (tick structure invariant in T / schedule values) are
+exposed as builders for the CLI and the test suite.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.interval import Interval, value_interval
+from repro.analysis.walk import ClosedJaxpr
+
+# declared input ranges for the overflow pass (trace data bounds)
+RATE_MAX = 1.0e4          # per-page access rate per tick
+DEFAULT_HORIZON = 10_000  # the ROADMAP fleet horizon
+SCALE = dict(T=64, L=262_144, k_max=256, horizon=DEFAULT_HORIZON)
+
+
+@dataclass
+class AuditTarget:
+    """One traced program plus the metadata the passes consume."""
+    name: str
+    closed: ClosedJaxpr
+    # (invar_idx, outvar_idx, leaf_name) for scan-carried state leaves
+    carry_pairs: List[Tuple[int, int, str]] = field(default_factory=list)
+    input_ivals: Optional[List[Interval]] = None
+    horizon: int = DEFAULT_HORIZON
+    # optional donation contract: (fn, args, donate_argnums)
+    donation: Optional[tuple] = None
+
+
+def _leaf_names(tree) -> List[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(path) for path, _ in flat]
+
+
+def _tick_target(name: str, tick, state, inputs,
+                 input_overrides: Dict[int, Interval],
+                 horizon: int) -> AuditTarget:
+    """Package a tick fn as an audit target.
+
+    Tick signature: (state, inputs) -> (state', out). The first
+    ``len(state leaves)`` invars/outvars pair up as the scan carry; state
+    leaves seed at their concrete init values, schedule inputs at their
+    declared ranges (``input_overrides``: flat index within the inputs
+    subtree -> Interval).
+    """
+    closed = jax.make_jaxpr(tick)(state, inputs)
+    state_leaves = jax.tree_util.tree_leaves(state)
+    names = [f"state{n}" for n in _leaf_names(state)]
+    n_state = len(state_leaves)
+    carry_pairs = [(i, i, names[i]) for i in range(n_state)]
+
+    ivals = [value_interval(leaf) for leaf in state_leaves]
+    in_leaves = jax.tree_util.tree_leaves(inputs)
+    for j, leaf in enumerate(in_leaves):
+        ivals.append(input_overrides.get(
+            j, value_interval(leaf).union(Interval(0, RATE_MAX, False))))
+    assert len(ivals) == len(closed.jaxpr.invars), \
+        (len(ivals), len(closed.jaxpr.invars))
+    return AuditTarget(name=name, closed=closed, carry_pairs=carry_pairs,
+                       input_ivals=ivals, horizon=horizon)
+
+
+# ------------------------------------------------------------- builders ----
+def _small_cfg(T: int = 3, fast: int = 48, slow: int = 48, **kw):
+    from repro.configs.base import TieringConfig
+    return TieringConfig(n_tenants=T, n_fast_pages=fast, n_slow_pages=slow,
+                         lower_protection=tuple([fast // (2 * T)] * T),
+                         upper_bound=tuple([fast] * T), **kw)
+
+
+def static_tick_target(mode: str, T: int = 3, pages_per: int = 16,
+                       k_max: int = 8,
+                       horizon: int = DEFAULT_HORIZON) -> AuditTarget:
+    from repro.core.engine import make_tick
+    from repro.core.state import init_state
+    cfg = _small_cfg(T=T, fast=T * pages_per // 2, slow=T * pages_per)
+    owner = np.repeat(np.arange(T), pages_per)
+    L = owner.shape[0]
+    tick = make_tick(cfg, owner, mode=mode, k_max=k_max)
+    state = init_state(cfg, L, owner=owner)
+    inputs = (jnp.zeros((L,), jnp.float32), jnp.ones((L,), bool))
+    over = {0: Interval(0, RATE_MAX, False),       # accesses [L]
+            1: Interval(0, 1, True)}               # alive [L] bool
+    return _tick_target(f"tick:static:{mode}", tick, state, inputs, over,
+                        horizon)
+
+
+def dynamic_tick_target(mode: str, T: int = 3, L: int = 64, S: int = 16,
+                        k_max: int = 8, horizon: int = DEFAULT_HORIZON,
+                        name: Optional[str] = None) -> AuditTarget:
+    from repro.core.churn import make_churn_tick
+    from repro.core.state import init_state
+    cfg = _small_cfg(T=T, fast=L // 2, slow=L // 2)
+    tick = make_churn_tick(cfg, L, mode=mode, k_max=k_max)
+    state = init_state(cfg, L)
+    inputs = (jnp.zeros((T, S), jnp.float32), jnp.zeros((T,), jnp.int32))
+    over = {0: Interval(0, RATE_MAX, False),       # rates [T, S]
+            1: Interval(0, float(S), True)}        # want [T]
+    return _tick_target(name or f"tick:dynamic:{mode}", tick, state, inputs,
+                        over, horizon)
+
+
+def scale_tick_target() -> AuditTarget:
+    """The ROADMAP scale point: where int32 counters provably wrap.
+
+    Tracing and interval analysis are shape-independent in cost, so the
+    audit runs the *real* L=256k/T=64 program, not a toy stand-in."""
+    return dynamic_tick_target(
+        "equilibria", T=SCALE["T"], L=SCALE["L"], S=4096,
+        k_max=SCALE["k_max"], horizon=SCALE["horizon"], name="tick:scale")
+
+
+def fleet_chunk_target(chunk: int = 500, T: int = 4, L: int = 64,
+                       S: int = 16, H: int = 4,
+                       k_max: int = 8) -> AuditTarget:
+    """The chunked rollout program: scan carries (fleet state + reduction
+    accumulators) audited at the chunk length, donation contract on the
+    donated fleet state."""
+    from repro.core.churn import make_churn_tick
+    from repro.core.state import init_state, stack_states
+    from repro.obs.attribution import make_attribution
+    from repro.obs.fleet import make_fleet_chunk
+    from repro.obs.streaming import make_detector
+    cfg = _small_cfg(T=T, fast=L // 2, slow=L // 2)
+    det = make_detector(chunk, T, cfg.lower_protection)
+    att = make_attribution(T, cfg.lat_fast)
+    tick = make_churn_tick(cfg, L, mode="equilibria", k_max=k_max,
+                           detector=det, attrib=att)
+    period = 8
+    want = jnp.full((H, period, T), S // 2, jnp.int32)
+    rates = jnp.ones((H, period, T, S), jnp.float32)
+    chunk_fn = make_fleet_chunk(jax.vmap(tick), want, rates, period, chunk)
+    states = stack_states(init_state(cfg, L, detector=det, attrib=att), H)
+    arch = jnp.arange(H, dtype=jnp.int32)
+    t0 = jnp.zeros((), jnp.int32)
+    closed = jax.make_jaxpr(chunk_fn)(states, arch, t0)
+    ivals = [value_interval(leaf)
+             for leaf in jax.tree_util.tree_leaves((states, arch, t0))]
+    return AuditTarget(
+        name="fleet:chunk", closed=closed, carry_pairs=[],
+        input_ivals=ivals, horizon=chunk,
+        donation=(chunk_fn, (states, arch, t0), (0,)))
+
+
+def kernel_targets() -> List[AuditTarget]:
+    """The four kernel wrappers (ref impls — the graphs CPU CI runs)."""
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.migrate.ops import migrate_pages
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    from repro.kernels.tiered_attention.ops import tiered_attention
+
+    out: List[AuditTarget] = []
+    B, Hh, Ss, D = 1, 2, 32, 16
+
+    q = jnp.ones((B, Hh, Ss, D), jnp.float32)
+    out.append(AuditTarget(
+        name="kernel:flash_attention",
+        closed=jax.make_jaxpr(
+            lambda q, k, v: flash_attention(q, k, v, impl="ref"))(q, q, q)))
+
+    # pools: [L, B, Mp, pt, K, D]
+    Lk, Bk, Mp, pt, Kk = 2, 2, 4, 4, 2
+    src = jnp.ones((Lk, Bk, Mp, pt, Kk, D), jnp.float32)
+    dst = jnp.zeros((Lk, Bk, Mp, pt, Kk, D), jnp.float32)
+    idx = jnp.zeros((Bk,), jnp.int32)
+    sel = jnp.ones((Bk,), bool)
+
+    def mig(src_pool, dst_pool, src_idx, dst_idx, sel):
+        return migrate_pages(src_pool, dst_pool, src_idx, dst_idx, sel,
+                             impl="ref")
+    out.append(AuditTarget(
+        name="kernel:migrate",
+        closed=jax.make_jaxpr(mig)(src, dst, idx, idx, sel),
+        donation=(mig, (src, dst, idx, idx, sel), (1,))))
+
+    x = jnp.ones((B, 64, 2, 8), jnp.float32)    # [B,S,H,P]
+    a = jnp.ones((B, 64, 2), jnp.float32)
+    bc = jnp.ones((B, 64, 2, 4), jnp.float32)   # [B,S,H,N]
+    out.append(AuditTarget(
+        name="kernel:ssd_scan",
+        closed=jax.make_jaxpr(
+            lambda x, a, b, c: ssd_scan(x, a, b, c, chunk=32,
+                                        impl="ref"))(x, a, bc, bc)))
+
+    Mf, Ms, pt, K = 4, 4, 8, 2
+    q1 = jnp.ones((B, 1, Hh, D), jnp.float32)
+    fk = jnp.ones((B, Mf, pt, K, D), jnp.float32)
+    sk = jnp.ones((B, Ms, pt, K, D), jnp.float32)
+    fp = jnp.zeros((B, Mf), jnp.int32)
+    sp = jnp.full((B, Ms), -1, jnp.int32)
+    sl = jnp.full((B,), pt, jnp.int32)
+    out.append(AuditTarget(
+        name="kernel:tiered_attention",
+        closed=jax.make_jaxpr(
+            lambda *a: tiered_attention(*a, impl="ref"))(
+                q1, fk, fk, sk, sk, fp, sp, sl)))
+    return out
+
+
+# ------------------------------------------------------ constancy sweeps ----
+def tick_constancy_sweeps() -> Dict[str, Tuple[Callable, Sequence]]:
+    """name -> (build, params): programs that must be jaxpr-constant.
+
+    Each build(p) returns a ClosedJaxpr; the constancy checker asserts eqn
+    count + primitive histogram are identical across the sweep."""
+    def build_static_T(T):
+        return static_tick_target("equilibria", T=T).closed
+
+    def build_dynamic_T(T):
+        return dynamic_tick_target("equilibria", T=T).closed
+
+    def build_dynamic_L(L):
+        return dynamic_tick_target("equilibria", L=L).closed
+
+    return {
+        "tick:static:T": (build_static_T, (2, 4)),
+        "tick:dynamic:T": (build_dynamic_T, (2, 4)),
+        "tick:dynamic:L": (build_dynamic_L, (64, 128)),
+    }
+
+
+# ------------------------------------------------------------- registry ----
+def all_targets(scale: bool = True,
+                fleet: bool = True) -> List[AuditTarget]:
+    from repro.core.tick import MODES
+    out: List[AuditTarget] = []
+    for mode in MODES:
+        out.append(static_tick_target(mode))
+    for mode in MODES:
+        out.append(dynamic_tick_target(mode))
+    if scale:
+        out.append(scale_tick_target())
+    if fleet:
+        out.append(fleet_chunk_target())
+    out.extend(kernel_targets())
+    return out

@@ -324,6 +324,77 @@ def run_mixed_fleet(cfg: TieringConfig, hosts: List[List[ChurnSlot]],
 
 
 # ----------------------------------------------- long-horizon rollouts ----
+_WRAP32 = 1 << 32
+
+
+class CounterLedger:
+    """Wrap-safe host-side int64 widening of in-graph int32 counters.
+
+    x64 is globally disabled, so the scan-carried cumulative counters
+    (``Counters``, the attribution ledger) are int32 *in-graph* and wrap at
+    fleet horizons (the overflow pass proves e.g. ``attempted_promotions``
+    unsafe past ~2^31/L ticks). Rather than widening device state, the
+    ledger promotes at the chunk boundary: counters are monotone mod 2^32,
+    so ``(now - prev) mod 2^32`` is the *exact* per-chunk growth whenever a
+    single chunk grows a counter by < 2^32 — true by construction (a chunk
+    of C ticks grows any per-tenant counter by at most C * L). The int64
+    running totals therefore stay exact at any horizon while the device
+    carry stays int32.
+    """
+
+    def __init__(self, tree):
+        self.prev = jax.tree_util.tree_map(
+            lambda x: np.asarray(x).astype(np.int64), tree)
+        self.total = jax.tree_util.tree_map(np.zeros_like, self.prev)
+
+    def absorb(self, tree) -> None:
+        now = jax.tree_util.tree_map(
+            lambda x: np.asarray(x).astype(np.int64), tree)
+        self.total = jax.tree_util.tree_map(
+            lambda t, p, n: t + ((n - p) % _WRAP32),
+            self.total, self.prev, now)
+        self.prev = now
+
+
+def make_fleet_chunk(vtick, want_j: jax.Array, rates_j: jax.Array,
+                     period: int, n: int):
+    """The chunk program: one ``lax.scan`` of ``n`` ticks over the vmapped
+    tick, schedule columns gathered per host in-graph, per-tick outputs
+    reduced to [H] running sums inside the scan.
+
+    Module-level so the jaxpr auditor can trace it directly (purity /
+    dtype / overflow / donation targets) and so its carries are visible in
+    tests. The migration accumulator is deliberately **int32**: promotions
+    and demotions are integer counts, and accumulating them in float32
+    silently drops units past 2^24 (the overflow pass's carry-precision
+    rule flags exactly that regression); the int32 carry is exact up to
+    2^31 per chunk and is widened to int64 host-side (``CounterLedger`` /
+    ``absorb``).
+    """
+    def chunk_fn(states, arch, t0):
+        zero_f = jnp.zeros(arch.shape, jnp.float32)
+        zero_i = jnp.zeros(arch.shape, jnp.int32)
+
+        def body(carry, i):
+            st, lat, thr, mig = carry
+            tm = jnp.mod(t0 + i, period)
+            w = jax.lax.dynamic_index_in_dim(want_j, tm, axis=1,
+                                             keepdims=False)
+            r = jax.lax.dynamic_index_in_dim(rates_j, tm, axis=1,
+                                             keepdims=False)
+            st, out = vtick(st, (r[arch], w[arch]))
+            lat = lat + out.latency.mean(axis=-1)
+            thr = thr + out.throughput.sum(axis=-1)
+            mig = mig + (out.promotions + out.demotions).sum(axis=-1)
+            return (st, lat, thr, mig), None
+
+        (states, lat, thr, mig), _ = jax.lax.scan(
+            body, (states, zero_f, zero_f, zero_i),
+            jnp.arange(n, dtype=jnp.int32))
+        return states, (lat, thr, mig)
+    return chunk_fn
+
+
 @dataclass
 class RolloutSummary:
     """Chunked-rollout result: final fleet state plus streamed per-host
@@ -340,6 +411,9 @@ class RolloutSummary:
     final_state: object = None       # batched TierState [H, ...]
     detector: Optional[DetectorSpec] = None
     attribution: Optional[AttributionSpec] = None
+    # host-side int64 widening of the in-graph int32 cumulative counters
+    # ({"counters": Counters, "att": {...}}), exact at any horizon
+    ledger: Optional[CounterLedger] = None
 
     @property
     def host_ticks_per_s(self) -> float:
@@ -350,6 +424,11 @@ class RolloutSummary:
             lambda x: x[host], self.final_state.stats))
 
     def counters(self):
+        """Cumulative per-tenant counters [H, T]. With the chunk-boundary
+        ledger (the default rollout path) these are int64 and exact even
+        where the in-graph int32 carry wrapped."""
+        if self.ledger is not None:
+            return self.ledger.total["counters"]
         return jax.tree_util.tree_map(np.asarray, self.final_state.counters)
 
     def host_migrations(self, host: int):
@@ -398,12 +477,26 @@ class RolloutSummary:
             raise ValueError("rollout ran with attrib=False")
         return self.final_state.attrib
 
+    def _att_ledger(self) -> Optional[dict]:
+        if self.ledger is not None and "att" in self.ledger.total:
+            if self.attribution is None:
+                raise ValueError("rollout ran with attrib=False")
+            return self.ledger.total["att"]
+        return None
+
     def attribution_components(self) -> np.ndarray:
-        """[H, T, len(COMPONENTS)] int64 cumulative stall units by cause."""
+        """[H, T, len(COMPONENTS)] int64 cumulative stall units by cause
+        (ledger-widened: exact past int32 wrap on the default path)."""
+        led = self._att_ledger()
+        if led is not None:
+            return led["comp"]
         return np.asarray(self._att().comp, np.int64)
 
     def attribution_totals(self) -> np.ndarray:
         """[H, T] int64 cumulative stall units (== components summed)."""
+        led = self._att_ledger()
+        if led is not None:
+            return led["total"]
         return np.asarray(self._att().total, np.int64)
 
     def fast_hit_fraction(self) -> np.ndarray:
@@ -412,6 +505,9 @@ class RolloutSummary:
 
     def stall_sketch(self) -> np.ndarray:
         """Fleet-merged per-tick stall-unit histogram ([SKETCH_BUCKETS])."""
+        led = self._att_ledger()
+        if led is not None:
+            return sketch_merge(led["sketch"])
         return sketch_merge(self._att().sketch)
 
     def stall_percentiles(self, qs=(0.5, 0.95, 0.99)) -> np.ndarray:
@@ -421,7 +517,19 @@ class RolloutSummary:
 
     def attribution_conserved(self) -> bool:
         """Every host's ledger conserves: components sum to the total and
-        the total matches the counter identity, bit-exact."""
+        the total matches the counter identity, bit-exact. On the default
+        path the identity is checked on the int64-widened values, so it
+        holds even past the in-graph int32 wrap point."""
+        led = self._att_ledger()
+        if led is not None:
+            c = self.counters()
+            comp, total = led["comp"], led["total"]
+            expect = (np.asarray(c.attempted_promotions, np.int64)
+                      - np.asarray(c.promotions, np.int64)
+                      + np.asarray(c.reclaims, np.int64))
+            return bool((comp.sum(axis=-1) == total).all()
+                        and (comp >= 0).all()
+                        and (total == expect).all())
         return attribution_conserved(self._att(), self.final_state.counters)
 
     def attribution_rollup(self) -> dict:
@@ -523,28 +631,7 @@ def fleet_rollout(cfg: TieringConfig, want: np.ndarray, rates: np.ndarray,
     rates_j = jnp.asarray(rates, jnp.float32)
 
     def make_chunk_fn(n: int):
-        def chunk_fn(states, arch, t0):
-            zero = jnp.zeros(arch.shape, jnp.float32)
-
-            def body(carry, i):
-                st, lat, thr, mig = carry
-                tm = jnp.mod(t0 + i, period)
-                w = jax.lax.dynamic_index_in_dim(want_j, tm, axis=1,
-                                                 keepdims=False)
-                r = jax.lax.dynamic_index_in_dim(rates_j, tm, axis=1,
-                                                 keepdims=False)
-                st, out = vtick(st, (r[arch], w[arch]))
-                lat = lat + out.latency.mean(axis=-1)
-                thr = thr + out.throughput.sum(axis=-1)
-                mig = mig + (out.promotions + out.demotions).sum(
-                    axis=-1).astype(jnp.float32)
-                return (st, lat, thr, mig), None
-
-            (states, lat, thr, mig), _ = jax.lax.scan(
-                body, (states, zero, zero, zero),
-                jnp.arange(n, dtype=jnp.int32))
-            return states, (lat, thr, mig)
-        return chunk_fn
+        return make_fleet_chunk(vtick, want_j, rates_j, period, n)
 
     chunk = max(min(chunk, ticks), 1)
     D = jax.local_device_count()
@@ -586,24 +673,43 @@ def fleet_rollout(cfg: TieringConfig, want: np.ndarray, rates: np.ndarray,
 
     lat_sum = np.zeros(H, np.float64)
     thr_sum = np.zeros(H, np.float64)
-    mig_sum = np.zeros(H, np.float64)
+    mig_sum = np.zeros(H, np.int64)
+
+    def host_view(tree):
+        """Pull a device subtree to host with a flat [H, ...] host axis."""
+        return jax.tree_util.tree_map(
+            lambda x: np.asarray(x).reshape((H,) + np.shape(x)[2:])
+            if use_pmap else np.asarray(x), tree)
+
+    def ledger_view(st):
+        tree = {"counters": st.counters}
+        if att_spec is not None:
+            tree["att"] = {"comp": st.attrib.comp, "total": st.attrib.total,
+                           "sketch": st.attrib.sketch}
+        return host_view(tree)
+
+    ledger = CounterLedger(ledger_view(states))
 
     def absorb(acc):
         nonlocal lat_sum, thr_sum, mig_sum
         lat, thr, mig = (np.asarray(a).reshape(H) for a in acc)
         lat_sum = lat_sum + lat
         thr_sum = thr_sum + thr
-        mig_sum = mig_sum + mig
+        # the chunk's int32 migration count, widened wrap-safe like the
+        # cumulative counters (exact while one chunk migrates < 2^32 pages)
+        mig_sum = mig_sum + (mig.astype(np.int64) % _WRAP32)
 
     t0_wall = time.perf_counter()
     t = 0
     for _ in range(n_full):
         states, acc = run_chunk(states, arch, t)
         absorb(acc)
+        ledger.absorb(ledger_view(states))
         t += chunk
     if run_rem is not None:
         states, acc = run_rem(states, arch, t)
         absorb(acc)
+        ledger.absorb(ledger_view(states))
         t += rem
     jax.block_until_ready(jax.tree_util.tree_leaves(states)[0])
     elapsed = time.perf_counter() - t0_wall
@@ -617,4 +723,5 @@ def fleet_rollout(cfg: TieringConfig, want: np.ndarray, rates: np.ndarray,
         latency_mean=lat_sum / ticks,
         throughput_mean=thr_sum / ticks,
         migrations_per_tick=mig_sum / ticks,
-        final_state=states, detector=det_spec, attribution=att_spec)
+        final_state=states, detector=det_spec, attribution=att_spec,
+        ledger=ledger)

@@ -1,0 +1,297 @@
+"""The analyzer's own regression surface.
+
+Every pass must (a) flag the known-bad fixture planted for it and
+(b) stay silent on the clean tick — otherwise the check.sh gate is either
+blind or noisy. Plus: interval-arithmetic units, the ratchet baseline
+mechanics, the CLI gate exit codes, and the fleet counter-ledger
+regression tests (the fix the overflow pass's scale findings motivate).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import fixtures as FX
+from repro.analysis import lint as LI
+from repro.analysis.constancy import (JaxprSignature, assert_jaxpr_constant,
+                                      check_constant, jaxpr_signature,
+                                      signature_of)
+from repro.analysis.findings import Finding, Report, write_baseline
+from repro.analysis.interval import (F32_EXACT, Interval, dtype_interval,
+                                     value_interval)
+from repro.analysis.jaxpr_audit import (INT32_MAX, donation_pass, dtype_pass,
+                                        overflow_pass, purity_pass)
+from repro.analysis.__main__ import main as analysis_main
+
+# the bad-donation fixture intentionally donates an unusable buffer
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:Some donated buffers were not usable")
+
+
+def _keys(report):
+    return report.keys()
+
+
+# ------------------------------------------------------------ intervals ----
+def test_interval_algebra():
+    a, b = Interval(0, 5, True), Interval(3, 10, True)
+    assert a.union(b) == Interval(0, 10, True)
+    assert a.contains(Interval(1, 4, True))
+    assert not a.contains(b)
+    assert Interval(0, 5, True).union(Interval(1, 2, False)).integral is False
+    assert Interval(0, 5, True).bounded()
+    assert not Interval(0, float("inf"), True).bounded()
+
+
+def test_dtype_and_value_intervals():
+    assert dtype_interval(jnp.int8) == Interval(-128, 127, True)
+    assert dtype_interval(jnp.uint32).lo == 0
+    assert dtype_interval(jnp.int32).hi == INT32_MAX
+    iv = value_interval(jnp.full((4,), 7, jnp.int32))
+    assert (iv.lo, iv.hi, iv.integral) == (7, 7, True)
+    # a float array holding exact integers keeps the integral bit
+    assert value_interval(jnp.zeros((3,), jnp.float32)).integral
+
+
+# ------------------------------------------------- pass / fixture matrix ----
+def test_purity_pass_flags_callbacks():
+    report = Report()
+    purity_pass(FX.bad_purity(), "fx", report)
+    keys = " ".join(_keys(report))
+    assert report.findings
+    assert "callback" in keys or "debug" in keys
+
+
+def test_dtype_pass_flags_float64():
+    report = Report()
+    dtype_pass(FX.bad_dtype(), "fx", report)
+    assert report.findings
+    assert any("float64" in f.message for f in report.findings)
+
+
+def test_overflow_pass_flags_carry_at_horizon():
+    closed, pairs, ivals, horizon = FX.bad_overflow_carry()
+    report = Report()
+    overflow_pass(closed, "fx", report, ivals, pairs, horizon)
+    assert any(f.slug == "carry:counter" for f in report.findings)
+    # ... and the same program is fine at a horizon it can survive
+    ok = Report()
+    overflow_pass(closed, "fx", ok, ivals, pairs, 100)
+    assert not any(f.slug == "carry:counter" for f in ok.findings)
+
+
+def test_overflow_pass_flags_in_scan_wrap():
+    closed, pairs, ivals, horizon = FX.bad_overflow_scan()
+    report = Report()
+    overflow_pass(closed, "fx", report, ivals, pairs, horizon)
+    assert any("scan-carry" in f.slug for f in report.findings)
+
+
+def test_overflow_pass_flags_f32_precision_carry():
+    closed, pairs, ivals, horizon = FX.bad_overflow_f32()
+    report = Report()
+    overflow_pass(closed, "fx", report, ivals, pairs, horizon)
+    assert any("precision" in f.slug for f in report.findings)
+
+
+def test_overflow_pass_ignores_transient_carry_jump():
+    """A carry that jumps once and then holds (tier -1 -> 1) must not be
+    extrapolated as a per-tick growth rate: the two-phase widening sees
+    zero growth between iteration one and the union re-evaluation."""
+    def tick(tier, hot):
+        new = jnp.where(hot > 0, jnp.int8(1), tier)
+        return new, new.sum()
+
+    closed = jax.make_jaxpr(tick)(jnp.full((8,), -1, jnp.int8),
+                                  jnp.zeros((8,), jnp.int32))
+    report = Report()
+    overflow_pass(closed, "fx", report, [Interval(-1, 1, True),
+                                         Interval(0, 5, True)],
+                  [(0, 0, "tier")], 100_000)
+    assert not report.findings
+
+
+def test_constancy_checker_and_diff():
+    sig = assert_jaxpr_constant(FX.good_constancy_build, (2, 5))
+    assert isinstance(sig, JaxprSignature) and sig.n_eqns > 0
+    with pytest.raises(AssertionError) as ei:
+        assert_jaxpr_constant(FX.bad_constancy_build, (2, 5), label="bad")
+    assert "[bad]" in str(ei.value) and "eqn count" in str(ei.value)
+    ok, _base, diff = check_constant(FX.bad_constancy_build, (2, 5))
+    assert not ok and diff
+
+
+def test_signature_helpers_agree():
+    def f(x):
+        return (x * 2).sum()
+    x = jnp.zeros((4,), jnp.float32)
+    assert jaxpr_signature(f, x) == signature_of(jax.make_jaxpr(f)(x))
+
+
+def test_donation_pass_good_and_bad():
+    fn, args, donate = FX.bad_donation()
+    bad = Report()
+    donation_pass(fn, args, donate, "fx", bad)
+    assert any("unmatched" in f.slug for f in bad.findings)
+
+    fn, args, donate = FX.good_donation()
+    good = Report()
+    donation_pass(fn, args, donate, "fx", good)
+    assert not good.findings
+
+
+def test_clean_tick_is_silent():
+    closed, pairs, ivals, horizon = FX.clean_tick()
+    report = Report()
+    purity_pass(closed, "clean", report)
+    dtype_pass(closed, "clean", report, carry_pairs=pairs)
+    overflow_pass(closed, "clean", report, ivals, pairs, horizon)
+    assert report.findings == []
+
+
+# ----------------------------------------------------------------- lint ----
+def test_lint_tenant_loop():
+    fs = LI.lint_source(FX.BAD_LINT_TENANT_LOOP, "fx", in_core=True)
+    assert any(f.slug.startswith("tenant-loop:") for f in fs)
+    # outside core/ the unroll rule does not apply
+    assert not LI.lint_source(FX.BAD_LINT_TENANT_LOOP, "fx", in_core=False)
+
+
+def test_lint_np_in_graph():
+    fs = LI.lint_source(FX.BAD_LINT_NP_IN_GRAPH, "fx", in_core=False)
+    assert any(f.slug.startswith("np-in-graph:") for f in fs)
+
+
+def test_lint_seam_defaults_builders_only():
+    fs = LI.lint_source(FX.BAD_LINT_SEAM_DEFAULT, "fx", in_core=True)
+    assert {f.slug for f in fs} == {"seam-default:make_tick.detector",
+                                    "seam-default:make_tick.attrib"}
+    # the seam contract binds builders, not runner flags
+    assert not LI.lint_source(
+        "def run_fleet(cfg, detect=True):\n    return cfg\n", "fx",
+        in_core=True)
+
+
+def test_lint_clean_source_silent():
+    assert LI.lint_source(FX.CLEAN_LINT, "fx", in_core=True) == []
+
+
+# ----------------------------------------------------- baseline ratchet ----
+def test_baseline_ratchet(tmp_path):
+    rep = Report()
+    rep.add(Finding("lint", "t", "a", "m"))
+    rep.add(Finding("lint", "t", "b", "m"))
+    path = str(tmp_path / "baseline.json")
+    write_baseline(rep, path, reasons={"lint:t:a": "known"})
+    data = json.load(open(path))
+    assert data["accepted"] == ["lint:t:a", "lint:t:b"]
+    assert data["reasons"]["lint:t:a"] == "known"
+
+    nxt = Report()
+    nxt.add(Finding("lint", "t", "a", "m"))
+    nxt.add(Finding("lint", "t", "c", "m"))
+    assert [f.key for f in nxt.new_vs(data["accepted"])] == ["lint:t:c"]
+    assert nxt.stale_vs(data["accepted"]) == ["lint:t:b"]
+
+
+# -------------------------------------------------------- CLI gate codes ----
+@pytest.mark.parametrize("fixture", ["purity", "dtype", "overflow",
+                                     "constancy", "donation", "lint"])
+def test_cli_gate_fails_each_bad_fixture(fixture, capsys):
+    assert analysis_main(["--fixture", fixture, "--gate"]) == 1
+    assert "GATE" in capsys.readouterr().err
+
+
+def test_cli_gate_passes_clean_fixture(capsys):
+    assert analysis_main(["--fixture", "clean", "--gate"]) == 0
+    assert "0 findings" in capsys.readouterr().out
+
+
+# ------------------------------------- fleet counter ledger (the fix) ----
+def test_counter_ledger_exact_across_int32_wrap():
+    """The overflow-forcing regression: an in-graph int32 counter pushed
+    past INT32_MAX wraps negative on device; the chunk-boundary ledger
+    still reports the exact int64 cumulative count."""
+    from repro.obs.fleet import CounterLedger
+
+    c = np.array([INT32_MAX - 5, 100], np.int32)
+    ledger = CounterLedger({"counters": c})
+    # two chunks advance the counter by 7 and 2**30 — the first wraps
+    steps = [7, 2 ** 30]
+    expect = np.zeros(2, np.int64)
+    for s in steps:
+        with np.errstate(over="ignore"):
+            c = (c + np.int32(s)).astype(np.int32)   # device wraps silently
+        expect += s
+        ledger.absorb({"counters": c})
+    assert c[0] < 0                                   # really wrapped
+    assert (ledger.total["counters"] == expect).all()
+
+
+def test_fleet_chunk_migration_carry_is_int32():
+    """The chunk program accumulates integer migration counts in int32, not
+    float32 (float32 silently drops units past 2^24 — the regression the
+    overflow pass's carry-precision rule exists to catch)."""
+    from repro.analysis.targets import fleet_chunk_target
+
+    t = fleet_chunk_target(chunk=4, T=2, L=16, S=4, H=2, k_max=4)
+    # the chunk's trailing outputs are the (lat, thr, mig) accumulators
+    lat_av, thr_av, mig_av = t.closed.out_avals[-3:]
+    assert lat_av.dtype == jnp.float32 and thr_av.dtype == jnp.float32
+    assert mig_av.dtype == jnp.int32
+    # and the float32 alternative demonstrably loses counts
+    acc = np.float32(F32_EXACT)
+    assert acc + np.float32(1.0) == acc
+
+
+def test_rollout_ledger_matches_device_counters_short_horizon():
+    """Below the wrap horizon the ledger and the raw device counters must
+    agree exactly — widening changes nothing until a wrap happens."""
+    from repro.core.workloads import (ChurnSlot, build_churn_schedule,
+                                      web_like)
+    from repro.obs.fleet import fleet_rollout, stack_schedules
+
+    from repro.configs.base import TieringConfig
+
+    cfg = TieringConfig(n_tenants=3, n_fast_pages=24, n_slow_pages=24,
+                        lower_protection=(2, 2, 2), upper_bound=(12, 12, 12))
+    sched = build_churn_schedule(
+        [ChurnSlot(web_like(f), [(0, 48)]) for f in (10, 6, 8)], 48)
+    want, rates = stack_schedules([sched, sched])
+    roll = fleet_rollout(cfg, want, rates, 60, chunk=16, k_max=16)
+
+    led = roll.counters()
+    dev = roll.final_state.counters
+    for name in led._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(led, name)),
+            np.asarray(getattr(dev, name)).astype(np.int64), err_msg=name)
+    assert np.asarray(led.promotions).dtype == np.int64
+    assert roll.attribution_conserved()
+
+
+def test_rollout_ledger_chunk_invariant():
+    """Ledger totals are a pure function of the horizon, not the chunking
+    (absorb at every boundary telescopes)."""
+    from repro.core.workloads import (ChurnSlot, build_churn_schedule,
+                                      web_like)
+    from repro.obs.fleet import fleet_rollout, stack_schedules
+
+    from repro.configs.base import TieringConfig
+
+    cfg = TieringConfig(n_tenants=2, n_fast_pages=16, n_slow_pages=16,
+                        lower_protection=(2, 2), upper_bound=(8, 8))
+    sched = build_churn_schedule(
+        [ChurnSlot(web_like(f), [(0, 64)]) for f in (8, 6)], 64)
+    want, rates = stack_schedules([sched, sched])
+    rolls = [fleet_rollout(cfg, want, rates, 64, chunk=c, k_max=16)
+             for c in (8, 64)]
+    a, b = (r.counters() for r in rolls)
+    for name in a._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, name)),
+                                      np.asarray(getattr(b, name)),
+                                      err_msg=name)
+    np.testing.assert_array_equal(rolls[0].attribution_components(),
+                                  rolls[1].attribution_components())

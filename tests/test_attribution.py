@@ -121,22 +121,23 @@ def test_summary_rejects_batched_state():
 
 
 def test_tick_jaxpr_constant_in_horizon_and_tenants():
+    from repro.analysis.constancy import assert_jaxpr_constant
     from repro.obs.streaming import make_detector
 
-    def eqns(ticks, T):
+    def build(p):
+        ticks, T = p
         cfg = TieringConfig(n_tenants=T, n_fast_pages=16, n_slow_pages=24,
                             lower_protection=(3, 3), upper_bound=(0, 6))
         det = make_detector(ticks, T, cfg.lower_protection)
         att = make_attribution(T, cfg.lat_fast)
         tick = make_churn_tick(cfg, 40, k_max=16, detector=det, attrib=att)
         state = init_state(cfg, 40, detector=det, attrib=att)
-        return len(jax.make_jaxpr(tick)(
-            state, (jnp.zeros((T, 8), jnp.float32),
-                    jnp.zeros((T,), jnp.int32))).eqns)
+        return tick, (state, (jnp.zeros((T, 8), jnp.float32),
+                              jnp.zeros((T,), jnp.int32)))
 
-    base = eqns(50, 3)
-    assert eqns(500, 3) == base     # horizon is data
-    assert eqns(50, 6) == base      # tenant count is data
+    # horizon and tenant count are data: same eqn count AND primitive mix
+    assert_jaxpr_constant(build, [(50, 3), (500, 3), (50, 6)],
+                          label="attributed tick: horizon/tenants")
 
 
 # ---------------------------------------------------------- fleet rollout ----

@@ -138,10 +138,15 @@ def test_jaxpr_constant_in_churn_events():
     assert churn_events(quiet.want)[0] + churn_events(quiet.want)[1] == _T
     a, d = churn_events(stormy.want)
     assert a + d > _T
-    jx = [jax.make_jaxpr(tick)(
-        r["state"], (jnp.asarray(s.rates[0]), jnp.asarray(s.want[0])))
-        for s in (quiet, stormy)]
-    assert str(jx[0]) == str(jx[1])
+
+    from repro.analysis.constancy import assert_jaxpr_constant
+
+    def build(sched):
+        return tick, (r["state"], (jnp.asarray(sched.rates[0]),
+                                   jnp.asarray(sched.want[0])))
+
+    assert_jaxpr_constant(build, (quiet, stormy),
+                          label="churn tick: event schedule")
 
 
 def test_lifecycle_grant_release_depart():

@@ -104,17 +104,20 @@ def test_fleet_jaxpr_constant_in_host_mix():
     L = cfg.n_fast_pages + cfg.n_slow_pages
     tick = make_churn_tick(cfg, L, k_max=32)
 
-    def jaxpr_for(H):
+    from repro.analysis.constancy import assert_jaxpr_constant
+
+    def build(H):
         vt = jax.vmap(tick)
         states = stack_states(init_state(cfg, L), H)
         S = max(_FOOT)
         inp = (jnp.ones((H, 4, S), jnp.float32),
                jnp.full((H, 4), 16, jnp.int32))
-        return jax.make_jaxpr(vt)(states, inp)
+        return vt, (states, inp)
 
-    j4 = jaxpr_for(4)
-    assert str(j4) == str(jaxpr_for(4))        # deterministic retrace
-    assert len(j4.jaxpr.eqns) == len(jaxpr_for(8).jaxpr.eqns)
+    # retrace at the same H is deterministic; doubling H leaves the
+    # vmapped program's eqn count and primitive mix untouched
+    assert_jaxpr_constant(build, (4, 4, 8),
+                          label="vmapped tick: host count")
 
     # same program, different *data*: all-static vs mixed fleets share the
     # compiled scan — pin by running both through one jitted runner and

@@ -3,7 +3,6 @@ engine impl="batched") is pinned bit-exactly to the seed's per-tenant
 unrolled loops (impl="unrolled") — randomized scores, quotas (zero, partial,
 over-supply), masks, and tie cases, for T in {1, 3, 8} — plus trace-time
 T-independence of the batched tick's jaxpr."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -127,41 +126,33 @@ def test_engine_batched_matches_unrolled(mode):
                                np.asarray(b.throughput), rtol=1e-5)
 
 
-def _prim_counts(jaxpr) -> dict:
-    """Recursively count primitives (including sub-jaxprs of cond/scan)."""
-    counts = {}
-
-    def walk(jx):
-        for eqn in jx.eqns:
-            counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
-            for v in eqn.params.values():
-                vs = v if isinstance(v, (list, tuple)) else [v]
-                for item in vs:
-                    if hasattr(item, "jaxpr"):
-                        walk(item.jaxpr)
-
-    walk(jaxpr)
-    return counts
-
-
-def _tick_prims(T, impl):
-    Lp = 16 * T
-    owner = np.arange(Lp, dtype=np.int32) % T
-    cfg = TieringConfig(n_tenants=T, n_fast_pages=Lp // 2,
-                        lower_protection=(4,) * T, upper_bound=(8,) * T)
-    tick = make_tick(cfg, owner, "equilibria", k_max=8, impl=impl)
-    state = init_state(cfg, Lp)
-    jaxpr = jax.make_jaxpr(tick)(
-        state, (jnp.zeros((Lp,), jnp.float32), jnp.ones((Lp,), bool)))
-    return _prim_counts(jaxpr.jaxpr)
+def _tick_build(impl):
+    def build(T):
+        Lp = 16 * T
+        owner = np.arange(Lp, dtype=np.int32) % T
+        cfg = TieringConfig(n_tenants=T, n_fast_pages=Lp // 2,
+                            lower_protection=(4,) * T, upper_bound=(8,) * T)
+        tick = make_tick(cfg, owner, "equilibria", k_max=8, impl=impl)
+        state = init_state(cfg, Lp)
+        return tick, (state, (jnp.zeros((Lp,), jnp.float32),
+                              jnp.ones((Lp,), bool)))
+    return build
 
 
 def test_batched_tick_trace_is_T_independent():
-    """Jaxpr op counts of the batched tick are identical for T=2 and T=16
-    (no per-tenant unrolling, zero top_k ops); the unrolled tick grows."""
-    small, big = _tick_prims(2, "batched"), _tick_prims(16, "batched")
-    assert small == big
-    assert small.get("top_k", 0) == 0      # equilibria path: zero top_k ops
-    un_small, un_big = _tick_prims(2, "unrolled"), _tick_prims(16, "unrolled")
-    assert un_big.get("top_k", 0) > un_small.get("top_k", 0)
-    assert sum(un_big.values()) > sum(un_small.values())
+    """The batched tick's jaxpr signature (eqn count + primitive histogram,
+    sub-jaxprs included) is identical for T=2 and T=16, with zero top_k
+    ops on the equilibria path; the unrolled tick grows."""
+    from repro.analysis.constancy import (assert_jaxpr_constant,
+                                          sweep_signatures)
+
+    sig = assert_jaxpr_constant(_tick_build("batched"), (2, 16),
+                                label="batched tick: tenant count")
+    assert sig.histogram().get("top_k", 0) == 0   # equilibria: no top_k ops
+
+    (_, un_small), (_, un_big) = sweep_signatures(
+        _tick_build("unrolled"), (2, 16))
+    assert un_small != un_big                     # unrolled impl DOES grow
+    assert un_big.histogram().get("top_k", 0) > \
+        un_small.histogram().get("top_k", 0)
+    assert un_big.n_eqns > un_small.n_eqns

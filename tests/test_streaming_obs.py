@@ -185,19 +185,21 @@ def test_detector_jaxpr_constant_in_horizon():
     """The detector seam adds a fixed number of equations: jaxpr size of the
     detector-carrying tick is identical at a 200-tick and a 10k-tick horizon
     (window geometry is baked in as Python constants, horizon is data)."""
+    from repro.analysis.constancy import assert_jaxpr_constant
+
     cfg = _cfg()
     L = cfg.n_fast_pages + cfg.n_slow_pages
     S = max(_FOOT)
 
-    def eqns(horizon):
+    def build(horizon):
         spec = make_detector(horizon, 4, cfg.lower_protection)
         tick = make_churn_tick(cfg, L, k_max=32, detector=spec)
         state = init_state(cfg, L, detector=spec)
         inp = (jnp.ones((4, S), jnp.float32), jnp.full((4,), 16, jnp.int32))
-        return len(jax.make_jaxpr(tick)(state, inp).jaxpr.eqns)
+        return tick, (state, inp)
 
-    n200 = eqns(200)
-    assert n200 == eqns(10_000)
+    assert_jaxpr_constant(build, (200, 10_000),
+                          label="detector tick: horizon")
 
     # and the streamed state itself is O(T): no leaf scales with horizon
     spec = make_detector(10_000, 4, cfg.lower_protection)
