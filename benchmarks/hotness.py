@@ -1,0 +1,402 @@
+"""Differential fidelity harness for the hotness providers: the
+fidelity/speed frontier of exact vs sampled vs sketch vs neomem
+(core/hotness.py), emitted to benchmarks/results/hotness.json.
+
+  PYTHONPATH=src python -m benchmarks.hotness          # full matrix -> hotness.json
+  PYTHONPATH=src python -m benchmarks.hotness --smoke  # CI gates (see below)
+
+Three measurements:
+
+  agreement — paired-tick promotion-decision agreement. The EXACT engine
+      advances the trajectory; each tick, every provider's tick runs
+      counterfactually from the same pre-tick state (with the provider's
+      own carried sketch/report state substituted in) and the two
+      promotion sets (tier SLOW -> FAST transitions) are compared. Pooled
+      Jaccard over the run — 1.0 means the provider made identical
+      promotion decisions at every tick. Measured per provider x policy
+      mode x ownership provider (static = stacked16, dynamic = churn16).
+  fidelity — free-running per-tenant fast-hit fraction (recovered from
+      the perf model's latency output) vs the exact run on the same
+      preset; reported as max/mean absolute per-tenant delta.
+  tick_ms / path_ms — wall-time vs L at T=64 (the scale_sweep scenario),
+      per provider. ``tick_ms`` is the full tick; ``path_ms`` isolates the
+      hotness path (provider step + the tick's three selection calls) —
+      the part the sketch provider makes O(hot set) instead of O(L). The
+      full tick also carries a shared floor both providers pay identically
+      (perf-model reductions whose f32 association is golden-pinned,
+      observability ring/histogram scatters, controller), so the
+      end-to-end ratio is diluted; both numbers are reported.
+
+CI gates (--smoke, wired into scripts/check.sh), all at T=64/L=262144:
+sketch agreement on stacked16 >= AGREEMENT_MIN, hotness-path speedup
+(exact path_ms / sketch path_ms) >= PATH_SPEEDUP_MIN, and full-tick
+speedup >= TICK_SPEEDUP_MIN.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+AGREEMENT_MIN = 0.95      # sketch vs exact, stacked16 (acceptance gate)
+PATH_SPEEDUP_MIN = 2.0    # exact/sketch hotness-path ms at T=64, L=262144
+TICK_SPEEDUP_MIN = 1.3    # exact/sketch full-tick ms (floor; ~1.6 measured)
+SMOKE_BUDGET_S = 300.0
+SMOKE_TICKS = 120
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "hotness.json")
+
+PROVIDERS = ("exact", "sampled", "sketch", "neomem")
+AGREE_MODES = ("equilibria", "tpp", "memtis")
+BENCH_LS = (16384, 65536, 262144)
+
+
+# ------------------------------------------------------------- agreement ----
+def _promoted(before_tier, after_tier) -> np.ndarray:
+    from repro.core.state import TIER_FAST, TIER_SLOW
+    return np.asarray((np.asarray(before_tier) == TIER_SLOW)
+                      & (np.asarray(after_tier) == TIER_FAST))
+
+
+def _paired_agreement(exact_tick, provider_ticks, state, hstates,
+                      inputs_seq) -> dict:
+    """Advance the exact trajectory; per tick run each provider's tick
+    counterfactually from the same pre-tick state and pool the Jaccard of
+    the promotion sets. Returns {provider: {"agreement", "union"}}."""
+    import jax
+
+    inter = {p: 0 for p in provider_ticks}
+    union = {p: 0 for p in provider_ticks}
+    for inp in inputs_seq:
+        before = state.tier
+        new_exact, _ = exact_tick(state, inp)
+        promo_e = _promoted(before, new_exact.tier)
+        for p, ptick in provider_ticks.items():
+            ns, _ = ptick(state._replace(hotness=hstates[p]), inp)
+            promo_p = _promoted(before, ns.tier)
+            inter[p] += int((promo_e & promo_p).sum())
+            union[p] += int((promo_e | promo_p).sum())
+            hstates[p] = ns.hotness
+        state = new_exact
+    jax.block_until_ready(state.tier)
+    return {p: {"agreement": (inter[p] / union[p]) if union[p] else 1.0,
+                "union": union[p]} for p in provider_ticks}
+
+
+def agreement_static(preset: str, providers, mode: str, ticks: int,
+                     k_max: int = 128) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.core.engine import make_tick
+    from repro.core.hotness import init_hotness
+    from repro.core.simulator import PRESETS
+    from repro.core.state import init_state
+    from repro.core.workloads import build_trace
+
+    cfg, tenants = PRESETS[preset]()
+    owner, accesses, alive = build_trace(tenants, ticks)
+    cfg = cfg.with_(n_tenants=len(tenants))
+    exact_tick = jax.jit(make_tick(cfg, owner, mode, k_max))
+    pticks = {p: jax.jit(make_tick(cfg, owner, mode, k_max, hotness=p))
+              for p in providers}
+    hstates = {p: init_hotness(p, cfg, owner.shape[0]) for p in providers}
+    state = init_state(cfg, owner.shape[0], owner=owner)
+    acc = jnp.asarray(accesses, jnp.float32)
+    alv = jnp.asarray(alive, bool)
+    return _paired_agreement(exact_tick, pticks, state, hstates,
+                             [(acc[t], alv[t]) for t in range(ticks)])
+
+
+def agreement_churn(preset: str, providers, mode: str, ticks: int,
+                    k_max: int = 128) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.core.churn import make_churn_tick
+    from repro.core.hotness import init_hotness
+    from repro.core.simulator import CHURN_PRESETS
+    from repro.core.state import init_state
+    from repro.core.workloads import build_churn_schedule
+
+    cfg, slots = CHURN_PRESETS[preset]()
+    cfg = cfg.with_(n_tenants=len(slots))
+    schedule = build_churn_schedule(slots, ticks)
+    L = cfg.n_fast_pages + cfg.n_slow_pages
+    exact_tick = jax.jit(make_churn_tick(cfg, L, mode=mode, k_max=k_max))
+    pticks = {p: jax.jit(make_churn_tick(cfg, L, mode=mode, k_max=k_max,
+                                         hotness=p))
+              for p in providers}
+    hstates = {p: init_hotness(p, cfg, L) for p in providers}
+    state = init_state(cfg, L)
+    rates = jnp.asarray(schedule.rates, jnp.float32)
+    want = jnp.asarray(schedule.want, jnp.int32)
+    return _paired_agreement(exact_tick, pticks, state, hstates,
+                             [(rates[t], want[t]) for t in range(ticks)])
+
+
+# --------------------------------------------------------------- fidelity ----
+def _fast_hit(res, cfg) -> np.ndarray:
+    """Per-tenant steady-window fast-hit fraction, recovered from the perf
+    model: lat = f*lat_fast + (1-f)*lat_slow + migrations*migration_cost."""
+    mig = (res.promotions + res.demotions).sum(axis=1, keepdims=True)
+    lat_pure = res.latency - mig * cfg.migration_cost
+    f = (cfg.lat_slow - lat_pure) / (cfg.lat_slow - cfg.lat_fast)
+    return np.clip(f, 0.0, 1.0)[res.steady_window()].mean(axis=0)
+
+
+def fidelity(preset: str, providers, ticks: int = 300,
+             mode: str = "equilibria") -> list:
+    from repro.core.simulator import PRESETS, simulate_preset
+
+    cfg, _ = PRESETS[preset]()
+    base = _fast_hit(simulate_preset(preset, ticks, mode=mode), cfg)
+    rows = []
+    for p in providers:
+        fh = _fast_hit(simulate_preset(preset, ticks, mode=mode, hotness=p),
+                       cfg)
+        d = np.abs(fh - base)
+        rows.append({"provider": p, "preset": preset, "mode": mode,
+                     "max_abs_fast_hit_delta": round(float(d.max()), 4),
+                     "mean_abs_fast_hit_delta": round(float(d.mean()), 4)})
+    return rows
+
+
+# ------------------------------------------------------------------ speed ----
+def bench_hotness_path(T: int, L: int, hotness, n_ticks: int = 30) -> dict:
+    """The provider's per-tick cost in isolation: ``step`` plus the three
+    selection calls the tick makes on its view (Eq.1 demotion, promotion
+    select, sync upper-bound demotion), jitted as one program on the
+    bench_tick scenario. This is the path the sketch provider makes
+    O(hot set) instead of O(L) — the tentpole claim — measured without the
+    shared tick floor (perf model, observability scatters, controller)
+    that both providers pay identically."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import TieringConfig
+    from repro.core import hotness as HOT
+    from repro.core import select as SEL
+    from repro.core.state import TIER_FAST, TIER_SLOW
+
+    share = L // (4 * T)
+    cfg = TieringConfig(
+        n_tenants=T, n_fast_pages=L // 4, n_slow_pages=L,
+        lower_protection=(max(share // 2, 1),) * T,
+        upper_bound=(2 * share,) * T)
+    owner_np = np.repeat(np.arange(T, dtype=np.int32), L // T)
+    owner_j = jnp.asarray(owner_np)
+    provider = HOT.resolve_hotness(hotness, cfg, L, k_max=256)
+    strat = SEL.static_strategy(owner_np, T, 256)
+    rows = HOT.static_rowspace(owner_np, T)
+    rng = np.random.default_rng(0)
+    accesses = jnp.asarray(np.where(rng.random(L) < 0.3, 4.0, 0.1)
+                           .astype(np.float32))
+    alive = jnp.ones((L,), bool)
+    new = jnp.zeros((L,), bool)
+    tier_np = np.full(L, TIER_SLOW, np.int8)
+    tier_np[rng.permutation(L)[:L // 4]] = TIER_FAST
+    d_quota = jnp.full((T,), 8, jnp.int32)
+    s_quota = jnp.full((T,), 4, jnp.int32)
+
+    def path(hstate, prev_hot, tier, t):
+        hview = provider.step(HOT.HotCtx(
+            hstate=hstate, prev_hot=prev_hot, accesses=accesses,
+            alive=alive, new=new, tier=tier,
+            last_access=jnp.full((L,), t, jnp.int32), owner=owner_j,
+            owner_c=owner_j, t=t, rows=lambda: rows, strategy=strat))
+        dsel = hview.demote(tier == TIER_FAST, d_quota)
+        tier = jnp.where(dsel.mask, TIER_SLOW, tier)
+        pcand = hview.promo_cand(tier, dsel.mask)
+        psel = pcand.select(jnp.minimum(pcand.cand_t, 256))
+        tier = jnp.where(psel.mask, TIER_FAST, tier)
+        ssel = hview.demote(tier == TIER_FAST, s_quota)
+        return (hview.hstate, hview.hot,
+                jnp.where(ssel.mask, TIER_SLOW, tier),
+                hview.demand_t)
+
+    f = jax.jit(path)
+    carry = (provider.init(), jnp.zeros((L,), jnp.float32),
+             jnp.asarray(tier_np), jnp.int32(1))
+    t0 = time.perf_counter()
+    hstate, hot, tier, _ = f(*carry)
+    jax.block_until_ready(tier)
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for i in range(n_ticks):
+        hstate, hot, tier, _ = f(hstate, hot, tier, jnp.int32(2 + i))
+    jax.block_until_ready(tier)
+    path_ms = (time.perf_counter() - t0) / n_ticks * 1e3
+    name = "exact" if hotness is None else hotness
+    return {"provider": name, "T": T, "L": L,
+            "compile_s": round(compile_s, 3),
+            "path_ms": round(path_ms, 3), "n_ticks": n_ticks}
+
+
+def bench_tick(T: int, L: int, hotness, n_ticks: int = 50,
+               mode: str = "equilibria") -> dict:
+    """scale_sweep's scenario (contiguous owner, fast = L/4, 30% hot pages)
+    with a hotness provider threaded through."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import TieringConfig
+    from repro.core.engine import make_tick
+    from repro.core.state import init_state
+
+    share = L // (4 * T)
+    cfg = TieringConfig(
+        n_tenants=T, n_fast_pages=L // 4, n_slow_pages=L,
+        lower_protection=(max(share // 2, 1),) * T,
+        upper_bound=(2 * share,) * T)
+    owner = np.repeat(np.arange(T, dtype=np.int32), L // T)
+    tick = jax.jit(make_tick(cfg, owner, mode, k_max=256, hotness=hotness))
+    state = init_state(cfg, L, owner=owner, hotness=hotness)
+    rng = np.random.default_rng(0)
+    accesses = np.where(rng.random(L) < 0.3, 4.0, 0.1).astype(np.float32)
+    inputs = (jnp.asarray(accesses), jnp.ones((L,), bool))
+    t0 = time.perf_counter()
+    state, out = tick(state, inputs)
+    jax.block_until_ready(out)
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(n_ticks):
+        state, out = tick(state, inputs)
+    jax.block_until_ready(out)
+    tick_ms = (time.perf_counter() - t0) / n_ticks * 1e3
+    name = ("exact" if hotness is None else hotness
+            if isinstance(hotness, str) else type(hotness).__name__)
+    return {"provider": name,
+            "T": T, "L": L, "compile_s": round(compile_s, 3),
+            "tick_ms": round(tick_ms, 3), "n_ticks": n_ticks}
+
+
+# ------------------------------------------------------------------ entry ----
+def smoke() -> int:
+    """CI gates at T=64, L=262144: sketch agreement >= AGREEMENT_MIN on
+    stacked16, hotness-path speedup >= PATH_SPEEDUP_MIN, full-tick
+    speedup >= TICK_SPEEDUP_MIN."""
+    t0 = time.perf_counter()
+    ag = agreement_static("stacked16", ("sketch",), "equilibria",
+                          SMOKE_TICKS)["sketch"]
+    pe = bench_hotness_path(64, 262144, None)
+    ps = bench_hotness_path(64, 262144, "sketch")
+    be = bench_tick(64, 262144, None, n_ticks=15)
+    bs = bench_tick(64, 262144, "sketch", n_ticks=15)
+    path_x = pe["path_ms"] / ps["path_ms"]
+    tick_x = be["tick_ms"] / bs["tick_ms"]
+    elapsed = time.perf_counter() - t0
+    ok_a = ag["agreement"] >= AGREEMENT_MIN
+    ok_p = path_x >= PATH_SPEEDUP_MIN
+    ok_t = tick_x >= TICK_SPEEDUP_MIN
+    ok_b = elapsed < SMOKE_BUDGET_S
+    print(f"hotness smoke: sketch agreement={ag['agreement']:.4f} "
+          f"(union={ag['union']}, gate>={AGREEMENT_MIN}) "
+          f"-> {'OK' if ok_a else 'FAIL'}")
+    print(f"hotness smoke: hotness path exact={pe['path_ms']:.1f}ms "
+          f"sketch={ps['path_ms']:.1f}ms speedup={path_x:.2f}x "
+          f"(gate>={PATH_SPEEDUP_MIN}) -> {'OK' if ok_p else 'FAIL'}")
+    print(f"hotness smoke: full tick exact={be['tick_ms']:.1f}ms "
+          f"sketch={bs['tick_ms']:.1f}ms speedup={tick_x:.2f}x "
+          f"(gate>={TICK_SPEEDUP_MIN}) -> {'OK' if ok_t else 'FAIL'}")
+    print(f"hotness smoke: total={elapsed:.1f}s budget={SMOKE_BUDGET_S:.0f}s "
+          f"-> {'OK' if ok_b else 'OVER BUDGET'}")
+    return 0 if (ok_a and ok_p and ok_t and ok_b) else 1
+
+
+def main() -> int:
+    if "--smoke" in sys.argv:
+        return smoke()
+    import jax
+
+    providers = [p for p in PROVIDERS if p != "exact"]
+    agreement = []
+    # "exact" rides along as a harness sanity row (must come out 1.0)
+    for mode in AGREE_MODES:
+        rows = agreement_static("stacked16", PROVIDERS, mode, 240)
+        for p, r in rows.items():
+            agreement.append({"provider": p, "mode": mode,
+                              "ownership": "static", "preset": "stacked16",
+                              "agreement": round(r["agreement"], 4),
+                              "union": r["union"]})
+            print(f"agreement stacked16 {mode:10s} {p:8s} "
+                  f"{r['agreement']:.4f} (union={r['union']})", flush=True)
+    for mode in ("equilibria",):
+        rows = agreement_churn("churn16", PROVIDERS, mode, 240)
+        for p, r in rows.items():
+            agreement.append({"provider": p, "mode": mode,
+                              "ownership": "dynamic", "preset": "churn16",
+                              "agreement": round(r["agreement"], 4),
+                              "union": r["union"]})
+            print(f"agreement churn16   {mode:10s} {p:8s} "
+                  f"{r['agreement']:.4f} (union={r['union']})", flush=True)
+
+    fid = fidelity("stacked16", providers)
+    for r in fid:
+        print(f"fidelity  {r['preset']} {r['provider']:8s} "
+              f"max|d fast-hit|={r['max_abs_fast_hit_delta']:.4f}",
+              flush=True)
+
+    speed = []
+    n_for = {16384: 100, 65536: 50, 262144: 25}
+    for p in PROVIDERS:
+        for L in BENCH_LS:
+            r = bench_tick(64, L, None if p == "exact" else p,
+                           n_ticks=n_for[L])
+            r["provider"] = p
+            speed.append(r)
+            print(f"tick_ms   T=64 L={L:6d} {p:8s} "
+                  f"compile={r['compile_s']:6.2f}s tick={r['tick_ms']:8.3f}ms",
+                  flush=True)
+
+    path = []
+    for p in ("exact", "sketch"):
+        for L in BENCH_LS:
+            r = bench_hotness_path(64, L, None if p == "exact" else p)
+            path.append(r)
+            print(f"path_ms   T=64 L={L:6d} {p:8s} "
+                  f"path={r['path_ms']:8.3f}ms", flush=True)
+
+    exact_ms = {r["L"]: r["tick_ms"] for r in speed
+                if r["provider"] == "exact"}
+    sketch_ms = {r["L"]: r["tick_ms"] for r in speed
+                 if r["provider"] == "sketch"}
+    exact_path = {r["L"]: r["path_ms"] for r in path
+                  if r["provider"] == "exact"}
+    sketch_path = {r["L"]: r["path_ms"] for r in path
+                   if r["provider"] == "sketch"}
+    frontier = {
+        "tick_speedup_sketch_vs_exact": {
+            f"T=64,L={L}": round(exact_ms[L] / sketch_ms[L], 2)
+            for L in BENCH_LS},
+        "path_speedup_sketch_vs_exact": {
+            f"T=64,L={L}": round(exact_path[L] / sketch_path[L], 2)
+            for L in BENCH_LS},
+        "agreement_sketch_stacked16_equilibria": next(
+            a["agreement"] for a in agreement
+            if a["provider"] == "sketch" and a["mode"] == "equilibria"
+            and a["ownership"] == "static"),
+        "gates": {"agreement_min": AGREEMENT_MIN,
+                  "path_speedup_min": PATH_SPEEDUP_MIN,
+                  "tick_speedup_min": TICK_SPEEDUP_MIN},
+    }
+    out = {
+        "meta": {"backend": jax.default_backend(),
+                 "note": "promotion-decision agreement (pooled Jaccard of "
+                         "paired-tick SLOW->FAST sets vs the exact "
+                         "trajectory), per-tenant fast-hit deltas and "
+                         "tick wall-time per hotness provider"},
+        "agreement": agreement,
+        "fidelity": fid,
+        "tick_ms": speed,
+        "path_ms": path,
+        "frontier": frontier,
+    }
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    from benchmarks.run import write_result
+    write_result(RESULTS, out, config={
+        "providers": PROVIDERS, "modes": AGREE_MODES, "LS": BENCH_LS,
+        "agreement_ticks": 240})
+    print(f"wrote {RESULTS}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,3 +37,6 @@ python -m benchmarks.fleet_sweep --smoke
 
 echo "== attribution smoke (conservation, counterfactuals, sketch, jaxpr gate) =="
 python -m benchmarks.attribution --smoke
+
+echo "== hotness smoke (sketch agreement >= 0.95, hotness-path speedup >= 2x) =="
+python -m benchmarks.hotness --smoke

@@ -61,7 +61,12 @@ TOP_F = Interval(-INF, INF, False)
 
 def dtype_interval(dtype) -> Interval:
     """The full representable range of a dtype (the TOP element)."""
-    dtype = np.dtype(dtype)
+    try:
+        dtype = np.dtype(dtype)
+    except TypeError:
+        # extended dtypes (typed PRNG keys): opaque to interval analysis;
+        # treat as unbounded so downstream casts stay conservative
+        return TOP_F
     if dtype == np.bool_:
         return BOOL
     if np.issubdtype(dtype, np.integer):
@@ -191,10 +196,13 @@ class IntervalEvaluator:
                 # whatever the op did, the array cannot hold more
                 if hasattr(v.aval, "dtype"):
                     top = dtype_interval(v.aval.dtype)
+                    try:
+                        is_int = np.issubdtype(np.dtype(v.aval.dtype),
+                                               np.integer)
+                    except TypeError:   # extended dtype (typed PRNG key)
+                        is_int = False
                     iv = Interval(max(iv.lo, top.lo), min(iv.hi, top.hi),
-                                  iv.integral or top is BOOL or
-                                  np.issubdtype(np.dtype(v.aval.dtype),
-                                                np.integer)
+                                  iv.integral or top is BOOL or is_int
                                   if iv.integral is not None else iv.integral)
                 env[v] = iv
 

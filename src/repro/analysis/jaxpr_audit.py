@@ -100,7 +100,12 @@ def dtype_pass(closed: ClosedJaxpr, target: str, report: Report,
         dtype = getattr(aval, "dtype", None)
         if dtype is None:
             return
-        name = np.dtype(dtype).name
+        try:
+            name = np.dtype(dtype).name
+        except TypeError:
+            # extended dtypes (typed PRNG keys) have no numpy equivalent
+            # and no 64-bit hazard — their backing uint32 buffers do
+            return
         if name in _WIDE_DTYPES and name != "complex64":
             key = (name, where)
             if key not in wide_seen:

@@ -94,20 +94,38 @@ def _small_cfg(T: int = 3, fast: int = 48, slow: int = 48, **kw):
 
 
 def static_tick_target(mode: str, T: int = 3, pages_per: int = 16,
-                       k_max: int = 8,
-                       horizon: int = DEFAULT_HORIZON) -> AuditTarget:
+                       k_max: int = 8, horizon: int = DEFAULT_HORIZON,
+                       hotness=None,
+                       name: Optional[str] = None) -> AuditTarget:
     from repro.core.engine import make_tick
     from repro.core.state import init_state
     cfg = _small_cfg(T=T, fast=T * pages_per // 2, slow=T * pages_per)
     owner = np.repeat(np.arange(T), pages_per)
     L = owner.shape[0]
-    tick = make_tick(cfg, owner, mode=mode, k_max=k_max)
-    state = init_state(cfg, L, owner=owner)
+    tick = make_tick(cfg, owner, mode=mode, k_max=k_max, hotness=hotness)
+    state = init_state(cfg, L, owner=owner, hotness=hotness)
     inputs = (jnp.zeros((L,), jnp.float32), jnp.ones((L,), bool))
     over = {0: Interval(0, RATE_MAX, False),       # accesses [L]
             1: Interval(0, 1, True)}               # alive [L] bool
-    return _tick_target(f"tick:static:{mode}", tick, state, inputs, over,
-                        horizon)
+    return _tick_target(name or f"tick:static:{mode}", tick, state, inputs,
+                        over, horizon)
+
+
+def hotness_tick_targets() -> List[AuditTarget]:
+    """Provider tick programs under the purity/dtype/overflow passes.
+
+    The sketch provider picks its probe branch at trace time (full
+    enumeration when the per-tenant budget covers the rowspace, sampled
+    draws otherwise) — both graphs are distinct audit targets."""
+    from repro.core.hotness import SketchSpec
+    variants = [
+        ("sampled", "tick:hotness:sampled"),
+        ("sketch", "tick:hotness:sketch"),          # full-coverage branch
+        (SketchSpec(probe=6), "tick:hotness:sketch-sampled"),
+        ("neomem", "tick:hotness:neomem"),
+    ]
+    return [static_tick_target("equilibria", hotness=spec, name=name)
+            for spec, name in variants]
 
 
 def dynamic_tick_target(mode: str, T: int = 3, L: int = 64, S: int = 16,
@@ -237,10 +255,44 @@ def tick_constancy_sweeps() -> Dict[str, Tuple[Callable, Sequence]]:
     def build_dynamic_L(L):
         return dynamic_tick_target("equilibria", L=L).closed
 
-    return {
+    sweeps = {
         "tick:static:T": (build_static_T, (2, 4)),
         "tick:dynamic:T": (build_dynamic_T, (2, 4)),
         "tick:dynamic:L": (build_dynamic_L, (64, 128)),
+    }
+    sweeps.update(hotness_constancy_sweeps())
+    return sweeps
+
+
+def hotness_constancy_sweeps() -> Dict[str, Tuple[Callable, Sequence]]:
+    """Provider tick programs must not unroll in T, and the sketch/neomem
+    candidate paths must not grow graph structure with L (their runtime
+    cost is O(probe + T*N); graph constancy is the structural half of that
+    claim). The sketch L-sweeps hold the trace-time probe branch fixed:
+    ``probe=6`` keeps both L values in the sampled regime, the default
+    spec keeps both in full coverage."""
+    from repro.core.hotness import SketchSpec
+
+    def build_T(prov):
+        def build(T):
+            return static_tick_target("equilibria", T=T,
+                                      hotness=prov).closed
+        return build
+
+    def build_L(prov):
+        def build(pages_per):
+            return static_tick_target("equilibria", pages_per=pages_per,
+                                      hotness=prov).closed
+        return build
+
+    sampled_regime = SketchSpec(probe=6)
+    return {
+        "tick:hotness:sampled:T": (build_T("sampled"), (2, 4)),
+        "tick:hotness:sketch:T": (build_T(sampled_regime), (2, 4)),
+        "tick:hotness:neomem:T": (build_T("neomem"), (2, 4)),
+        "tick:hotness:sketch:L": (build_L(sampled_regime), (16, 32)),
+        "tick:hotness:sketch-full:L": (build_L("sketch"), (16, 32)),
+        "tick:hotness:neomem:L": (build_L("neomem"), (16, 32)),
     }
 
 
@@ -253,6 +305,7 @@ def all_targets(scale: bool = True,
         out.append(static_tick_target(mode))
     for mode in MODES:
         out.append(dynamic_tick_target(mode))
+    out.extend(hotness_tick_targets())
     if scale:
         out.append(scale_tick_target())
     if fleet:

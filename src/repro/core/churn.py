@@ -76,24 +76,27 @@ def churn_events(want: np.ndarray) -> Tuple[int, int]:
 
 
 def make_churn_tick(cfg: TieringConfig, n_pages: int, mode: str = "equilibria",
-                    k_max: int = 256, detector=None, attrib=None):
+                    k_max: int = 256, detector=None, attrib=None,
+                    hotness=None):
     """Build the jittable dynamic-ownership tick.
 
     n_pages: size of the physical page pool (fast + slow capacity). Inputs
     per tick: ``(rates [T, S] f32, want [T] int32)``. ``detector``: optional
     ``obs.streaming.DetectorSpec`` (state must then carry a DetectorState).
     ``attrib``: optional ``obs.attribution.AttributionSpec`` (state must
-    then carry an AttributionState).
+    then carry an AttributionState). ``hotness``: optional hotness-provider
+    spec (core/hotness.py); stateful providers pair with
+    ``init_state(..., hotness=...)``.
     """
     provider = dynamic_ownership(cfg, n_pages, k_max=k_max)
     return make_tick_core(cfg, provider, mode=mode, k_max=k_max,
-                          detector=detector, attrib=attrib)
+                          detector=detector, attrib=attrib, hotness=hotness)
 
 
 def run_churn_engine(cfg: TieringConfig, schedule: ChurnSchedule,
                      mode: str = "equilibria", k_max: int = 256,
                      n_pages: Optional[int] = None, detector=None,
-                     attrib=None) -> Tuple[TierState, TickOutput]:
+                     attrib=None, hotness=None) -> Tuple[TierState, TickOutput]:
     """Run a full churn schedule (scan over ticks) from an all-free pool.
 
     The physical pool defaults to the configured capacity
@@ -102,9 +105,9 @@ def run_churn_engine(cfg: TieringConfig, schedule: ChurnSchedule,
     """
     L = n_pages if n_pages is not None else cfg.n_fast_pages + cfg.n_slow_pages
     tick = make_churn_tick(cfg, L, mode=mode, k_max=k_max, detector=detector,
-                           attrib=attrib)
+                           attrib=attrib, hotness=hotness)
     state = init_state(cfg, L, detector=detector,  # owner=None: all pooled
-                       attrib=attrib)
+                       attrib=attrib, hotness=hotness)
 
     @jax.jit
     def run(state, rates, want):

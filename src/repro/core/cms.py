@@ -1,0 +1,158 @@
+"""Decayed count-min sketch over hashed page ids (HybridTier direction).
+
+The sketch provider (core/hotness.py) cannot afford the exact engine's
+dense [L] EWMA bookkeeping at fleet scale, so page hotness lives in a
+``[depth, width]`` count-min sketch instead: every sampled access adds its
+(unbiased, scaled) weight to one bucket per row, the whole sketch decays by
+``hot_decay`` each tick, and an estimate is the min over rows — the classic
+one-sided guarantee (estimate >= true decayed count, never under), pinned
+by the property suite in tests/test_hotness_sketch.py.
+
+Hash design ((page + b_d) * a_d mod width, width a power of two, a_d odd):
+
+* a_d odd makes multiplication invertible mod width, so ANY window of
+  fewer than ``width`` consecutive page ids is collision-free within
+  itself. Tenant footprints are (near-)contiguous id ranges in every
+  engine layout, so a tenant's own pages never alias each other; only
+  cross-tenant aliasing remains, and the min over ``depth`` independent
+  rows suppresses it.
+* small multipliers (< 2**10) keep ``(page + b) * a`` inside int32 for
+  any pool up to ~2**20 pages — x64 stays disabled and the analysis
+  overflow pass can prove the bound (``sketch_hotness`` asserts it).
+
+Everything here is pure jnp on plain arrays (no engine state), so the
+property tests exercise the same code the compiled tick runs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MULT_MAX = 1 << 10        # exclusive bound on the hash multipliers
+
+
+class CMSParams(NamedTuple):
+    """Trace-time sketch geometry + hash constants (derived from ``seed``)."""
+    depth: int
+    width: int            # power of two
+    decay: float          # per-tick multiplicative decay (1.0 = pure count)
+    mults: jax.Array      # [depth] int32 odd, < MULT_MAX
+    offs: jax.Array       # [depth] int32, < width
+
+
+def cms_params(depth: int = 2, width: int = 1 << 15, decay: float = 1.0,
+               seed: int = 0) -> CMSParams:
+    assert width & (width - 1) == 0, f"width must be a power of two: {width}"
+    rng = np.random.default_rng(seed)
+    mults = (rng.integers(0, MULT_MAX // 2, depth) * 2 + 1).astype(np.int32)
+    offs = rng.integers(0, width, depth).astype(np.int32)
+    return CMSParams(depth=depth, width=width, decay=decay,
+                     mults=jnp.asarray(mults), offs=jnp.asarray(offs))
+
+
+def make_cms(p: CMSParams) -> jax.Array:
+    return jnp.zeros((p.depth, p.width), jnp.float32)
+
+
+def cms_hash(p: CMSParams, pages: jax.Array) -> jax.Array:
+    """[depth, *pages.shape] bucket index per row. ``pages`` must be >= 0
+    and small enough that ``(page + width) * mult`` stays inside int32."""
+    shape = (p.depth,) + (1,) * pages.ndim
+    a = p.mults.reshape(shape)
+    b = p.offs.reshape(shape)
+    return ((pages[None] + b) * a) & (p.width - 1)
+
+
+def cms_add(p: CMSParams, cms: jax.Array, pages: jax.Array,
+            amounts: jax.Array, valid: jax.Array) -> jax.Array:
+    """Scatter-add ``amounts`` into every row's bucket for each valid lane.
+    One scatter over depth * lanes — the per-tick cost is O(probed lanes),
+    never O(L)."""
+    h = jnp.where(valid[None], cms_hash(p, pages), p.width)   # OOB -> dropped
+    d = jnp.broadcast_to(
+        jnp.arange(p.depth, dtype=jnp.int32).reshape(
+            (p.depth,) + (1,) * pages.ndim), h.shape)
+    return cms.at[d, h].add(jnp.broadcast_to(amounts[None], h.shape),
+                            mode="drop")
+
+
+def cms_assign(p: CMSParams, cms: jax.Array, pages: jax.Array,
+               values: jax.Array, valid: jax.Array) -> jax.Array:
+    """Scatter-SET each valid lane's value into every row's bucket.
+
+    Only sound when lanes cover disjoint buckets (e.g. distinct pages from
+    an injective window, ``max page - min page < width``): with collisions,
+    last-writer-wins would silently drop counts. The sketch provider uses
+    this in its full-coverage regime so the bucket recurrence can be
+    written in the exact engine's ``decay * prev + accesses`` multiply-add
+    form — XLA then rounds both identically and the estimates converge
+    bit-for-bit with the dense EWMA."""
+    h = jnp.where(valid[None], cms_hash(p, pages), p.width)   # OOB -> dropped
+    d = jnp.broadcast_to(
+        jnp.arange(p.depth, dtype=jnp.int32).reshape(
+            (p.depth,) + (1,) * pages.ndim), h.shape)
+    return cms.at[d, h].set(jnp.broadcast_to(values[None], h.shape),
+                            mode="drop")
+
+
+def cms_clear(p: CMSParams, cms: jax.Array, pages: jax.Array,
+              valid: jax.Array) -> jax.Array:
+    """Zero every row's bucket for each valid lane — the page-free hook
+    (the hardware analogue: freeing a page resets its tracker counter).
+    Colliding live pages transiently under-count until their next access;
+    that trades the one-sided guarantee at freed-page hash sites for not
+    carrying dead pages' residue into their successors' estimates."""
+    h = jnp.where(valid[None], cms_hash(p, pages), p.width)   # OOB -> dropped
+    d = jnp.broadcast_to(
+        jnp.arange(p.depth, dtype=jnp.int32).reshape(
+            (p.depth,) + (1,) * pages.ndim), h.shape)
+    return cms.at[d, h].set(0.0, mode="drop")
+
+
+def cms_decay(p: CMSParams, cms: jax.Array) -> jax.Array:
+    """One tick of exponential aging — the sketch analogue of the exact
+    engine's ``hot_decay * hot``."""
+    return cms * jnp.float32(p.decay)
+
+
+def cms_merge(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Combine two sketches built with the SAME params (elementwise add):
+    estimates of the merge upper-bound the merged true counts, and the
+    operation is associative (property-pinned on integer-valued counts)."""
+    return a + b
+
+
+def cms_estimate(p: CMSParams, cms: jax.Array, pages: jax.Array) -> jax.Array:
+    """Point estimate per lane: min over depth rows (>= the true decayed
+    count; collisions only ever inflate)."""
+    h = cms_hash(p, pages)
+    d = jnp.arange(p.depth, dtype=jnp.int32).reshape(
+        (p.depth,) + (1,) * pages.ndim)
+    return cms[d, h].min(axis=0)
+
+
+def topn_rows(score: jax.Array, page: jax.Array, valid: jax.Array,
+              n: int) -> Tuple[jax.Array, jax.Array]:
+    """Top-n lanes of each row by score, best first.
+
+    score/page/valid: [T, M]. Returns ``(pages [T, n], score [T, n])`` with
+    -1 page ids (and -inf scores) on empty lanes; pads with empties when
+    M < n so callers get a shape-stable buffer. Ties keep the LOWER lane
+    index (``lax.top_k``), so callers that present lanes in ascending page
+    order inherit the exact engine's lower-page-wins tie-break.
+    """
+    T, M = score.shape
+    s = jnp.where(valid, score, -jnp.inf)
+    k = min(n, M)
+    vals, cols = jax.lax.top_k(s, k)
+    keep = vals > -jnp.inf
+    pages = jnp.where(keep, jnp.take_along_axis(page, cols, axis=1), -1)
+    if k < n:
+        pages = jnp.concatenate(
+            [pages, jnp.full((T, n - k), -1, pages.dtype)], axis=1)
+        vals = jnp.concatenate(
+            [vals, jnp.full((T, n - k), -jnp.inf, vals.dtype)], axis=1)
+    return pages, vals

@@ -44,7 +44,7 @@ __all__ = ["MODES", "IMPLS", "TickOutput", "make_tick", "run_engine"]
 
 def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
               k_max: int = 256, impl: str = "batched", detector=None,
-              attrib=None):
+              attrib=None, hotness=None):
     """Build the jittable tick. owner: [L] int (static tenant of each page).
 
     impl: "batched" (segmented selection + scatter-add reductions, trace-time
@@ -54,22 +54,25 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
     carry a matching DetectorState (``init_state(..., detector=...)``).
     attrib: optional ``obs.attribution.AttributionSpec`` — likewise paired
     with ``init_state(..., attrib=...)``.
+    hotness: optional hotness-provider spec (core/hotness.py) — a name
+    ("exact"/"sampled"/"sketch"/"neomem") or spec NamedTuple; stateful
+    providers pair with ``init_state(..., hotness=...)``.
     """
     assert impl in IMPLS, impl
     provider = static_ownership(cfg, owner, k_max=k_max, impl=impl)
     return make_tick_core(cfg, provider, mode=mode, k_max=k_max,
-                          detector=detector, attrib=attrib)
+                          detector=detector, attrib=attrib, hotness=hotness)
 
 
 def run_engine(cfg: TieringConfig, owner: np.ndarray, accesses: np.ndarray,
                alive: np.ndarray, mode: str = "equilibria",
                k_max: int = 256, impl: str = "batched", detector=None,
-               attrib=None) -> Tuple[TierState, TickOutput]:
+               attrib=None, hotness=None) -> Tuple[TierState, TickOutput]:
     """Run the full trace (scan over ticks). accesses/alive: [ticks, L]."""
     tick = make_tick(cfg, owner, mode, k_max, impl=impl, detector=detector,
-                     attrib=attrib)
+                     attrib=attrib, hotness=hotness)
     state = init_state(cfg, owner.shape[0], owner=owner, detector=detector,
-                       attrib=attrib)
+                       attrib=attrib, hotness=hotness)
 
     @jax.jit
     def run(state, accesses, alive):

@@ -1,0 +1,505 @@
+"""Hotness providers: how the unified tick learns which pages are hot.
+
+Equilibria's control plane starts at hotness — and the exact engine
+recomputes a dense [L] EWMA every tick, so tick cost grows linearly in the
+page pool. This module makes hotness a SEAM of ``core.tick.make_tick_core``
+(mirroring the ownership-provider / ``detect=`` / ``attrib=`` seams): a
+provider owns a pytree-carried state plus the update/candidate ops tick
+steps 3-6b consume, while selection quotas, Eq.1/Eq.2 regulation, obs,
+attribution and churn run unchanged on top.
+
+Providers (``hotness=`` on the tick builders / ``init_state``):
+
+  exact    — today's dense EWMA; bit-exact with the pre-seam tick (the
+             default; golden traces pass unregenerated).
+  sampled  — dense EWMA fed by a rotating per-tick page subset with
+             unbiased 1/frac scaling (the cheap-fidelity frontier point:
+             same O(L) dense ops, sparser access instrumentation).
+  sketch   — HybridTier direction: a decayed count-min sketch over hashed
+             page ids (core/cms.py) fed by O(probe) sampled lanes, plus
+             per-tenant top-N candidate/victim buffers, so the promotion-
+             and demotion-candidate paths touch O(hot set), not O(L).
+  neomem   — NeoMem direction: an emulated device-side tracker counts
+             every access exactly and publishes a top-N hot-page report
+             per tick; the OS-side promotion path consumes the report one
+             tick LATE (hardware asynchrony), demotion keeps the OS's own
+             LRU metadata.
+
+The differential fidelity harness (tests/test_hotness_differential.py,
+benchmarks/hotness.py) quantifies each provider's promotion-decision
+agreement and fast-hit fidelity against ``exact``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TieringConfig
+from repro.core import cms as CM
+from repro.core import select as SEL
+from repro.core.state import TIER_SLOW
+
+HOTNESS_PROVIDERS = ("exact", "sampled", "sketch", "neomem")
+
+
+def cold_score(t: jax.Array, last_access: jax.Array,
+               hot: jax.Array) -> jax.Array:
+    """The ONE demotion/reclaim ranking score: LRU age in ticks, hotness as
+    the tiebreak within an age class (higher = colder = demoted first).
+    Every consumer — Eq.1 demotion, sync upper-bound demotion, churn
+    reclaim, the sketch provider's victim buffer — must rank with this
+    helper so the orderings can never drift apart again."""
+    return (t - last_access).astype(jnp.float32) * 1e3 - hot
+
+
+# ------------------------------------------------------------- the seam ----
+class RowSpace(NamedTuple):
+    """Tenant-local page addressing: row t lists tenant t's pages.
+
+    The ownership provider supplies this lazily (``Prepared.rows`` is a
+    thunk): static layouts bake it in at trace time, the dynamic provider
+    scatters it from the live owner vector only when a hotness provider
+    actually asks (the exact provider never does, so the default tick
+    carries zero extra ops)."""
+    page: jax.Array    # [T, S] int32 page id, -1 = empty slot
+    valid: jax.Array   # [T, S] bool
+
+
+class HotCtx(NamedTuple):
+    """Everything tick step 3 hands the active hotness provider."""
+    hstate: Any                    # provider state subtree (None = stateless)
+    prev_hot: jax.Array            # [L] post-lifecycle hot from last tick
+    accesses: jax.Array            # [L] f32 this tick
+    alive: jax.Array               # [L] bool
+    new: jax.Array                 # [L] bool pages allocated this tick
+    tier: jax.Array                # [L] int32, post-allocation
+    last_access: jax.Array         # [L] int32, post-recency-update
+    owner: jax.Array               # [L] int32 (sentinel T = free)
+    owner_c: jax.Array             # [L] int32 gather-safe owner
+    t: jax.Array                   # scalar int32
+    rows: Callable[[], RowSpace]   # lazy tenant rowspace (see RowSpace)
+    strategy: SEL.Strategy         # the ownership provider's selection ops
+
+
+class PromoCand(NamedTuple):
+    """Promotion-candidate ops for tick step 6 (post-demotion tier view)."""
+    cand_t: jax.Array                                  # [T] candidate count
+    select: Callable[[jax.Array], SEL.Selection]       # quotas [T]
+    select_global: Callable[[jax.Array], SEL.Selection]  # scalar budget (tpp)
+
+
+class HotnessView(NamedTuple):
+    """One tick's hotness products, consumed by tick steps 3-6b."""
+    hstate: Any                    # carried into the next TierState
+    hot: jax.Array                 # [L] dense hotness (state carry/telemetry)
+    demand_t: jax.Array            # [T] promotion demand (step 4, pre-cap)
+    promo_cand: Callable[[jax.Array, jax.Array], PromoCand]  # (tier, demoted)
+    demote: Callable[[jax.Array, jax.Array], SEL.Selection]  # (fast_mask, q[T])
+    demote_global: Callable[[jax.Array, jax.Array], SEL.Selection]  # (m, q)
+
+
+class HotnessProvider(NamedTuple):
+    name: str
+    init: Callable[[], Any]        # build the state subtree (None = stateless)
+    step: Callable[[HotCtx], HotnessView]
+
+
+# ------------------------------------------------------- provider specs ----
+class SampledSpec(NamedTuple):
+    frac: float = 0.25    # fraction of pages instrumented per tick
+    seed: int = 0
+
+
+class SketchSpec(NamedTuple):
+    depth: int = 2        # count-min rows
+    width: int = 1 << 15  # buckets per row (power of two)
+    n_cand: int = 128     # per-tenant promotion-candidate buffer
+    n_cold: int = 128     # per-tenant demotion-victim buffer
+    probe: int = 4096     # sampled access lanes per tick (split across T)
+    seed: int = 0
+
+
+class NeomemSpec(NamedTuple):
+    n_report: int = 256   # hot pages per tenant in each device report
+
+
+class SketchState(NamedTuple):
+    cms: jax.Array        # [depth, width] f32 decayed counts
+    cand_page: jax.Array  # [T, n_cand] int32, est-descending, -1 empty
+    cold_page: jax.Array  # [T, n_cold] int32, cold-descending, -1 empty
+
+
+class NeomemState(NamedTuple):
+    report_page: jax.Array   # [T, n_report] int32 last tick's report
+    report_hot: jax.Array    # [T, n_report] f32 reported hotness
+
+
+# ------------------------------------------------- compact row selection ----
+def _row_select(pages: jax.Array, take: jax.Array, quotas: jax.Array,
+                n_pages: int) -> SEL.Selection:
+    """Quota select over score-ordered buffer rows ([T, N], best lane
+    first): per-tenant top-quota is an exclusive running count over the
+    eligible lanes — no sort, no top_k, O(T*N) total."""
+    order = jnp.cumsum(take.astype(jnp.int32), axis=1) - take
+    sel = take & (order < quotas[:, None])
+    flat = jnp.where(sel, pages, n_pages).reshape(-1)
+    mask = jnp.zeros((n_pages,), bool).at[flat].set(True, mode="drop")
+    return SEL.Selection(mask=mask, pages=pages, take=sel,
+                         counts=sel.sum(axis=1).astype(jnp.int32))
+
+
+def _flat_select(score: jax.Array, pages: jax.Array, take: jax.Array,
+                 quota: jax.Array, k_cap: int, n_pages: int) -> SEL.Selection:
+    """Tenant-blind top-quota over flattened buffer lanes (the tpp global
+    scan, restricted to the provider's tracked candidates)."""
+    s = jnp.where(take, score, -jnp.inf).reshape(-1)
+    k = min(k_cap, s.shape[0])
+    vals, idx = jax.lax.top_k(s, k)
+    tk = (jnp.arange(k) < quota) & (vals > -jnp.inf)
+    pg = pages.reshape(-1)[idx]
+    mask = jnp.zeros((n_pages,), bool).at[
+        jnp.where(tk, pg, n_pages)].set(True, mode="drop")
+    return SEL.Selection(mask, None, None, None)
+
+
+# ------------------------------------------------------------- providers ----
+def _dense_view(cfg: TieringConfig, k_max: int, ctx: HotCtx,
+                hot: jax.Array, hstate: Any) -> HotnessView:
+    """The exact engine's candidate/selection ops over a dense hot vector —
+    shared by ``exact`` (its own EWMA) and ``sampled`` (scaled-subset EWMA),
+    and the demotion side of ``neomem``."""
+    T = cfg.n_tenants
+    thr = cfg.promo_hot_threshold
+    strat = ctx.strategy
+    cand_pre = (ctx.tier == TIER_SLOW) & (hot >= thr) & ctx.alive
+    demand_t = strat.by_tenant(cand_pre.astype(jnp.int32), ctx.owner)
+    cold = cold_score(ctx.t, ctx.last_access, hot)
+
+    def demote(fast_mask, quotas):
+        return strat.select(cold, ctx.owner, fast_mask, quotas)
+
+    def demote_global(fast_mask, quota):
+        return SEL.Selection(
+            SEL.select_global(cold, fast_mask, quota, k_max * T),
+            None, None, None)
+
+    def promo_cand(tier, demoted):
+        cand = (tier == TIER_SLOW) & (hot >= thr) & ctx.alive & ~demoted
+        cand_t = strat.by_tenant(cand.astype(jnp.int32), ctx.owner)
+        return PromoCand(
+            cand_t,
+            lambda quotas: strat.select(hot, ctx.owner, cand, quotas),
+            lambda quota: SEL.Selection(
+                SEL.select_global(hot, cand, quota, k_max * T),
+                None, None, None))
+
+    return HotnessView(hstate=hstate, hot=hot, demand_t=demand_t,
+                       promo_cand=promo_cand, demote=demote,
+                       demote_global=demote_global)
+
+
+def exact_hotness(cfg: TieringConfig, n_pages: int,
+                  k_max: int) -> HotnessProvider:
+    """Today's dense EWMA — bit-exact with the pre-seam tick."""
+    def step(ctx: HotCtx) -> HotnessView:
+        hot = jnp.where(ctx.alive,
+                        cfg.hot_decay * ctx.prev_hot + ctx.accesses, 0.0)
+        return _dense_view(cfg, k_max, ctx, hot, None)
+
+    return HotnessProvider("exact", lambda: None, step)
+
+
+def sampled_hotness(cfg: TieringConfig, n_pages: int, k_max: int,
+                    spec: SampledSpec) -> HotnessProvider:
+    """Dense EWMA fed by a rotating page subset with unbiased scaling.
+
+    The subset is a multiplicative-hash residue class shifted by the tick
+    (page*A + t*B mod 2^20 < frac*2^20, A and B odd): deterministic, O(L)
+    elementwise, every page is instrumented ``frac`` of ticks, and the
+    1/frac scaling keeps E[hot] equal to the exact EWMA. Stateless — the
+    schedule is a function of (page, t)."""
+    M = 1 << 20
+    thresh = np.int32(min(max(spec.frac, 0.0), 1.0) * M)
+    A = np.int32(2 * ((spec.seed * 131) % 1024) + 1093)   # odd, < 2**12
+    B = np.int32(2 * ((spec.seed * 37) % 1024) + 40503)   # odd, < 2**16
+    inv = np.float32(1.0 / max(spec.frac, 1e-9))
+    page_mix = None
+
+    def step(ctx: HotCtx) -> HotnessView:
+        nonlocal page_mix
+        if page_mix is None:
+            page_mix = jnp.arange(n_pages, dtype=jnp.int32) * A
+        smask = ((page_mix + ctx.t * B) & (M - 1)) < thresh
+        acc = jnp.where(smask, ctx.accesses * inv, 0.0)
+        hot = jnp.where(ctx.alive, cfg.hot_decay * ctx.prev_hot + acc, 0.0)
+        return _dense_view(cfg, k_max, ctx, hot, None)
+
+    return HotnessProvider("sampled", lambda: None, step)
+
+
+def sketch_hotness(cfg: TieringConfig, n_pages: int, k_max: int,
+                   spec: SketchSpec) -> HotnessProvider:
+    """Count-min hotness with per-tenant candidate/victim buffers.
+
+    Per tick: probe ``probe`` tenant-rowspace lanes (full enumeration when
+    a tenant's rowspace fits the per-tenant budget, so small presets are
+    covered exactly), scatter their scaled accesses into the decayed
+    sketch, then refresh two [T, N] buffers by merging last tick's entries
+    with the fresh probes under one batched top_k per buffer — candidates
+    ranked by estimate, victims by ``cold_score``. Steps 4-6b then select
+    from the buffers with running-count quota cuts: the candidate path is
+    O(probe + T*N) regardless of L.
+
+    Probe lanes are presented in ascending page order (full enumeration is
+    ``arange``; random probes are row-sorted), so top_k's lower-lane
+    tie-break inherits the exact engine's lower-page-wins rule.
+    """
+    T = cfg.n_tenants
+    L = n_pages
+    thr = cfg.promo_hot_threshold
+    params = CM.cms_params(spec.depth, spec.width, cfg.hot_decay, spec.seed)
+    # hash int32 safety: see core/cms.py (pages + width) * mult < 2**31
+    assert (L + spec.width) * CM.MULT_MAX < 2 ** 31, (L, spec.width)
+    base_key = jax.random.PRNGKey(spec.seed)
+    r = max(spec.probe // T, 1)
+
+    def init() -> SketchState:
+        return SketchState(
+            cms=CM.make_cms(params),
+            cand_page=jnp.full((T, spec.n_cand), -1, jnp.int32),
+            cold_page=jnp.full((T, spec.n_cold), -1, jnp.int32))
+
+    def step(ctx: HotCtx) -> HotnessView:
+        st: SketchState = ctx.hstate
+        rows = ctx.rows()
+        S = rows.page.shape[1]
+        row_t = jnp.arange(T, dtype=jnp.int32)[:, None]
+
+        # ---- probe: sampled access lanes in tenant-local space ----------
+        if r >= S:         # full coverage (small presets): exact stream
+            u = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None, :], (T, S))
+            dup_u = jnp.zeros((T, S), bool)
+            scale = jnp.float32(1.0)
+        else:              # with-replacement draws; E[hits] = r/S per page
+            key = jax.random.fold_in(base_key, ctx.t)
+            u = jnp.sort(jax.random.randint(key, (T, r), 0, S, jnp.int32),
+                         axis=1)
+            dup_u = jnp.concatenate(
+                [jnp.zeros((T, 1), bool), u[:, 1:] == u[:, :-1]], axis=1)
+            scale = jnp.float32(S) / jnp.float32(r)
+        sp = jnp.take_along_axis(rows.page, u, axis=1)        # [T, rr]
+        spc = jnp.maximum(sp, 0)
+        in_row = jnp.take_along_axis(rows.valid, u, axis=1) & ~dup_u
+        sv = in_row & ctx.alive[spc]
+        if r >= S and L <= spec.width:
+            # full coverage + injective hash (the whole pool is one
+            # collision-free window): each page owns its buckets, so the
+            # recurrence can be written per-lane in the exact engine's
+            # ``where(alive, decay * prev + accesses, 0)`` form and
+            # scatter-SET — estimates then track the dense EWMA bitwise
+            # (a plain decay-then-scatter-add rounds differently and
+            # threshold crossings drift by ticks). Dead lanes write 0:
+            # the page-free counter reset.
+            prev = CM.cms_estimate(params, st.cms, spc)
+            val = jnp.where(sv, jnp.float32(params.decay) * prev
+                            + ctx.accesses[spc], 0.0)
+            sk = CM.cms_assign(params, st.cms, spc, val, in_row)
+        else:
+            amt = jnp.where(sv, ctx.accesses[spc] * scale, 0.0)
+            sk = CM.cms_add(params, CM.cms_decay(params, st.cms), spc,
+                            amt, sv)
+            # probed DEAD pages reset their counters (the page-free
+            # hook): the exact engine zeroes hot on death, and without
+            # this a revived page inherits its previous life's residue
+            # and outranks what the exact engine would promote. Deaths
+            # are rare — cond-skip the scatter on all-alive probes (an
+            # empty clear is a value no-op).
+            dead = in_row & ~ctx.alive[spc]
+            sk = jax.lax.cond(
+                dead.any(),
+                lambda c: CM.cms_clear(params, c, spc, dead),
+                lambda c: c, sk)
+
+        # ---- refresh the candidate/victim buffers -----------------------
+        def merge(buf, n, score_of):
+            if r >= S:
+                # full coverage: the fresh probes already enumerate every
+                # page in ascending order, so the buffer is a pure function
+                # of the current sketch and top_k's lower-lane tie-break
+                # reproduces the exact engine's lower-page-wins rule
+                pool = jnp.where(sv, sp, -1)
+            else:
+                # keep last tick's entries so hot pages survive being
+                # unsampled; a probe already resident in the buffer keeps
+                # its buffer lane (rows never hold a page twice). The
+                # membership test is a [T, r, N] broadcast compare —
+                # constant in L, and cheaper than an [L] bitmap
+                # scatter/gather round-trip (XLA CPU scatters serialize).
+                resident = (sp[:, :, None] == buf[:, None, :]).any(axis=2)
+                pool = jnp.concatenate(
+                    [buf, jnp.where(sv & ~resident, sp, -1)], axis=1)
+            pc = jnp.maximum(pool, 0)
+            ok = (pool >= 0) & ctx.alive[pc] & (ctx.owner[pc] == row_t)
+            est = CM.cms_estimate(params, sk, pc)
+            return CM.topn_rows(score_of(pc, est), pool, ok, n)
+
+        cand_page, cand_est = merge(st.cand_page, spec.n_cand,
+                                    lambda pc, est: est)
+        cold_page, cold_val = merge(
+            st.cold_page, spec.n_cold,
+            lambda pc, est: cold_score(ctx.t, ctx.last_access[pc], est))
+
+        cp = jnp.maximum(cand_page, 0)
+        cvalid = cand_page >= 0
+        dp = jnp.maximum(cold_page, 0)
+        dvalid = cold_page >= 0
+        dest = CM.cms_estimate(params, sk, dp)
+
+        # dense hot carry/telemetry: tracked estimates, 0 elsewhere (the
+        # ring and the churn reclaim read it; untracked pages rank coldest)
+        hot = jnp.zeros((L,), jnp.float32).at[
+            jnp.concatenate([jnp.where(cvalid, cp, L),
+                             jnp.where(dvalid, dp, L)], axis=1).reshape(-1)
+        ].set(jnp.concatenate(
+            [jnp.where(cvalid, cand_est, 0.0),
+             jnp.where(dvalid, dest, 0.0)], axis=1).reshape(-1), mode="drop")
+
+        is_cand = (cvalid & (ctx.tier[cp] == TIER_SLOW) & ctx.alive[cp]
+                   & (cand_est >= thr))
+        demand_t = is_cand.sum(axis=1).astype(jnp.int32)
+
+        def promo_cand(tier, demoted):
+            take = (cvalid & (tier[cp] == TIER_SLOW) & ctx.alive[cp]
+                    & (cand_est >= thr) & ~demoted[cp])
+            return PromoCand(
+                take.sum(axis=1).astype(jnp.int32),
+                lambda quotas: _row_select(cp, take, quotas, L),
+                lambda quota: _flat_select(cand_est, cp, take, quota,
+                                           k_max * T, L))
+
+        def demote(fast_mask, quotas):
+            take = dvalid & fast_mask[dp] & ctx.alive[dp]
+            return _row_select(dp, take, quotas, L)
+
+        def demote_global(fast_mask, quota):
+            take = dvalid & fast_mask[dp] & ctx.alive[dp]
+            return _flat_select(cold_val, dp, take, quota, k_max * T, L)
+
+        return HotnessView(
+            hstate=SketchState(cms=sk, cand_page=cand_page,
+                               cold_page=cold_page),
+            hot=hot, demand_t=demand_t, promo_cand=promo_cand,
+            demote=demote, demote_global=demote_global)
+
+    return HotnessProvider("sketch", init, step)
+
+
+def neomem_hotness(cfg: TieringConfig, n_pages: int, k_max: int,
+                   spec: NeomemSpec) -> HotnessProvider:
+    """Emulated device-side hot-page tracker (NeoMem direction).
+
+    The "device" counts every access exactly (it sits on the CXL path, so
+    full-rate counting is free for the OS) and publishes a per-tenant
+    top-N hot-page report each tick. The OS-side promotion pipeline
+    consumes the report ONE TICK LATE — hardware/OS asynchrony is the
+    semantic difference vs ``exact`` — while demotion keeps the OS's own
+    dense LRU metadata (the device only sees CXL-side traffic)."""
+    T = cfg.n_tenants
+    L = n_pages
+    thr = cfg.promo_hot_threshold
+
+    def init() -> NeomemState:
+        return NeomemState(
+            report_page=jnp.full((T, spec.n_report), -1, jnp.int32),
+            report_hot=jnp.zeros((T, spec.n_report), jnp.float32))
+
+    def step(ctx: HotCtx) -> HotnessView:
+        st: NeomemState = ctx.hstate
+        hot = jnp.where(ctx.alive,
+                        cfg.hot_decay * ctx.prev_hot + ctx.accesses, 0.0)
+        view = _dense_view(cfg, k_max, ctx, hot, None)
+        row_t = jnp.arange(T, dtype=jnp.int32)[:, None]
+
+        # OS promotion path: last tick's report (reported hotness ranks and
+        # gates; stale entries die on the alive/owner checks)
+        rp = jnp.maximum(st.report_page, 0)
+        rvalid = ((st.report_page >= 0) & ctx.alive[rp]
+                  & (ctx.owner[rp] == row_t))
+        rhot = st.report_hot
+        is_cand = rvalid & (ctx.tier[rp] == TIER_SLOW) & (rhot >= thr)
+        demand_t = is_cand.sum(axis=1).astype(jnp.int32)
+
+        def promo_cand(tier, demoted):
+            take = (rvalid & (tier[rp] == TIER_SLOW) & (rhot >= thr)
+                    & ~demoted[rp])
+            return PromoCand(
+                take.sum(axis=1).astype(jnp.int32),
+                lambda quotas: _row_select(rp, take, quotas, L),
+                lambda quota: _flat_select(rhot, rp, take, quota,
+                                           k_max * T, L))
+
+        # this tick's device report, delivered next tick
+        rows = ctx.rows()
+        rpg = jnp.maximum(rows.page, 0)
+        rok = rows.valid & ctx.alive[rpg]
+        pages, vals = CM.topn_rows(hot[rpg], rows.page, rok, spec.n_report)
+        hstate = NeomemState(report_page=pages,
+                             report_hot=jnp.where(pages >= 0, vals, 0.0))
+        return view._replace(hstate=hstate, demand_t=demand_t,
+                             promo_cand=promo_cand)
+
+    return HotnessProvider("neomem", init, step)
+
+
+# ------------------------------------------------------ resolution / init ----
+def _norm(spec):
+    if isinstance(spec, str):
+        if spec not in HOTNESS_PROVIDERS:
+            raise ValueError(
+                f"unknown hotness provider {spec!r}; "
+                f"expected one of {HOTNESS_PROVIDERS}")
+        return {"exact": None, "sampled": SampledSpec(),
+                "sketch": SketchSpec(), "neomem": NeomemSpec()}[spec]
+    return spec
+
+
+def resolve_hotness(spec, cfg: TieringConfig, n_pages: int,
+                    k_max: int) -> HotnessProvider:
+    """Accepts None/"exact" (the default dense EWMA), a provider name, a
+    spec NamedTuple, or a prebuilt HotnessProvider."""
+    spec = _norm(spec)
+    if spec is None:
+        return exact_hotness(cfg, n_pages, k_max)
+    if isinstance(spec, HotnessProvider):
+        return spec
+    if isinstance(spec, SampledSpec):
+        return sampled_hotness(cfg, n_pages, k_max, spec)
+    if isinstance(spec, SketchSpec):
+        return sketch_hotness(cfg, n_pages, k_max, spec)
+    if isinstance(spec, NeomemSpec):
+        return neomem_hotness(cfg, n_pages, k_max, spec)
+    raise TypeError(f"not a hotness provider spec: {spec!r}")
+
+
+def init_hotness(spec, cfg: TieringConfig, n_pages: int):
+    """The state subtree for ``init_state(..., hotness=...)``. None for
+    stateless providers — states built without one keep their pre-existing
+    tree structure, jaxprs and golden traces bit-exact (the det/attrib
+    optional-subtree pattern)."""
+    return resolve_hotness(spec, cfg, n_pages, k_max=256).init()
+
+
+def static_rowspace(owner: np.ndarray, n_tenants: int) -> RowSpace:
+    """Trace-time RowSpace for a static owner vector (any permutation)."""
+    owner = np.asarray(owner)
+    counts = np.bincount(owner, minlength=n_tenants)[:n_tenants]
+    S = max(int(counts.max()) if counts.size else 1, 1)
+    page = np.full((n_tenants, S), -1, np.int32)
+    for ti in range(n_tenants):          # host-side, once per build
+        ids = np.nonzero(owner == ti)[0]
+        page[ti, :ids.size] = ids
+    return RowSpace(page=jnp.asarray(page), valid=jnp.asarray(page >= 0))

@@ -108,8 +108,19 @@ def select_top_quota_rows(score: jax.Array, active: jax.Array,
 
 
 def by_tenant_contiguous(x: jax.Array, layout: ContiguousLayout) -> jax.Array:
-    """Per-tenant sum as cumsum + static boundary gather (O(L), no scatter).
-    Exact for integers; float association differs from a matmul reduce."""
+    """Per-tenant sum, O(L), no scatter.
+
+    Integers sum associatively, so the int path uses a vectorized row
+    gather + axis reduce (~7x cheaper than a sequential length-L cumsum on
+    CPU). Floats keep the original cumsum + boundary-gather association:
+    the golden traces pin the f32 perf-model reductions bitwise, and a
+    reassociated sum would shift them."""
+    if x.dtype == jnp.bool_:
+        x = x.astype(jnp.int32)
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        rows = jnp.where(layout.row_valid, x[layout.row_page],
+                         jnp.zeros((), x.dtype))
+        return rows.sum(axis=1, dtype=x.dtype)
     cs = jnp.concatenate([jnp.zeros((1,), x.dtype), jnp.cumsum(x)])
     return cs[layout.bounds[1:]] - cs[layout.bounds[:-1]]
 

@@ -148,18 +148,18 @@ def build_result(mode: str, cfg: TieringConfig, final, outs,
 
 def simulate(cfg: TieringConfig, tenants: List[TenantWorkload], ticks: int,
              mode: str = "equilibria", k_max: int = 256,
-             impl: str = "batched") -> SimResult:
+             impl: str = "batched", hotness=None) -> SimResult:
     owner, accesses, alive = build_trace(tenants, ticks)
     cfg = cfg.with_(n_tenants=len(tenants))
     final, outs = run_engine(cfg, owner, accesses, alive, mode=mode,
-                             k_max=k_max, impl=impl)
+                             k_max=k_max, impl=impl, hotness=hotness)
     return build_result(mode, cfg, final, outs,
                         tenant_activity(owner, alive, cfg.n_tenants))
 
 
 def simulate_churn(cfg: TieringConfig, slots: List[ChurnSlot], ticks: int,
                    mode: str = "equilibria", k_max: int = 256,
-                   n_pages: Optional[int] = None) -> SimResult:
+                   n_pages: Optional[int] = None, hotness=None) -> SimResult:
     """Run a dynamic-roster scenario through the churn engine
     (core/churn.py): slots' lifecycle episodes become in-graph
     arrival/departure/resize events; ownership and the free pool are engine
@@ -168,7 +168,7 @@ def simulate_churn(cfg: TieringConfig, slots: List[ChurnSlot], ticks: int,
     schedule = build_churn_schedule(slots, ticks)
     cfg = cfg.with_(n_tenants=len(slots))
     final, outs = run_churn_engine(cfg, schedule, mode=mode, k_max=k_max,
-                                   n_pages=n_pages)
+                                   n_pages=n_pages, hotness=hotness)
     return build_result(mode, cfg, final, outs, schedule.want > 0)
 
 
@@ -235,14 +235,17 @@ def preset_churn_events(name: str, ticks: int = 240) -> Tuple[int, int]:
 
 
 def simulate_preset(name: str, ticks: int = 300, mode: str = "equilibria",
-                    k_max: int = 128, **cfg_overrides) -> SimResult:
+                    k_max: int = 128, hotness=None,
+                    **cfg_overrides) -> SimResult:
     """Run a named scenario preset (``PRESETS`` or ``CHURN_PRESETS``)."""
     if name in CHURN_PRESETS:
         cfg, slots = CHURN_PRESETS[name]()
         if cfg_overrides:
             cfg = cfg.with_(**cfg_overrides)
-        return simulate_churn(cfg, slots, ticks, mode=mode, k_max=k_max)
+        return simulate_churn(cfg, slots, ticks, mode=mode, k_max=k_max,
+                              hotness=hotness)
     cfg, tenants = PRESETS[name]()
     if cfg_overrides:
         cfg = cfg.with_(**cfg_overrides)
-    return simulate(cfg, tenants, ticks, mode=mode, k_max=k_max)
+    return simulate(cfg, tenants, ticks, mode=mode, k_max=k_max,
+                    hotness=hotness)

@@ -13,7 +13,7 @@ sentinel) belongs to the free pool.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -84,6 +84,10 @@ class TierState(NamedTuple):
     # per-tenant slowdown attribution ledger (obs/attribution.py) — the
     # same optional-subtree pattern as ``det``
     attrib: Optional[AttributionState] = None
+    # hotness-provider state (core/hotness.py): None for the stateless
+    # providers (exact/sampled), a SketchState/NeomemState pytree otherwise
+    # — the same optional-subtree pattern as ``det``/``attrib``
+    hotness: Optional[Any] = None
 
 
 def zero_counters(n_tenants: int) -> Counters:
@@ -93,12 +97,16 @@ def zero_counters(n_tenants: int) -> Counters:
 
 def init_state(cfg: TieringConfig, n_pages: int, owner=None,
                detector: Optional[DetectorSpec] = None,
-               attrib: Optional[AttributionSpec] = None) -> TierState:
+               attrib: Optional[AttributionSpec] = None,
+               hotness=None) -> TierState:
     """``owner``: [n_pages] int tenant ids, or None for an all-free pool
     (the dynamic-ownership engine's starting point). ``detector``: a
     ``DetectorSpec`` to carry streaming pathology detectors in the state;
     ``attrib``: an ``AttributionSpec`` to carry the slowdown-attribution
-    ledger (each must match the spec passed to the tick builder)."""
+    ledger; ``hotness``: a hotness-provider spec (core/hotness.py) to carry
+    that provider's state (each must match the spec passed to the tick
+    builder)."""
+    from repro.core.hotness import init_hotness  # state <-> hotness cycle
     T = cfg.n_tenants
     owner_j = (jnp.full((n_pages,), T, jnp.int32) if owner is None
                else jnp.asarray(owner, jnp.int32))
@@ -121,6 +129,7 @@ def init_state(cfg: TieringConfig, n_pages: int, owner=None,
         t=jnp.zeros((), jnp.int32),
         det=None if detector is None else init_detector(detector),
         attrib=None if attrib is None else init_attribution(attrib),
+        hotness=init_hotness(hotness, cfg, n_pages),
     )
 
 

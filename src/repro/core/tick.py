@@ -53,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import TieringConfig
+from repro.core import hotness as HOT
 from repro.core import policy as P
 from repro.core import select as SEL
 from repro.core.state import (TIER_FAST, TIER_NONE, TIER_SLOW, Counters,
@@ -99,6 +100,11 @@ class Prepared(NamedTuple):
     ring: object              # MigrationRing
     pol: TenantPolicy         # effective policy this tick
     freed_t: jax.Array        # [T] pages freed by the lifecycle step
+    rows: Callable[[], HOT.RowSpace]  # lazy tenant-local page rowspace for
+    #                           hotness providers that iterate per-tenant
+    #                           footprints (sketch probes, neomem reports).
+    #                           A thunk: the exact provider never calls it,
+    #                           so the default tick carries zero extra ops.
     promo_scale: jax.Array    # [T] controller carry-ins --------------------
     steady: jax.Array
     mitigated_prev: jax.Array
@@ -124,6 +130,12 @@ def static_ownership(cfg: TieringConfig, owner: np.ndarray, k_max: int,
     owner_j = jnp.asarray(owner, jnp.int32)
     strategy = SEL.static_strategy(owner, T, k_max, impl=impl)
     pol = make_policy(cfg)
+    rs_cache: list = []   # rowspace is a trace-time constant; build once
+
+    def rows() -> HOT.RowSpace:
+        if not rs_cache:
+            rs_cache.append(HOT.static_rowspace(np.asarray(owner), T))
+        return rs_cache[0]
 
     def prepare(state: TierState, inputs) -> Prepared:
         accesses, alive = inputs
@@ -131,9 +143,16 @@ def static_ownership(cfg: TieringConfig, owner: np.ndarray, k_max: int,
         tier = state.tier.astype(jnp.int32)
         died = (tier != TIER_NONE) & ~alive
         freed_t = strategy.by_tenant(died.astype(jnp.int32), owner_j)
-        # fast-resident pages that die end their residency here (obs)
-        stats = OS.record_fast_exits(state.stats,
-                                     died & (tier == TIER_FAST), owner_j, t)
+        # fast-resident pages that die end their residency here (obs).
+        # Deaths are rare (most ticks: none), and the [L]-lane residency
+        # scatter is the single most expensive op in the tick at scale —
+        # cond-skip it on death-free ticks (an empty mask is a value no-op,
+        # so trajectories are unchanged).
+        stats = jax.lax.cond(
+            died.any(),
+            lambda s: OS.record_fast_exits(
+                s, died & (tier == TIER_FAST), owner_j, t),
+            lambda s: s, state.stats)
         tier = jnp.where(died, TIER_NONE, tier)
         # roster for the streaming detectors: any live page this tick —
         # identical to the offline harness's ``tenant_activity``
@@ -144,7 +163,7 @@ def static_ownership(cfg: TieringConfig, owner: np.ndarray, k_max: int,
             owner=state.owner, owner_c=owner_j, alive=alive, active=active,
             accesses=accesses,
             tier=tier, hot=state.hot, table=state.table, stats=stats,
-            ring=state.ring, pol=pol, freed_t=freed_t,
+            ring=state.ring, pol=pol, freed_t=freed_t, rows=rows,
             promo_scale=state.promo_scale, steady=state.steady,
             mitigated_prev=state.mitigated_prev,
             thrash_prev=state.thrash_prev, usage_prev=state.usage_prev,
@@ -193,12 +212,17 @@ def dynamic_ownership(cfg: TieringConfig, n_pages: int,
         delta = want - cnt
         arrived = (cnt == 0) & (delta > 0)
         release_q = jnp.minimum(jnp.maximum(-delta, 0), cnt)
-        cold0 = (t - state.last_access).astype(jnp.float32) * 1e3 - hot
+        cold0 = HOT.cold_score(t, state.last_access, hot)
         # k_cap = L: a departing tenant frees its whole footprint this tick
         reclaimed = SEL.select_top_quota(cold0, owner, owned, release_q, T, L)
         owner_c = jnp.minimum(owner, T - 1)
         rec_fast = reclaimed & (tier == TIER_FAST)
-        stats = OS.record_fast_exits(state.stats, rec_fast, owner_c, t)
+        # reclaims are event-driven (departure/shrink ticks only): cond-skip
+        # the [L]-lane residency scatter on quiet ticks (empty-mask no-op)
+        stats = jax.lax.cond(
+            rec_fast.any(),
+            lambda s: OS.record_fast_exits(s, rec_fast, owner_c, t),
+            lambda s: s, state.stats)
         freed_t = strategy.by_tenant(reclaimed.astype(jnp.int32), owner)
         owner = jnp.where(reclaimed, FREE, owner)
         tier = jnp.where(reclaimed, TIER_NONE, tier)
@@ -237,11 +261,23 @@ def dynamic_ownership(cfg: TieringConfig, n_pages: int,
         # ---- policy re-partition on membership --------------------------
         pol = P.repartition_policy(base_pol, active, n_fast - wmark, weights)
 
+        # tenant rowspace from the live owner vector, built only when a
+        # hotness provider asks (one [T, S] scatter; the exact provider's
+        # trace never contains it)
+        owner_f, owned_f, prank_f = owner, owned, prank
+
+        def rows() -> HOT.RowSpace:
+            row = jnp.where(owned_f, owner_f, T)
+            col = jnp.where(owned_f & (prank_f < S), prank_f, S)
+            page = jnp.full((T, S), -1, jnp.int32).at[row, col].set(
+                jnp.arange(L, dtype=jnp.int32), mode="drop")
+            return HOT.RowSpace(page=page, valid=page >= 0)
+
         return Prepared(
             owner=owner, owner_c=owner_c, alive=owned, active=active,
             accesses=accesses,
             tier=tier, hot=hot, table=table, stats=stats, ring=state.ring,
-            pol=pol, freed_t=freed_t,
+            pol=pol, freed_t=freed_t, rows=rows,
             promo_scale=promo_scale0, steady=steady0,
             mitigated_prev=mitigated0, thrash_prev=thrash_prev0,
             usage_prev=usage_prev0, freed_since=freed_since0)
@@ -254,7 +290,8 @@ def dynamic_ownership(cfg: TieringConfig, n_pages: int,
 def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
                    mode: str = "equilibria", k_max: int = 256,
                    detector: Optional[DS.DetectorSpec] = None,
-                   attrib: Optional[AT.AttributionSpec] = None):
+                   attrib: Optional[AT.AttributionSpec] = None,
+                   hotness=None):
     """Build the jittable unified tick over an ownership provider.
 
     One compiled tick per provider serves any schedule data: trace size,
@@ -272,6 +309,12 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
     When set, the state must carry a matching ``AttributionState``
     (``init_state(..., attrib=spec)``) and step 9c folds the promotion
     pipeline's quota cascade into the per-tenant stall ledger.
+
+    ``hotness``: optional hotness-provider spec (core/hotness.py) — a
+    provider name (``"exact"``/``"sampled"``/``"sketch"``/``"neomem"``), a
+    spec NamedTuple, or a prebuilt ``HotnessProvider``. None (the default)
+    is the exact dense EWMA, bit-exact with the pre-seam tick. Stateful
+    providers must be paired with ``init_state(..., hotness=spec)``.
     """
     assert mode in MODES, mode
     T = cfg.n_tenants
@@ -283,8 +326,8 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
     n_fast = cfg.n_fast_pages
     wmark = max(int(np.ceil(n_fast * cfg.watermark_free)), 1)
     by_tenant = provider.strategy.by_tenant
-    select_pt = provider.strategy.select
     alloc_ranks = provider.strategy.alloc_ranks
+    hot_provider = HOT.resolve_hotness(hotness, cfg, L, k_max)
 
     def tick(state: TierState, inputs) -> Tuple[TierState, TickOutput]:
         t = state.t
@@ -336,26 +379,46 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
                                   hotv[sel.pages], direction, t)
 
         # ---- 2. allocate new pages ----------------------------------------
+        # Allocation is event-driven (first grant / arrivals); most ticks
+        # have no new pages, so the whole block — the [L] rank cumsums and
+        # the entry stamps — runs under a cond. With ``new`` empty every
+        # branch output equals the pass-through (wheres over a False mask,
+        # a zero by_tenant, an empty entry stamp), so values are unchanged.
         new = alive & (tier == TIER_NONE)
         fast_usage = by_tenant((tier == TIER_FAST).astype(jnp.int32), owner)
         fast_free = n_fast - fast_usage.sum()
-        # per-tenant upper bound gating of *fast* placement
-        if mode in ("equilibria", "memtis") and cfg.enable_upper_bound:
-            ranks = alloc_ranks(new, owner)
-            bound = pol.upper_bound[owner_c]
-            under_bound = (bound == 0) | (fast_usage[owner_c] + ranks < bound)
-        else:
-            under_bound = jnp.ones((L,), bool)
-        elig = new & under_bound
-        grank = SEL.masked_rank(elig)
-        go_fast = elig & (grank < jnp.maximum(fast_free - wmark, 0))
-        tier = jnp.where(go_fast, TIER_FAST, jnp.where(new, TIER_SLOW, tier))
-        alloc_t = by_tenant(new.astype(jnp.int32), owner)
-        stats = OS.record_fast_entries(stats, go_fast, t)
 
-        # ---- 3. hotness / recency -----------------------------------------
-        hot = jnp.where(alive, cfg.hot_decay * prep.hot + accesses, 0.0)
+        def do_alloc(args):
+            tier_, stats_ = args
+            # per-tenant upper bound gating of *fast* placement
+            if mode in ("equilibria", "memtis") and cfg.enable_upper_bound:
+                ranks = alloc_ranks(new, owner)
+                bound = pol.upper_bound[owner_c]
+                under_bound = ((bound == 0)
+                               | (fast_usage[owner_c] + ranks < bound))
+            else:
+                under_bound = jnp.ones((L,), bool)
+            elig = new & under_bound
+            grank = SEL.masked_rank(elig)
+            go_fast = elig & (grank < jnp.maximum(fast_free - wmark, 0))
+            tier_ = jnp.where(go_fast, TIER_FAST,
+                              jnp.where(new, TIER_SLOW, tier_))
+            alloc_ = by_tenant(new.astype(jnp.int32), owner)
+            return tier_, alloc_, OS.record_fast_entries(stats_, go_fast, t)
+
+        tier, alloc_t, stats = jax.lax.cond(
+            new.any(), do_alloc,
+            lambda args: (args[0], jnp.zeros((T,), jnp.int32), args[1]),
+            (tier, stats))
+
+        # ---- 3. hotness / recency (the hotness-provider seam) -------------
         last_access = jnp.where(new | (accesses > 0), t, state.last_access)
+        hview = hot_provider.step(HOT.HotCtx(
+            hstate=state.hotness, prev_hot=prep.hot, accesses=accesses,
+            alive=alive, new=new, tier=tier, last_access=last_access,
+            owner=owner, owner_c=owner_c, t=t, rows=prep.rows,
+            strategy=provider.strategy))
+        hot = hview.hot
 
         # ---- 4. contention ------------------------------------------------
         # Local memory is contended when free space cannot absorb both the
@@ -363,9 +426,7 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
         # pressure drives background demotion, §IV-D).
         fast_usage = by_tenant((tier == TIER_FAST).astype(jnp.int32), owner)
         fast_free = n_fast - fast_usage.sum()
-        cand_pre = (tier == TIER_SLOW) & (hot >= cfg.promo_hot_threshold) & alive
-        demand_t = jnp.minimum(by_tenant(cand_pre.astype(jnp.int32), owner),
-                               k_max)
+        demand_t = jnp.minimum(hview.demand_t, k_max)
         promo_demand = jnp.minimum(demand_t.sum(), k_max)
         contended = fast_free < wmark + promo_demand
 
@@ -399,17 +460,13 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
         else:  # static
             quota = jnp.zeros((T,), jnp.int32)
 
-        age = (t - last_access).astype(jnp.float32)
-        cold_score = age * 1e3 - hot          # LRU order, hotness tiebreak
         fast_mask = tier == TIER_FAST
         if mode == "tpp":
-            dsel = SEL.Selection(
-                SEL.select_global(cold_score, fast_mask, quota, k_max * T),
-                None, None, None)
+            dsel = hview.demote_global(fast_mask, quota)
         elif mode == "static":
             dsel = SEL.Selection(jnp.zeros((L,), bool), None, None, None)
         else:
-            dsel = select_pt(cold_score, owner, fast_mask, quota)
+            dsel = hview.demote(fast_mask, quota)
         demoted = dsel.mask
         demo_t = sel_counts(dsel)
 
@@ -423,9 +480,8 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
 
         # ---- 6. promotion ---------------------------------------------------
         # just-demoted pages are not promotion candidates this tick
-        cand = ((tier == TIER_SLOW) & (hot >= cfg.promo_hot_threshold)
-                & alive & ~demoted)
-        cand_t = by_tenant(cand.astype(jnp.int32), owner)
+        pcand = hview.promo_cand(tier, demoted)
+        cand_t = pcand.cand_t
         throttled = jnp.zeros((T,), bool)
         q_base = q_eq2 = q_mit = None   # attribution quota cascade (9c)
         if mode == "equilibria":
@@ -474,13 +530,11 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
         p_quota = jnp.floor(p_quota.astype(jnp.float32) * scale).astype(jnp.int32)
 
         if mode == "tpp":
-            psel = SEL.Selection(
-                SEL.select_global(hot, cand, p_quota.sum(), k_max * T),
-                None, None, None)
+            psel = pcand.select_global(p_quota.sum())
         elif mode == "static":
             psel = SEL.Selection(jnp.zeros((L,), bool), None, None, None)
         else:
-            psel = select_pt(hot, owner, cand, p_quota)
+            psel = pcand.select(p_quota)
         promoted = psel.mask
         promo_t = sel_counts(psel)
         tier = jnp.where(promoted, TIER_FAST, tier)
@@ -499,9 +553,7 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
             over2 = jnp.where(pol.upper_bound > 0,
                               jnp.maximum(fast_usage2 - pol.upper_bound, 0), 0)
             over2 = jnp.minimum(over2, k_max)
-            age2 = (t - last_access).astype(jnp.float32)
-            cold2 = age2 * 1e3 - hot
-            ssel = select_pt(cold2, owner, tier == TIER_FAST, over2)
+            ssel = hview.demote(tier == TIER_FAST, over2)
             sync_dem = ssel.mask
             thr2 = sel_thrash(table, ssel)
             thrash_new = thrash_new + thr2
@@ -550,7 +602,7 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
             freed_since=prep.freed_since, steady=prep.steady,
             mitigated_prev=prep.mitigated_prev,
             table=table, stats=stats, ring=ring, t=t + 1, det=state.det,
-            attrib=state.attrib)
+            attrib=state.attrib, hotness=hview.hstate)
 
         # ---- 8. periodic controller (§IV-F) ---------------------------------
         def run_ctrl(s: TierState) -> TierState:

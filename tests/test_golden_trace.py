@@ -47,7 +47,19 @@ def _churn_small():
     return simulate_churn(cfg, slots, 80, k_max=32)
 
 
-SCENARIOS = {"static_small": _static_small, "churn_small": _churn_small}
+def _churn16_sketch():
+    """The sketch hotness provider on the churn16 preset: pins the
+    provider's decisions (and its dense-hot telemetry in the ring) under
+    dynamic ownership, so refactors can't silently shift sketch
+    semantics."""
+    from repro.core.simulator import CHURN_PRESETS
+    cfg, slots = CHURN_PRESETS["churn16"]()
+    cfg = cfg.with_(n_tenants=len(slots))
+    return simulate_churn(cfg, slots, 100, k_max=64, hotness="sketch")
+
+
+SCENARIOS = {"static_small": _static_small, "churn_small": _churn_small,
+             "churn16_sketch": _churn16_sketch}
 
 
 def _events_to_lists(ev) -> list:

@@ -1,0 +1,124 @@
+"""Property suite for the sketch-provider structures (core/cms.py), via
+the seeded-property shim (tests/proputil.py):
+
+  * count-min estimates are one-sided: estimate >= true count (collisions
+    only ever inflate; integer-valued f32 counts make the bound exact)
+  * decay is monotone: aging never raises a bucket or an estimate
+  * merge is associative and commutative on integer-valued counts
+  * top-N extraction is best-first and, under collision-free hashing,
+    contains the true argmax page
+"""
+import jax.numpy as jnp
+import numpy as np
+from proputil import seeded_property
+
+from repro.core import cms as CM
+
+N_PAGES = 512
+
+
+def _stream(rng, n_pages=N_PAGES):
+    n = int(rng.integers(8, 64))
+    pages = rng.integers(0, n_pages, n).astype(np.int32)
+    amounts = rng.integers(1, 16, n).astype(np.float32)   # integer-valued
+    valid = rng.random(n) < 0.9
+    return pages, amounts, valid
+
+
+@seeded_property()
+def test_cms_estimate_one_sided(seed):
+    rng = np.random.default_rng(seed)
+    p = CM.cms_params(depth=int(rng.integers(1, 4)), width=256,
+                      decay=1.0, seed=int(rng.integers(0, 16)))
+    cms = CM.make_cms(p)
+    true = np.zeros(N_PAGES, np.float64)
+    for _ in range(int(rng.integers(1, 4))):
+        pages, amounts, valid = _stream(rng)
+        cms = CM.cms_add(p, cms, jnp.asarray(pages), jnp.asarray(amounts),
+                         jnp.asarray(valid))
+        np.add.at(true, pages[valid], amounts[valid])
+    est = np.asarray(CM.cms_estimate(
+        p, cms, jnp.arange(N_PAGES, dtype=jnp.int32)))
+    # integer-valued f32 sums are exact, so the bound needs no epsilon
+    assert (est >= true).all()
+
+
+@seeded_property()
+def test_cms_decay_monotone(seed):
+    rng = np.random.default_rng(seed)
+    p = CM.cms_params(depth=2, width=256,
+                      decay=float(rng.uniform(0.05, 1.0)),
+                      seed=int(rng.integers(0, 16)))
+    cms = jnp.asarray(rng.random((p.depth, p.width)).astype(np.float32) * 64)
+    once = CM.cms_decay(p, cms)
+    twice = CM.cms_decay(p, once)
+    assert (np.asarray(once) <= np.asarray(cms)).all()
+    assert (np.asarray(twice) <= np.asarray(once)).all()
+    pages = jnp.asarray(rng.integers(0, N_PAGES, 32).astype(np.int32))
+    assert (np.asarray(CM.cms_estimate(p, once, pages))
+            <= np.asarray(CM.cms_estimate(p, cms, pages))).all()
+
+
+@seeded_property()
+def test_cms_merge_associative(seed):
+    rng = np.random.default_rng(seed)
+    p = CM.cms_params(depth=2, width=128, decay=1.0,
+                      seed=int(rng.integers(0, 16)))
+
+    def sketch():
+        cms = CM.make_cms(p)
+        pages, amounts, valid = _stream(rng)
+        return CM.cms_add(p, cms, jnp.asarray(pages), jnp.asarray(amounts),
+                          jnp.asarray(valid))
+
+    a, b, c = sketch(), sketch(), sketch()
+    left = CM.cms_merge(CM.cms_merge(a, b), c)
+    right = CM.cms_merge(a, CM.cms_merge(b, c))
+    # integer-valued counts stay exactly representable, so associativity
+    # holds bitwise, not just approximately
+    assert np.array_equal(np.asarray(left), np.asarray(right))
+    assert np.array_equal(np.asarray(CM.cms_merge(a, b)),
+                          np.asarray(CM.cms_merge(b, a)))
+
+
+@seeded_property()
+def test_topn_rows_best_first(seed):
+    rng = np.random.default_rng(seed)
+    T, M = 3, int(rng.integers(8, 48))
+    n = int(rng.integers(1, M + 4))
+    score = jnp.asarray(rng.random((T, M)).astype(np.float32))
+    page = jnp.asarray(rng.integers(0, N_PAGES, (T, M)).astype(np.int32))
+    valid = jnp.asarray(rng.random((T, M)) < 0.8)
+    pages, vals = CM.topn_rows(score, page, valid, n)
+    pages, vals = np.asarray(pages), np.asarray(vals)
+    sc, va = np.asarray(score), np.asarray(valid)
+    for t in range(T):
+        got = vals[t][pages[t] >= 0]
+        assert (got[:-1] >= got[1:]).all()          # best first
+        if va[t].any():
+            assert pages[t][0] == np.asarray(page)[t][
+                np.where(va[t], sc[t], -np.inf).argmax()]
+            assert (pages[t] >= 0).sum() == min(n, int(va[t].sum()))
+
+
+@seeded_property()
+def test_topn_contains_true_argmax_no_collisions(seed):
+    rng = np.random.default_rng(seed)
+    p = CM.cms_params(depth=2, width=1024, decay=1.0,
+                      seed=int(rng.integers(0, 64)))
+    pages = rng.choice(4096, size=32, replace=False).astype(np.int32)
+    counts = rng.integers(1, 100, 32).astype(np.float32)
+    counts[rng.integers(0, 32)] += 200               # unique argmax
+    cms = CM.cms_add(p, CM.make_cms(p), jnp.asarray(pages),
+                     jnp.asarray(counts), jnp.ones((32,), bool))
+    est = np.asarray(CM.cms_estimate(p, cms, jnp.asarray(pages)))
+    assert (est >= counts).all()
+    h = np.asarray(CM.cms_hash(p, jnp.asarray(pages)))
+    if any(np.unique(h[d]).size == pages.size for d in range(p.depth)):
+        # some row is injective on this page set, so min-over-rows is
+        # exact and ranking by estimate recovers the true argmax
+        assert np.array_equal(est, counts)
+        top, _ = CM.topn_rows(jnp.asarray(est)[None, :],
+                              jnp.asarray(pages)[None, :],
+                              jnp.ones((1, 32), bool), 8)
+        assert pages[counts.argmax()] in np.asarray(top)[0]
