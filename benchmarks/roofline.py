@@ -1,194 +1,299 @@
-"""Roofline analysis from the dry-run artifacts (deliverable g).
+"""Selection-core roofline: the Pallas segmented top-k kernels
+(kernels/select) vs the jnp selection paths at fleet scale, emitted to
+benchmarks/results/roofline.json.
 
-Per (arch x shape x mesh):
-  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
-  memory     = HLO_bytes_per_device / HBM_BW
-  collective = collective_bytes_per_device / ICI_BW
+  PYTHONPATH=src python -m benchmarks.roofline          # full matrix
+  PYTHONPATH=src python -m benchmarks.roofline --smoke  # CI gates
 
-XLA's HloCostAnalysis counts while bodies once, so per-cell FLOPs/bytes/
-collective traffic are reconstructed from the two unrolled reduced-depth
-probes by a linear fit in num_layers:
-  cost(L) = base + L * per_layer     (exact: the unrolled HLO has no loops)
-MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill/decode) with N = active params.
+Two measurements at T=64, L=262144 (the scale_sweep scenario PR 9
+measured a ~12.6 ms structural tick floor on):
+
+  select_ms — the isolated selection core: per-tenant masked,
+      quota-bounded top-k over the [L] page array, jitted alone.
+      * jnp_sort       — ``select.select_top_quota``: the composite-key
+                         ``lax.sort`` + gather path (O(L log L); what the
+                         dynamic provider and permuted owners pay).
+      * jnp_rows       — ``select.select_top_quota_rows``: the batched
+                         padded-row ``lax.top_k`` default for contiguous
+                         traces (the "batched"/"jnp" engine impl).
+      * kernel_ref     — the segmented top-k kernel's algorithm compiled
+                         by XLA (``kernels/select`` ops with impl="ref"
+                         via the ``pallas_ref`` strategy): tiled [T, S]
+                         rowspace, masking/scoring/quota fused per tile.
+      * pallas_interpret — the same kernel on the Pallas interpreter
+                         (bit-exactness witness; carries emulation
+                         overhead, not a performance number).
+  tick_ms — the full engine tick per impl ("jnp" vs "pallas_ref" vs
+      "pallas_interpret"), same scenario as benchmarks/hotness.py's
+      bench_tick so the numbers are directly comparable.
+
+On a machine without a TPU the compiled backend for the kernels is the
+ref oracle's XLA-CPU lowering — same algorithm, same tiling semantics;
+``impl="pallas"`` lowers the identical kernel through Mosaic on TPU. The
+interpret row documents that the Pallas kernel itself is bit-exact.
+
+CI gates (--smoke, wired into scripts/check.sh):
+  * the selection-core micro-bench is recorded in results/roofline.json
+    and kernel_ref beats jnp_sort by >= SELECT_SPEEDUP_MIN;
+  * the jnp default tick has not regressed: fresh tick_ms <=
+    TICK_REGRESSION_MAX x the exact-provider tick_ms recorded in
+    results/hotness.json at the same T/L;
+  * a quick interpret-vs-jnp tick equivalence assert (bitwise).
 """
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass
-from pathlib import Path
-from typing import Dict, List, Optional
+import os
+import sys
+import time
 
 import numpy as np
 
-from repro.configs import ARCH_IDS, get_config, reduced_depths, shape_cells
-from repro.configs.base import SHAPES
+T0, L0 = 64, 262144
+K_MAX = 256
+SELECT_SPEEDUP_MIN = 1.2   # kernel_ref vs jnp_sort, T=64/L=262144
+TICK_REGRESSION_MAX = 1.6  # jnp tick_ms vs results/hotness.json exact row
+SMOKE_BUDGET_S = 300.0
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "roofline.json")
+HOTNESS_RESULTS = os.path.join(os.path.dirname(__file__), "results",
+                               "hotness.json")
 
-RESULTS_DIR = Path(__file__).resolve().parent / "results" / "dryrun"
-
-PEAK_FLOPS = 197e12      # bf16 / chip
-HBM_BW = 819e9           # B/s / chip
-ICI_BW = 50e9            # B/s / link / chip
-
-
-def _load(arch: str, shape: str, suffix: str, tag: str = "") -> Optional[dict]:
-    name = f"{arch}_{shape}_{suffix}{('_' + tag) if tag else ''}.json"
-    p = RESULTS_DIR / name
-    if not p.exists():
-        return None
-    rec = json.loads(p.read_text())
-    return rec if rec.get("ok") else None
+SELECT_IMPLS = ("jnp_sort", "jnp_rows", "kernel_ref", "pallas_interpret")
+TICK_IMPLS = ("jnp", "pallas_ref", "pallas_interpret")
 
 
-def _cost(rec: dict) -> Dict[str, float]:
-    ca = rec.get("cost_analysis", {})
-    coll = rec.get("collectives", {})
-    return {"flops": float(ca.get("flops", 0.0)),
-            "bytes": float(ca.get("bytes accessed", 0.0)),
-            "coll": float(coll.get("total", 0.0)),
-            "layers": rec["num_layers"]}
+# ------------------------------------------------------------- scenario ----
+def _select_inputs(T: int, L: int, seed: int = 0):
+    """The scale_sweep selection scenario: contiguous owner, 30% hot pages,
+    demotion-style quotas."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    owner = np.repeat(np.arange(T, dtype=np.int32), L // T)
+    score = jnp.asarray(np.where(rng.random(L) < 0.3, 4.0, 0.1)
+                        .astype(np.float32) + rng.random(L).astype(np.float32))
+    active = jnp.asarray(rng.random(L) < 0.5)
+    quotas = jnp.asarray(rng.integers(0, K_MAX + 1, T).astype(np.int32))
+    return owner, score, active, quotas
 
 
-def extrapolate(arch: str, shape: str, tag: str = "") -> Optional[Dict[str, float]]:
-    """Linear-fit reduced-depth unrolled probes to the production depth."""
-    cfg = get_config(arch)
-    d1, d2 = reduced_depths(arch)
-    r1 = _load(arch, shape, f"pod_red{d1}", tag)
-    r2 = _load(arch, shape, f"pod_red{d2}", tag)
-    if r1 is None or r2 is None:
-        return None
-    c1, c2 = _cost(r1), _cost(r2)
-    out = {}
-    for k in ("flops", "bytes", "coll"):
-        per_layer = (c2[k] - c1[k]) / max(c2["layers"] - c1["layers"], 1)
-        out[k] = c1[k] + (cfg.num_layers - c1["layers"]) * per_layer
-        out[k + "_per_layer"] = per_layer
-    return out
+def _select_fn(impl: str, owner: np.ndarray, T: int, k_max: int):
+    """A jitted ``(score, active, quotas) -> [L] mask`` for one impl."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import select as S
 
+    owner_j = jnp.asarray(owner)
+    if impl == "jnp_sort":
+        def f(score, active, quotas):
+            return S.select_top_quota(score, owner_j, active, quotas, T,
+                                      k_max)
+    elif impl == "jnp_rows":
+        strat = S.static_strategy(owner, T, k_max, impl="batched")
 
-@dataclass
-class RooflineRow:
-    arch: str
-    shape: str
-    mesh: str
-    flops_dev: float
-    bytes_dev: float
-    coll_dev: float
-    compute_s: float
-    memory_s: float
-    collective_s: float
-    dominant: str
-    model_flops: float
-    useful_ratio: float            # MODEL_FLOPS / (HLO_FLOPs * chips)
-    roofline_frac: float           # ideal compute time / dominant term
-    note: str
-
-    def as_dict(self):
-        return self.__dict__.copy()
-
-
-def _model_flops(arch: str, shape_name: str) -> float:
-    cfg = get_config(arch)
-    sh = SHAPES[shape_name]
-    n = cfg.active_param_count()
-    if sh.kind == "train":
-        tokens = sh.global_batch * sh.seq_len
-        return 6.0 * n * tokens
-    if sh.kind == "prefill":
-        tokens = sh.global_batch * sh.seq_len
-        return 2.0 * n * tokens
-    return 2.0 * n * sh.global_batch       # decode: one token per sequence
-
-
-_NOTES = {
-    "compute": ("compute-bound: raise MFU via remat policy (save dots), "
-                "fuse softmax/elementwise, larger per-device batch"),
-    "memory": ("HBM-bound: shrink bytes/step — fewer f32 intermediates, "
-               "fused attention kernel (no score materialization), "
-               "narrower pool slack"),
-    "collective": ("ICI-bound: reshard to cut all-gathers (FSDP gather "
-                   "amortization, TP only where dims divide), overlap "
-                   "collectives with compute, int8-compress DP grads"),
-}
-
-
-def analyze_cell(arch: str, shape: str, mesh_suffix: str = "pod",
-                 tag: str = "") -> Optional[RooflineRow]:
-    full = _load(arch, shape, mesh_suffix, tag)
-    if full is None:
-        return None
-    chips = 512 if full["multi_pod"] else 256
-    if full.get("unrolled"):
-        # decode cells compile fully unrolled: cost analysis is exact
-        c = _cost(full)
-        ext = {"flops": c["flops"], "bytes": c["bytes"], "coll": c["coll"]}
+        def f(score, active, quotas):
+            return strat.select(score, owner_j, active, quotas).mask
     else:
-        ext = extrapolate(arch, shape, tag)
-    if ext is None:       # fall back to (undercounted) full-compile numbers
-        c = _cost(full)
-        ext = {"flops": c["flops"], "bytes": c["bytes"], "coll": c["coll"]}
-    compute = ext["flops"] / PEAK_FLOPS
-    memory = ext["bytes"] / HBM_BW
-    coll = ext["coll"] / ICI_BW
-    terms = {"compute": compute, "memory": memory, "collective": coll}
-    dominant = max(terms, key=terms.get)
-    mf = _model_flops(arch, shape)
-    useful = mf / max(ext["flops"] * chips, 1e-9)
-    ideal = mf / (chips * PEAK_FLOPS)
-    frac = ideal / max(terms[dominant], 1e-12)
-    return RooflineRow(
-        arch=arch, shape=shape, mesh=full["mesh"],
-        flops_dev=ext["flops"], bytes_dev=ext["bytes"], coll_dev=ext["coll"],
-        compute_s=compute, memory_s=memory, collective_s=coll,
-        dominant=dominant, model_flops=mf, useful_ratio=useful,
-        roofline_frac=min(frac, 1.0), note=_NOTES[dominant])
+        simpl = {"kernel_ref": "pallas_ref"}.get(impl, impl)
+        strat = S.static_strategy(owner, T, k_max, impl=simpl)
+
+        def f(score, active, quotas):
+            return strat.select(score, owner_j, active, quotas).mask
+    return jax.jit(f)
 
 
-def full_table(tag: str = "") -> List[RooflineRow]:
-    rows = []
-    for arch in ARCH_IDS:
-        for sh in shape_cells(arch):
-            r = analyze_cell(arch, sh.name, "pod", tag)
-            if r:
-                rows.append(r)
-    return rows
+def bench_select(T: int, L: int, impl: str, n_iters: int = 20) -> dict:
+    """Isolated selection-core wall time (jitted alone, steady state)."""
+    import jax
+    owner, score, active, quotas = _select_inputs(T, L)
+    f = _select_fn(impl, owner, T, K_MAX)
+    t0 = time.perf_counter()
+    out = f(score, active, quotas)
+    jax.block_until_ready(out)
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(n_iters):
+        out = f(score, active, quotas)
+    jax.block_until_ready(out)
+    ms = (time.perf_counter() - t0) / n_iters * 1e3
+    return {"impl": impl, "T": T, "L": L, "select_ms": round(ms, 3),
+            "compile_s": round(compile_s, 3), "n_iters": n_iters}
 
 
-def skipped_cells() -> List[tuple]:
-    out = []
-    for arch in ARCH_IDS:
-        names = {s.name for s in shape_cells(arch)}
-        for s in SHAPES:
-            if s not in names:
-                out.append((arch, s, "long_500k needs sub-quadratic attention"
-                            " (pure full-attention arch; DESIGN.md §4)"))
-    return out
+def bench_tick(T: int, L: int, impl: str, n_ticks: int = 15) -> dict:
+    """Full engine tick per selection impl (benchmarks/hotness.py's
+    bench_tick scenario, so rows are comparable across results files)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import TieringConfig
+    from repro.core.engine import make_tick
+    from repro.core.state import init_state
+
+    share = L // (4 * T)
+    cfg = TieringConfig(
+        n_tenants=T, n_fast_pages=L // 4, n_slow_pages=L,
+        lower_protection=(max(share // 2, 1),) * T,
+        upper_bound=(2 * share,) * T)
+    owner = np.repeat(np.arange(T, dtype=np.int32), L // T)
+    eimpl = "batched" if impl == "jnp" else impl
+    tick = jax.jit(make_tick(cfg, owner, "equilibria", k_max=K_MAX,
+                             impl=eimpl))
+    state = init_state(cfg, L, owner=owner)
+    rng = np.random.default_rng(0)
+    accesses = np.where(rng.random(L) < 0.3, 4.0, 0.1).astype(np.float32)
+    inputs = (jnp.asarray(accesses), jnp.ones((L,), bool))
+    t0 = time.perf_counter()
+    state, out = tick(state, inputs)
+    jax.block_until_ready(out)
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(n_ticks):
+        state, out = tick(state, inputs)
+    jax.block_until_ready(out)
+    tick_ms = (time.perf_counter() - t0) / n_ticks * 1e3
+    return {"impl": impl, "T": T, "L": L, "tick_ms": round(tick_ms, 3),
+            "compile_s": round(compile_s, 3), "n_ticks": n_ticks}
 
 
-def markdown_table(rows: List[RooflineRow]) -> str:
-    hdr = ("| arch | shape | flops/dev | bytes/dev | coll/dev | compute(s) | "
-           "memory(s) | collective(s) | dominant | 6ND/HLO | roofline frac |")
-    sep = "|" + "---|" * 11
-    lines = [hdr, sep]
-    for r in rows:
-        lines.append(
-            f"| {r.arch} | {r.shape} | {r.flops_dev:.2e} | {r.bytes_dev:.2e} "
-            f"| {r.coll_dev:.2e} | {r.compute_s:.2e} | {r.memory_s:.2e} "
-            f"| {r.collective_s:.2e} | **{r.dominant}** | {r.useful_ratio:.2f} "
-            f"| {r.roofline_frac:.1%} |")
-    for arch, shape, why in skipped_cells():
-        lines.append(f"| {arch} | {shape} | SKIP | | | | | | — | | ({why}) |")
-    return "\n".join(lines)
+# ---------------------------------------------------------- equivalence ----
+def quick_equivalence() -> bool:
+    """Bitwise interpret-vs-jnp tick agreement on a small scenario (the
+    full matrix lives in tests/test_select_kernels.py)."""
+    from repro.configs.base import TieringConfig
+    from repro.core.engine import run_engine
+    from repro.core.workloads import build_trace, ci_like, microbenchmark
+
+    cfg = TieringConfig(n_tenants=3, n_fast_pages=256, n_slow_pages=256,
+                        lower_protection=(96, 96, 0), upper_bound=(0, 120, 0))
+    tenants = [microbenchmark(150), microbenchmark(140, arrival=10),
+               ci_like(120, phase_len=20)]
+    owner, acc, alive = build_trace(tenants, 15)
+    _, a = run_engine(cfg, owner, acc, alive, k_max=64, impl="batched")
+    _, b = run_engine(cfg, owner, acc, alive, k_max=64,
+                      impl="pallas_interpret")
+    return all(np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f)))
+               for f in a._fields)
 
 
-def main():
+def _hotness_baseline_ms(T: int, L: int):
+    """The exact provider's tick_ms recorded by benchmarks/hotness.py at
+    (T, L), or None if hotness.json is absent."""
+    if not os.path.exists(HOTNESS_RESULTS):
+        return None
+    rec = json.loads(open(HOTNESS_RESULTS).read())
+    for row in rec.get("tick_ms", []):
+        if (row.get("provider") == "exact" and row.get("T") == T
+                and row.get("L") == L):
+            return float(row["tick_ms"])
+    return None
+
+
+def _write(select_rows, tick_rows, equiv_ok, note: str) -> None:
+    import jax
     from benchmarks.run import write_result
-    rows = full_table()
-    print(markdown_table(rows))
-    out = Path(__file__).resolve().parent / "results" / "roofline.json"
-    write_result(out, {"cells": [r.as_dict() for r in rows]},
-                 config={"archs": list(ARCH_IDS), "shapes": list(SHAPES)})
-    print(f"\n{len(rows)} cells analyzed -> {out}")
+
+    ref = {r["impl"]: r["select_ms"] for r in select_rows}
+    summary = {}
+    if "jnp_sort" in ref and "kernel_ref" in ref:
+        summary["select_speedup_kernel_vs_sort"] = round(
+            ref["jnp_sort"] / ref["kernel_ref"], 2)
+    if "jnp_rows" in ref and "kernel_ref" in ref:
+        summary["select_speedup_kernel_vs_rows"] = round(
+            ref["jnp_rows"] / ref["kernel_ref"], 2)
+    tick = {r["impl"]: r["tick_ms"] for r in tick_rows}
+    if "jnp" in tick and "pallas_ref" in tick:
+        summary["tick_speedup_kernel_vs_jnp"] = round(
+            tick["jnp"] / tick["pallas_ref"], 2)
+    out = {
+        "meta": {"backend": jax.default_backend(), "note": note},
+        "select_ms": select_rows,
+        "tick_ms": tick_rows,
+        "interpret_bit_exact": bool(equiv_ok),
+        "summary": summary,
+        "gates": {"select_speedup_min": SELECT_SPEEDUP_MIN,
+                  "tick_regression_max": TICK_REGRESSION_MAX},
+    }
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    write_result(RESULTS, out, config={
+        "T": T0, "L": L0, "k_max": K_MAX,
+        "select_impls": SELECT_IMPLS, "tick_impls": TICK_IMPLS})
+    print(f"wrote {RESULTS}")
+
+
+# ----------------------------------------------------------------- entry ----
+def smoke() -> int:
+    """Budgeted CI gate (see module docstring). Measures fresh but never
+    rewrites results/roofline.json — the committed artifact comes from a
+    full ``python -m benchmarks.roofline`` run (mirrors hotness --smoke)."""
+    t0 = time.perf_counter()
+    rows = [bench_select(T0, L0, i, n_iters=8)
+            for i in ("jnp_sort", "kernel_ref")]
+    for r in rows:
+        print(f"select_ms T={T0} L={L0} {r['impl']:16s} "
+              f"{r['select_ms']:8.3f}ms", flush=True)
+    tick_jnp = bench_tick(T0, L0, "jnp", n_ticks=8)
+    print(f"tick_ms   T={T0} L={L0} {'jnp':16s} "
+          f"{tick_jnp['tick_ms']:8.3f}ms", flush=True)
+    equiv = quick_equivalence()
+
+    ms = {r["impl"]: r["select_ms"] for r in rows}
+    speedup = ms["jnp_sort"] / ms["kernel_ref"]
+    ok_rec = False
+    if os.path.exists(RESULTS):
+        rec = json.loads(open(RESULTS).read())
+        ok_rec = any(r["impl"] == "kernel_ref" and r["T"] == T0
+                     and r["L"] == L0 for r in rec.get("select_ms", []))
+    ok_sel = speedup >= SELECT_SPEEDUP_MIN
+    base = _hotness_baseline_ms(T0, L0)
+    ok_tick = (base is None
+               or tick_jnp["tick_ms"] <= TICK_REGRESSION_MAX * base)
+    elapsed = time.perf_counter() - t0
+    ok_b = elapsed < SMOKE_BUDGET_S
+    print(f"roofline smoke: micro-bench recorded in results/roofline.json "
+          f"-> {'OK' if ok_rec else 'FAIL'}")
+    print(f"roofline smoke: kernel_ref vs jnp_sort speedup={speedup:.2f}x "
+          f"(gate>={SELECT_SPEEDUP_MIN}) -> {'OK' if ok_sel else 'FAIL'}")
+    if base is None:
+        print("roofline smoke: results/hotness.json absent -> tick "
+              "regression gate skipped")
+    else:
+        print(f"roofline smoke: jnp tick={tick_jnp['tick_ms']:.1f}ms vs "
+              f"hotness.json exact={base:.1f}ms "
+              f"(gate<={TICK_REGRESSION_MAX}x) "
+              f"-> {'OK' if ok_tick else 'FAIL'}")
+    print(f"roofline smoke: interpret bit-exact -> "
+          f"{'OK' if equiv else 'FAIL'}")
+    print(f"roofline smoke: total={elapsed:.1f}s budget={SMOKE_BUDGET_S:.0f}s"
+          f" -> {'OK' if ok_b else 'OVER BUDGET'}")
+    return 0 if (ok_rec and ok_sel and ok_tick and equiv and ok_b) else 1
+
+
+def main() -> int:
+    if "--smoke" in sys.argv:
+        return smoke()
+    select_rows = []
+    for impl in SELECT_IMPLS:
+        n = 3 if impl == "pallas_interpret" else 20
+        r = bench_select(T0, L0, impl, n_iters=n)
+        select_rows.append(r)
+        print(f"select_ms T={T0} L={L0} {impl:16s} {r['select_ms']:9.3f}ms "
+              f"(compile={r['compile_s']:.2f}s)", flush=True)
+    tick_rows = []
+    for impl in TICK_IMPLS:
+        n = 3 if impl == "pallas_interpret" else 15
+        r = bench_tick(T0, L0, impl, n_ticks=n)
+        tick_rows.append(r)
+        print(f"tick_ms   T={T0} L={L0} {impl:16s} {r['tick_ms']:9.3f}ms "
+              f"(compile={r['compile_s']:.2f}s)", flush=True)
+    equiv = quick_equivalence()
+    print(f"interpret bit-exact: {equiv}")
+    _write(select_rows, tick_rows, equiv,
+           "selection-core roofline: Pallas segmented top-k kernels vs the "
+           "jnp selection paths; kernel_ref = the kernel algorithm's XLA "
+           "lowering (the compiled path off-TPU), pallas_interpret = "
+           "bit-exactness witness with emulation overhead")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -78,11 +78,15 @@ def main() -> None:
                   flush=True)
 
     if "--roofline" in sys.argv:
-        from benchmarks.roofline import full_table
-        for r in full_table():
-            print(f"roofline_{r.arch}_{r.shape},0,"
-                  f"dominant={r.dominant};frac={r.roofline_frac:.3f};"
-                  f"useful={r.useful_ratio:.2f}", flush=True)
+        from benchmarks.roofline import bench_select, bench_tick, T0, L0
+        for impl in ("jnp_sort", "jnp_rows", "kernel_ref"):
+            r = bench_select(T0, L0, impl, n_iters=8)
+            print(f"roofline_select_{impl},{r['select_ms'] * 1e3:.0f},"
+                  f"T={T0};L={L0}", flush=True)
+        for impl in ("jnp", "pallas_ref"):
+            r = bench_tick(T0, L0, impl, n_ticks=8)
+            print(f"roofline_tick_{impl},{r['tick_ms'] * 1e3:.0f},"
+                  f"T={T0};L={L0}", flush=True)
 
     if failures:
         sys.exit(1)

@@ -40,3 +40,6 @@ python -m benchmarks.attribution --smoke
 
 echo "== hotness smoke (sketch agreement >= 0.95, hotness-path speedup >= 2x) =="
 python -m benchmarks.hotness --smoke
+
+echo "== roofline smoke (kernel select speedup >= 1.2x, tick vs hotness baseline, interpret equivalence) =="
+python -m benchmarks.roofline --smoke

@@ -14,8 +14,11 @@ Each target builds a traced program plus the metadata the passes need:
   fleet:chunk                   — the chunked rollout program
       (obs.fleet.make_fleet_chunk) incl. its scan carries and the
       donation contract of the donated fleet state.
-  kernel:*                      — the four Pallas kernel wrappers (ref
-      impls: the wrapper graphs, traced on CPU).
+  kernel:*                      — the Pallas kernel wrappers (ref impls:
+      the wrapper graphs, traced on CPU), incl. the selection-core
+      kernels (seg_topk/seg_reduce/commit_moves).
+  tick:pallas:equilibria        — the kernel-backed tick (impl=
+      "pallas_interpret"): the pallas_call bodies audited as sub-jaxprs.
 
 Constancy sweeps (tick structure invariant in T / schedule values) are
 exposed as builders for the CLI and the test suite.
@@ -95,14 +98,15 @@ def _small_cfg(T: int = 3, fast: int = 48, slow: int = 48, **kw):
 
 def static_tick_target(mode: str, T: int = 3, pages_per: int = 16,
                        k_max: int = 8, horizon: int = DEFAULT_HORIZON,
-                       hotness=None,
+                       hotness=None, impl: str = "batched",
                        name: Optional[str] = None) -> AuditTarget:
     from repro.core.engine import make_tick
     from repro.core.state import init_state
     cfg = _small_cfg(T=T, fast=T * pages_per // 2, slow=T * pages_per)
     owner = np.repeat(np.arange(T), pages_per)
     L = owner.shape[0]
-    tick = make_tick(cfg, owner, mode=mode, k_max=k_max, hotness=hotness)
+    tick = make_tick(cfg, owner, mode=mode, k_max=k_max, hotness=hotness,
+                     impl=impl)
     state = init_state(cfg, L, owner=owner, hotness=hotness)
     inputs = (jnp.zeros((L,), jnp.float32), jnp.ones((L,), bool))
     over = {0: Interval(0, RATE_MAX, False),       # accesses [L]
@@ -186,9 +190,10 @@ def fleet_chunk_target(chunk: int = 500, T: int = 4, L: int = 64,
 
 
 def kernel_targets() -> List[AuditTarget]:
-    """The four kernel wrappers (ref impls — the graphs CPU CI runs)."""
+    """The kernel wrappers (ref impls — the graphs CPU CI runs)."""
     from repro.kernels.flash_attention.ops import flash_attention
-    from repro.kernels.migrate.ops import migrate_pages
+    from repro.kernels.migrate.ops import commit_moves, migrate_pages
+    from repro.kernels.select.ops import seg_reduce, seg_topk
     from repro.kernels.ssd_scan.ops import ssd_scan
     from repro.kernels.tiered_attention.ops import tiered_attention
 
@@ -237,6 +242,36 @@ def kernel_targets() -> List[AuditTarget]:
         closed=jax.make_jaxpr(
             lambda *a: tiered_attention(*a, impl="ref"))(
                 q1, fk, fk, sk, sk, fp, sp, sl)))
+
+    # selection-core kernels (kernels/select + the fused page-move commit)
+    Ts, Sw = 3, 16
+    score = jnp.ones((Ts, Sw), jnp.float32)
+    valid = jnp.ones((Ts, Sw), bool)
+    quotas = jnp.ones((Ts,), jnp.int32)
+    out.append(AuditTarget(
+        name="kernel:seg_topk",
+        closed=jax.make_jaxpr(
+            lambda s, v, q: seg_topk(s, v, q, 4, impl="ref"))(
+                score, valid, quotas)))
+    xi = jnp.ones((Ts, Sw), jnp.int32)
+    out.append(AuditTarget(
+        name="kernel:seg_reduce",
+        closed=jax.make_jaxpr(
+            lambda x, v: seg_reduce(x, v, impl="ref"))(xi, valid)))
+    Lc, Cc, Nc = 24, 8, 6
+    tier = jnp.zeros((Lc,), jnp.int32)
+    ring = jnp.zeros((Cc, 5), jnp.int32)
+    pages = jnp.zeros((Nc,), jnp.int32)
+    take = jnp.zeros((Nc,), bool)
+    tens = jnp.zeros((Nc,), jnp.int32)
+    hot = jnp.zeros((Nc,), jnp.float32)
+    z = jnp.zeros((), jnp.int32)
+    out.append(AuditTarget(
+        name="kernel:commit_moves",
+        closed=jax.make_jaxpr(
+            lambda *a: commit_moves(*a, direction=1, to_tier=0,
+                                    impl="ref"))(
+                tier, ring, z, pages, take, tens, hot, z)))
     return out
 
 
@@ -255,10 +290,17 @@ def tick_constancy_sweeps() -> Dict[str, Tuple[Callable, Sequence]]:
     def build_dynamic_L(L):
         return dynamic_tick_target("equilibria", L=L).closed
 
+    def build_pallas_T(T):
+        # kernel-backed tick: row padding to the block multiple keeps the
+        # pallas_call grid/jaxpr structure constant in T
+        return static_tick_target("equilibria", T=T,
+                                  impl="pallas_interpret").closed
+
     sweeps = {
         "tick:static:T": (build_static_T, (2, 4)),
         "tick:dynamic:T": (build_dynamic_T, (2, 4)),
         "tick:dynamic:L": (build_dynamic_L, (64, 128)),
+        "tick:pallas:T": (build_pallas_T, (2, 4)),
     }
     sweeps.update(hotness_constancy_sweeps())
     return sweeps
@@ -306,6 +348,10 @@ def all_targets(scale: bool = True,
     for mode in MODES:
         out.append(dynamic_tick_target(mode))
     out.extend(hotness_tick_targets())
+    # the kernel-backed tick program (Pallas selection core, interpret
+    # graph: the pallas_call bodies are walked as sub-jaxprs)
+    out.append(static_tick_target("equilibria", impl="pallas_interpret",
+                                  name="tick:pallas:equilibria"))
     if scale:
         out.append(scale_tick_target())
     if fleet:

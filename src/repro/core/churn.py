@@ -77,7 +77,7 @@ def churn_events(want: np.ndarray) -> Tuple[int, int]:
 
 def make_churn_tick(cfg: TieringConfig, n_pages: int, mode: str = "equilibria",
                     k_max: int = 256, detector=None, attrib=None,
-                    hotness=None):
+                    hotness=None, impl: str = "batched"):
     """Build the jittable dynamic-ownership tick.
 
     n_pages: size of the physical page pool (fast + slow capacity). Inputs
@@ -86,9 +86,11 @@ def make_churn_tick(cfg: TieringConfig, n_pages: int, mode: str = "equilibria",
     ``attrib``: optional ``obs.attribution.AttributionSpec`` (state must
     then carry an AttributionState). ``hotness``: optional hotness-provider
     spec (core/hotness.py); stateful providers pair with
-    ``init_state(..., hotness=...)``.
+    ``init_state(..., hotness=...)``. ``impl``: "batched" (default; "jnp"
+    alias) or "pallas"/"pallas_interpret" — route the selection step
+    through the segmented top-k kernel (``select.pallas_dynamic_strategy``).
     """
-    provider = dynamic_ownership(cfg, n_pages, k_max=k_max)
+    provider = dynamic_ownership(cfg, n_pages, k_max=k_max, impl=impl)
     return make_tick_core(cfg, provider, mode=mode, k_max=k_max,
                           detector=detector, attrib=attrib, hotness=hotness)
 
@@ -96,7 +98,8 @@ def make_churn_tick(cfg: TieringConfig, n_pages: int, mode: str = "equilibria",
 def run_churn_engine(cfg: TieringConfig, schedule: ChurnSchedule,
                      mode: str = "equilibria", k_max: int = 256,
                      n_pages: Optional[int] = None, detector=None,
-                     attrib=None, hotness=None) -> Tuple[TierState, TickOutput]:
+                     attrib=None, hotness=None,
+                     impl: str = "batched") -> Tuple[TierState, TickOutput]:
     """Run a full churn schedule (scan over ticks) from an all-free pool.
 
     The physical pool defaults to the configured capacity
@@ -105,7 +108,7 @@ def run_churn_engine(cfg: TieringConfig, schedule: ChurnSchedule,
     """
     L = n_pages if n_pages is not None else cfg.n_fast_pages + cfg.n_slow_pages
     tick = make_churn_tick(cfg, L, mode=mode, k_max=k_max, detector=detector,
-                           attrib=attrib, hotness=hotness)
+                           attrib=attrib, hotness=hotness, impl=impl)
     state = init_state(cfg, L, detector=detector,  # owner=None: all pooled
                        attrib=attrib, hotness=hotness)
 

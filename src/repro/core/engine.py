@@ -37,7 +37,8 @@ from repro.core.state import TierState, init_state
 from repro.core.tick import (MODES, TickOutput, make_tick_core,
                              static_ownership)
 
-IMPLS = ("batched", "unrolled")
+IMPLS = ("batched", "unrolled", "jnp", "pallas", "pallas_interpret",
+         "pallas_ref")
 
 __all__ = ["MODES", "IMPLS", "TickOutput", "make_tick", "run_engine"]
 
@@ -48,8 +49,13 @@ def make_tick(cfg: TieringConfig, owner: np.ndarray, mode: str = "equilibria",
     """Build the jittable tick. owner: [L] int (static tenant of each page).
 
     impl: "batched" (segmented selection + scatter-add reductions, trace-time
-    constant in T) or "unrolled" (the seed engine: per-tenant top_k loops and
-    [T, L] one-hot matmuls — kept for equivalence tests and benchmarks).
+    constant in T; "jnp" is an alias), "unrolled" (the seed engine:
+    per-tenant top_k loops and [T, L] one-hot matmuls — kept for equivalence
+    tests and benchmarks), or "pallas"/"pallas_interpret"/"pallas_ref"
+    (the selection core runs through the Pallas kernels in
+    ``kernels/select`` + ``kernels/migrate``; interpret mode is bit-exact
+    with "batched", "pallas_ref" compiles the kernels' jnp oracles — the
+    kernel algorithm on backends without a Mosaic lowering).
     detector: optional ``obs.streaming.DetectorSpec`` — the state must then
     carry a matching DetectorState (``init_state(..., detector=...)``).
     attrib: optional ``obs.attribution.AttributionSpec`` — likewise paired

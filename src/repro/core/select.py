@@ -276,10 +276,25 @@ class Strategy(NamedTuple):
     select(score [L], owner [L], active [L], quotas [T]) -> Selection
     alloc_ranks(new [L], owner [L]) -> [L] index-order rank among the
         tenant's ``new`` pages (values outside ``new`` unspecified)
+
+    The two optional members are fused-kernel upgrades (None on the jnp
+    strategies; the tick core falls back to its composed jnp ops):
+
+    alloc_stats(new [L], owner [L]) -> (ranks [L], counts [T]) — one fused
+        pass producing both the allocation ranks and the per-tenant new-page
+        counts (otherwise two separate reductions).
+    move(tier [L], ring_data [C,5], head, sel: Selection, hotv [L],
+         direction, to_tier, t) -> (tier', ring_data', head') — commits a
+        compact selection as *the* page-move primitive: tier scatter +
+        migration-ring append in one kernel pass, bit-identical to the
+        separate ``jnp.where`` + ``obs/trace.ring_record``. Only set when
+        ``select`` produces the compact [T, k] stream.
     """
     by_tenant: Callable[[jax.Array, jax.Array], jax.Array]
     select: Callable[..., Selection]
     alloc_ranks: Callable[[jax.Array, jax.Array], jax.Array]
+    alloc_stats: Optional[Callable[..., tuple]] = None
+    move: Optional[Callable[..., tuple]] = None
 
 
 def static_strategy(owner: np.ndarray, n_tenants: int, k_max: int,
@@ -287,8 +302,17 @@ def static_strategy(owner: np.ndarray, n_tenants: int, k_max: int,
     """Strategy for a trace-constant owner vector. Picks the fastest
     applicable primitive set (padded-row batched top_k for contiguous
     layouts, composite-sort fallback for arbitrary permutations, or the
-    seed's unrolled per-tenant loops for the equivalence suite)."""
+    seed's unrolled per-tenant loops for the equivalence suite).
+    ``impl="jnp"`` is an alias for the default "batched" path;
+    "pallas"/"pallas_interpret"/"pallas_ref" route the selection core
+    through the Pallas kernels (``kernels/select``, ``kernels/migrate``;
+    "pallas_ref" runs the kernels' jnp oracles compiled by XLA — the
+    kernel *algorithm* on backends without a Mosaic lowering)."""
     T = n_tenants
+    if impl == "jnp":
+        impl = "batched"
+    if impl in ("pallas", "pallas_interpret", "pallas_ref"):
+        return pallas_static_strategy(owner, n_tenants, k_max, impl)
     owner_j = jnp.asarray(owner, jnp.int32)
     if impl == "unrolled":
         owner_oh = jnp.asarray(
@@ -332,10 +356,17 @@ def static_strategy(owner: np.ndarray, n_tenants: int, k_max: int,
     return Strategy(by_tenant, select, alloc_ranks)
 
 
-def dynamic_strategy(n_tenants: int, k_max: int) -> Strategy:
+def dynamic_strategy(n_tenants: int, k_max: int,
+                     impl: str = "batched") -> Strategy:
     """Strategy for ownership-as-state: the owner vector is a runtime array
     (never a trace constant), so every call routes through the segment-sort
-    fallback and the pool-sentinel-tolerant scatter reductions."""
+    fallback and the pool-sentinel-tolerant scatter reductions.
+    "pallas"/"pallas_interpret"/"pallas_ref" swap the selection step for
+    the tiled segmented top-k kernel (see ``pallas_dynamic_strategy``)."""
+    if impl == "jnp":
+        impl = "batched"
+    if impl in ("pallas", "pallas_interpret", "pallas_ref"):
+        return pallas_dynamic_strategy(n_tenants, k_max, impl)
     T = n_tenants
 
     def by_tenant(x: jax.Array, owner: jax.Array) -> jax.Array:
@@ -345,6 +376,176 @@ def dynamic_strategy(n_tenants: int, k_max: int) -> Strategy:
         return Selection(
             select_top_quota(score, owner, active, quotas, T, k_max),
             None, None, None)
+
+    def alloc_ranks(new, owner):
+        return allocation_ranks(new, owner, T)
+
+    return Strategy(by_tenant, select, alloc_ranks)
+
+
+# ------------------------------------------------------------------------
+# Pallas strategies: same seam, kernel-backed selection core. Bit-exactness
+# contract (pinned by tests/test_select_kernels.py): the interpret-mode
+# strategies produce ticks bitwise identical to the "batched" jnp default.
+# Three facts make that possible without giving up kernel reordering
+# freedom: (1) selection is compare-only — the segmented top-k's
+# (score desc, index asc) extraction order is exactly ``jax.lax.top_k``'s
+# "lower index wins" and the stable composite sort's tie-break; (2) the
+# integer reductions (counts, usage, allocation ranks) are associative, so
+# the kernels' tiled order is bit-equal to any jnp association; (3) the f32
+# perf-model reductions are NOT reassociated — they stay on the
+# golden-pinned jnp cumsum/scatter paths.
+# ------------------------------------------------------------------------
+def _static_rows(owner: np.ndarray, n_tenants: int) -> np.ndarray:
+    """[T, S] page-id rows (index order within tenant, -1 pads) for an
+    arbitrary trace-constant owner permutation."""
+    owner = np.asarray(owner)
+    L = owner.shape[0]
+    counts = np.bincount(owner, minlength=n_tenants)[:n_tenants]
+    S = max(int(counts.max()) if counts.size else 0, 1)
+    rows = np.full((n_tenants, S), -1, np.int32)
+    order = np.argsort(owner, kind="stable")
+    seg = owner[order]
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    rows[seg, np.arange(L) - starts[seg]] = order
+    return rows
+
+
+def _rows_select(KSEL, score, active, quotas, page_rows, valid_rows,
+                 page_rows_pad, k: int, L: int, kimpl: str,
+                 compact: bool) -> Selection:
+    """Shared body: gather scores into [T, S] rows, run the segmented
+    top-k kernel, scatter winners back to an [L] mask."""
+    elig = valid_rows & active[page_rows]
+    cols, take, counts = KSEL.seg_topk(score[page_rows], elig, quotas, k,
+                                       impl=kimpl)
+    pages = jnp.take_along_axis(page_rows_pad, cols, axis=1)
+    flat = jnp.where(take, pages, L).reshape(-1)       # L = OOB -> dropped
+    mask = jnp.zeros((L,), bool).at[flat].set(True, mode="drop")
+    if not compact:
+        # mask-only, matching the jnp generic path's Selection shape so the
+        # [L]-lane downstream accounting (and the migration-ring event
+        # order) stays bitwise identical
+        return Selection(mask, None, None, None)
+    return Selection(mask=mask, pages=pages, take=take, counts=counts)
+
+
+def pallas_static_strategy(owner: np.ndarray, n_tenants: int, k_max: int,
+                           impl: str = "pallas_interpret") -> Strategy:
+    """Kernel-backed strategy for a trace-constant owner vector.
+
+    Contiguous layouts get the full treatment: segmented top-k selection,
+    fused rank+count reduction, and the ``commit_moves`` page-move kernel
+    over the compact [T, k] stream. Arbitrary permutations still run the
+    kernels over a precomputed [T, S] rowspace but return mask-only
+    selections (the jnp generic path's shape), keeping event order
+    bit-identical."""
+    from repro.kernels.migrate import ops as KMIG
+    from repro.kernels.select import ops as KSEL
+    kimpl = {"pallas": "pallas",
+             "pallas_ref": "ref"}.get(impl, "pallas_interpret")
+    T = n_tenants
+    owner_np = np.asarray(owner)
+    owner_j = jnp.asarray(owner_np, jnp.int32)
+    L = owner_np.shape[0]
+    layout = plan_layout(owner_np, T)
+    contiguous = layout is not None
+    if contiguous:
+        page_rows, valid_rows = layout.row_page, layout.row_valid
+        col_j = jnp.asarray(
+            np.arange(L, dtype=np.int32) - np.asarray(layout.page_start))
+    else:
+        rows_np = _static_rows(owner_np, T)
+        page_rows = jnp.asarray(np.maximum(rows_np, 0))
+        valid_rows = jnp.asarray(rows_np >= 0)
+    S = page_rows.shape[1]
+    k = min(k_max, S)
+    page_rows_pad = jnp.concatenate(
+        [jnp.where(valid_rows, page_rows, L),
+         jnp.full((T, 1), L, jnp.int32)], axis=1)
+
+    def select(score, _owner, active, quotas):
+        return _rows_select(KSEL, score, active, quotas, page_rows,
+                            valid_rows, page_rows_pad, k, L, kimpl,
+                            compact=contiguous)
+
+    def by_tenant(x: jax.Array, _owner: jax.Array) -> jax.Array:
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            # golden-pinned f32 association: keep the jnp reduction order
+            return (by_tenant_contiguous(x, layout) if contiguous
+                    else by_tenant_scatter(x, owner_j, T))
+        xi = x.astype(jnp.int32) if x.dtype == jnp.bool_ else x
+        return KSEL.seg_sums(xi[page_rows], valid_rows,
+                             impl=kimpl).astype(xi.dtype)
+
+    def alloc_stats(new, _owner):
+        sums, pre = KSEL.seg_reduce(new.astype(jnp.int32)[page_rows],
+                                    valid_rows, impl=kimpl)
+        if contiguous:
+            ranks = pre[owner_j, col_j]
+        else:
+            flat = jnp.where(valid_rows, page_rows, L).reshape(-1)
+            ranks = jnp.zeros((L,), jnp.int32).at[flat].set(
+                pre.reshape(-1), mode="drop")
+        return ranks, sums
+
+    def alloc_ranks(new, _owner):
+        return alloc_stats(new, _owner)[0]
+
+    move = None
+    if contiguous:
+        def move(tier, ring_data, head, sel: Selection, hotv, direction,
+                 to_tier, t):
+            # lane tenant from the Selection's own row shape: hotness
+            # providers hand the tick compact streams of their *buffer*
+            # width, not the strategy rowspace's k
+            tenants = jnp.broadcast_to(
+                jnp.arange(T, dtype=jnp.int32)[:, None],
+                sel.take.shape).reshape(-1)
+            return KMIG.commit_moves(
+                tier, ring_data, head, sel.pages.reshape(-1),
+                sel.take.reshape(-1), tenants,
+                hotv[sel.pages].reshape(-1), t, direction=direction,
+                to_tier=to_tier, impl=kimpl)
+
+    return Strategy(by_tenant, select, alloc_ranks, alloc_stats, move)
+
+
+def pallas_dynamic_strategy(n_tenants: int, k_max: int,
+                            impl: str = "pallas_interpret",
+                            s_max: Optional[int] = None) -> Strategy:
+    """Kernel-backed strategy for ownership-as-state. The rowspace is
+    rebuilt every call from the runtime owner vector (one zero-key segment
+    sort — the same primitive the jnp path spends on ranking — then a
+    scatter into [T, S] rows), so the segmented top-k kernel replaces the
+    composite-key sort proper. Equivalence-focused: the [T, S] rowspace
+    defaults to S = L (``s_max`` caps it when the max per-tenant footprint
+    is known), so the perf target remains the static contiguous strategy;
+    reductions stay on the pool-sentinel-tolerant jnp scatters."""
+    from repro.kernels.select import ops as KSEL
+    kimpl = {"pallas": "pallas",
+             "pallas_ref": "ref"}.get(impl, "pallas_interpret")
+    T = n_tenants
+
+    def by_tenant(x: jax.Array, owner: jax.Array) -> jax.Array:
+        return by_tenant_pooled(x, owner, T)
+
+    def select(score, owner, active, quotas):
+        L = score.shape[0]
+        S = min(s_max, L) if s_max else L
+        owned = owner < T
+        seg = jnp.where(owned, owner, T).astype(jnp.int32)
+        col = segment_ranks(seg, jnp.zeros((L,), jnp.int32), T)
+        row = jnp.where(owned, seg, T)
+        page_rows = jnp.full((T, S), L, jnp.int32).at[row, col].set(
+            jnp.arange(L, dtype=jnp.int32), mode="drop")
+        valid_rows = page_rows < L
+        page_rows_pad = jnp.concatenate(
+            [page_rows, jnp.full((T, 1), L, jnp.int32)], axis=1)
+        return _rows_select(KSEL, score, active,
+                            quotas, jnp.minimum(page_rows, L - 1),
+                            valid_rows, page_rows_pad, min(k_max, S), L,
+                            kimpl, compact=False)
 
     def alloc_ranks(new, owner):
         return allocation_ranks(new, owner, T)

@@ -159,7 +159,8 @@ def simulate(cfg: TieringConfig, tenants: List[TenantWorkload], ticks: int,
 
 def simulate_churn(cfg: TieringConfig, slots: List[ChurnSlot], ticks: int,
                    mode: str = "equilibria", k_max: int = 256,
-                   n_pages: Optional[int] = None, hotness=None) -> SimResult:
+                   n_pages: Optional[int] = None, hotness=None,
+                   impl: str = "batched") -> SimResult:
     """Run a dynamic-roster scenario through the churn engine
     (core/churn.py): slots' lifecycle episodes become in-graph
     arrival/departure/resize events; ownership and the free pool are engine
@@ -168,7 +169,8 @@ def simulate_churn(cfg: TieringConfig, slots: List[ChurnSlot], ticks: int,
     schedule = build_churn_schedule(slots, ticks)
     cfg = cfg.with_(n_tenants=len(slots))
     final, outs = run_churn_engine(cfg, schedule, mode=mode, k_max=k_max,
-                                   n_pages=n_pages, hotness=hotness)
+                                   n_pages=n_pages, hotness=hotness,
+                                   impl=impl)
     return build_result(mode, cfg, final, outs, schedule.want > 0)
 
 

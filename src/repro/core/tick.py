@@ -174,8 +174,8 @@ def static_ownership(cfg: TieringConfig, owner: np.ndarray, k_max: int,
         pool_free=lambda owner_, tier_: (tier_ == TIER_NONE).sum())
 
 
-def dynamic_ownership(cfg: TieringConfig, n_pages: int,
-                      k_max: int) -> OwnershipProvider:
+def dynamic_ownership(cfg: TieringConfig, n_pages: int, k_max: int,
+                      impl: str = "batched") -> OwnershipProvider:
     """Tenant lifecycle as in-graph events: ``TierState.owner`` is mutated
     every tick by a ``(rates [T, S], want [T])`` schedule — reclaim
     (departure/shrink, coldest-first demote-and-free), rank-interval pool
@@ -187,7 +187,7 @@ def dynamic_ownership(cfg: TieringConfig, n_pages: int,
     FREE = T
     n_fast = cfg.n_fast_pages
     wmark = max(int(np.ceil(n_fast * cfg.watermark_free)), 1)
-    strategy = SEL.dynamic_strategy(T, k_max)
+    strategy = SEL.dynamic_strategy(T, k_max, impl=impl)
     base_pol = make_policy(cfg)
     weights = None
     if cfg.tenant_weights:
@@ -325,8 +325,9 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
     L = provider.n_pages
     n_fast = cfg.n_fast_pages
     wmark = max(int(np.ceil(n_fast * cfg.watermark_free)), 1)
-    by_tenant = provider.strategy.by_tenant
-    alloc_ranks = provider.strategy.alloc_ranks
+    strategy = provider.strategy
+    by_tenant = strategy.by_tenant
+    alloc_ranks = strategy.alloc_ranks
     hot_provider = HOT.resolve_hotness(hotness, cfg, L, k_max)
 
     def tick(state: TierState, inputs) -> Tuple[TierState, TickOutput]:
@@ -378,6 +379,21 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
             return OT.ring_record(rg, sel.take, sel.pages, sel_tenants(sel),
                                   hotv[sel.pages], direction, t)
 
+        def move_pages(tier_, ring_, sel: SEL.Selection, hotv, direction,
+                       to_tier):
+            """Commit a selection's page moves: tier scatter + migration-ring
+            append. When the strategy provides the fused page-move kernel
+            (kernels/migrate commit_moves) and the selection carries the
+            compact [T, k] stream, both come out of one kernel pass —
+            bit-identical to the composed jnp ops of the fallback."""
+            if strategy.move is not None and sel.pages is not None:
+                tier2, data2, head2 = strategy.move(
+                    tier_, ring_.data, ring_.head, sel, hotv, direction,
+                    to_tier, t)
+                return tier2, OT.MigrationRing(data=data2, head=head2)
+            ring2 = sel_ring(ring_, sel, hotv, direction)
+            return jnp.where(sel.mask, to_tier, tier_), ring2
+
         # ---- 2. allocate new pages ----------------------------------------
         # Allocation is event-driven (first grant / arrivals); most ticks
         # have no new pages, so the whole block — the [L] rank cumsums and
@@ -390,9 +406,15 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
 
         def do_alloc(args):
             tier_, stats_ = args
+            alloc_ = None
             # per-tenant upper bound gating of *fast* placement
             if mode in ("equilibria", "memtis") and cfg.enable_upper_bound:
-                ranks = alloc_ranks(new, owner)
+                if strategy.alloc_stats is not None:
+                    # fused kernel pass: allocation ranks + per-tenant new-
+                    # page counts from one segmented reduction
+                    ranks, alloc_ = strategy.alloc_stats(new, owner)
+                else:
+                    ranks = alloc_ranks(new, owner)
                 bound = pol.upper_bound[owner_c]
                 under_bound = ((bound == 0)
                                | (fast_usage[owner_c] + ranks < bound))
@@ -403,7 +425,8 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
             go_fast = elig & (grank < jnp.maximum(fast_free - wmark, 0))
             tier_ = jnp.where(go_fast, TIER_FAST,
                               jnp.where(new, TIER_SLOW, tier_))
-            alloc_ = by_tenant(new.astype(jnp.int32), owner)
+            if alloc_ is None:
+                alloc_ = by_tenant(new.astype(jnp.int32), owner)
             return tier_, alloc_, OS.record_fast_entries(stats_, go_fast, t)
 
         tier, alloc_t, stats = jax.lax.cond(
@@ -473,8 +496,8 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
         # thrash detection on demotions (§IV-F)
         thrash_new = sel_thrash(prep.table, dsel)
         stats = sel_exits(stats, dsel)
-        ring = sel_ring(ring, dsel, hot, OT.DIR_DEMOTE)
-        tier = jnp.where(demoted, TIER_SLOW, tier)
+        tier, ring = move_pages(tier, ring, dsel, hot, OT.DIR_DEMOTE,
+                                TIER_SLOW)
         fast_usage = fast_usage - demo_t
         fast_free = n_fast - fast_usage.sum()
 
@@ -537,10 +560,10 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
             psel = pcand.select(p_quota)
         promoted = psel.mask
         promo_t = sel_counts(psel)
-        tier = jnp.where(promoted, TIER_FAST, tier)
+        tier, ring = move_pages(tier, ring, psel, hot, OT.DIR_PROMOTE,
+                                TIER_FAST)
         table = sel_record_promos(prep.table, psel)
         stats = OS.record_fast_entries(stats, promoted, t)
-        ring = sel_ring(ring, psel, hot, OT.DIR_PROMOTE)
 
         # ---- 6b. synchronous upper-bound demotion (allocation path, §IV-D):
         # promotions that pushed a tenant past its bound are shed in the same
@@ -554,12 +577,11 @@ def make_tick_core(cfg: TieringConfig, provider: OwnershipProvider,
                               jnp.maximum(fast_usage2 - pol.upper_bound, 0), 0)
             over2 = jnp.minimum(over2, k_max)
             ssel = hview.demote(tier == TIER_FAST, over2)
-            sync_dem = ssel.mask
             thr2 = sel_thrash(table, ssel)
             thrash_new = thrash_new + thr2
             stats = sel_exits(stats, ssel)
-            ring = sel_ring(ring, ssel, hot, OT.DIR_DEMOTE)
-            tier = jnp.where(sync_dem, TIER_SLOW, tier)
+            tier, ring = move_pages(tier, ring, ssel, hot, OT.DIR_DEMOTE,
+                                    TIER_SLOW)
             sync2_t = sel_counts(ssel)
             demo_t = demo_t + sync2_t
 

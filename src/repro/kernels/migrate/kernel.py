@@ -1,11 +1,26 @@
-"""Page-migration kernel (Pallas TPU): batched promote/demote page copies.
+"""Page-migration kernels (Pallas TPU).
 
-The scalar-prefetch page table (src_idx, dst_idx, sel) drives the BlockSpec
-index maps — the DMA engine streams exactly the selected [pt, K, D] page per
-(layer, sequence) program, nothing else. The destination pool is
-input/output-aliased so unselected sequences keep their data without any
-copy. On real hardware this is the HBM<->host (CXL-analogue) transfer; the
-same kernel covers both directions.
+``migrate_pages_tpu`` — batched promote/demote page copies for the KV
+pools: the scalar-prefetch page table (src_idx, dst_idx, sel) drives the
+BlockSpec index maps, so the DMA engine streams exactly the selected
+[page_block·pt, K, D] slab per (layer-block, sequence) program, nothing
+else. The destination pool is input/output-aliased so unselected sequences
+keep their data without any copy. On real hardware this is the HBM<->host
+(CXL-analogue) transfer; the same kernel covers both directions. The layer
+axis is tiled by ``page_block`` (not the seed's hardcoded single-layer
+blocks) so the grid is L/page_block × B instead of L × B — at real batch
+sizes the per-program dispatch overhead dominated the copy itself.
+
+``commit_moves_tpu`` — the tiering tick's fused move commit: one kernel
+pass applies the promotion/demotion scatter to the [L] tier vector AND
+appends the packed migration-ring events, replacing a drop-mode scatter
+plus the five-column ring build/scatter of ``obs/trace.ring_record``. The
+vector phase computes the ring slot of every taken lane (log-shift prefix
+sum, newest-C-wins window, modular head offset — bit-identical to the jnp
+ring math); the scalar phase walks the compact [N = T·k] lane stream and
+commits both stores. ``tier`` and ``ring_data`` are input/output-aliased:
+the commit is in-place, the way a real migration engine retires a move
+queue.
 """
 from __future__ import annotations
 
@@ -33,21 +48,28 @@ def _mig_kernel(src_idx_ref, dst_idx_ref, sel_ref, src_ref, dst_in_ref,
 
 
 def migrate_pages_tpu(src_pool, dst_pool, src_idx, dst_idx, sel, *,
-                      interpret: bool = False):
-    """src/dst_pool: [L, B, Mp, pt, K, D]; src_idx/dst_idx: [B]; sel: [B]."""
+                      page_block: int = 8, interpret: bool = False):
+    """src/dst_pool: [L, B, Mp, pt, K, D]; src_idx/dst_idx: [B]; sel: [B].
+
+    ``page_block`` layers are copied per program (clamped down to a divisor
+    of L), amortizing grid dispatch over an 8x larger DMA slab by default.
+    """
     L, B, Ms_, pt, K, D = src_pool.shape
     Md = dst_pool.shape[2]
+    pb = max(min(page_block, L), 1)
+    while L % pb:
+        pb -= 1
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(L, B),
+        grid=(L // pb, B),
         in_specs=[
-            pl.BlockSpec((1, 1, 1, pt, K, D),
+            pl.BlockSpec((pb, 1, 1, pt, K, D),
                          lambda l, b, si, di, se: (l, b, si[b], 0, 0, 0)),
-            pl.BlockSpec((1, 1, 1, pt, K, D),
+            pl.BlockSpec((pb, 1, 1, pt, K, D),
                          lambda l, b, si, di, se: (l, b, di[b], 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, 1, pt, K, D),
+        out_specs=pl.BlockSpec((pb, 1, 1, pt, K, D),
                                lambda l, b, si, di, se: (l, b, di[b], 0, 0, 0)),
     )
     return pl.pallas_call(
@@ -59,3 +81,77 @@ def migrate_pages_tpu(src_pool, dst_pool, src_idx, dst_idx, sel, *,
         interpret=interpret,
     )(jnp.maximum(src_idx, 0), jnp.maximum(dst_idx, 0),
       sel.astype(jnp.int32), src_pool, dst_pool)
+
+
+# ------------------------------------------------------- commit_moves ------
+def _row_prefix(x):
+    """Inclusive prefix sum along axis 1 (log-shift adds, int32)."""
+    N = x.shape[1]
+    inc = x
+    off = 1
+    while off < N:
+        shifted = jnp.concatenate(
+            [jnp.zeros((x.shape[0], off), jnp.int32), inc[:, :-off]], axis=1)
+        inc = inc + shifted
+        off *= 2
+    return inc
+
+
+def _moves_kernel(pages_ref, take_ref, ten_ref, hot_ref, t_ref, head_ref,
+                  tier_in_ref, ring_in_ref, tier_ref, ring_ref, head_out_ref,
+                  idx_ref, *, direction: int, to_tier: int):
+    C = ring_ref.shape[0]
+    N = pages_ref.shape[1]
+    take = take_ref[...]                               # [1, N] i32
+    incl = _row_prefix(take)
+    offs = incl - 1                                    # slot among selected
+    total = incl[0, -1]
+    head = head_ref[0, 0]
+    keep = (take != 0) & (offs >= total - C)           # newest C events win
+    idx_ref[...] = jnp.where(keep, (head + offs) % C, C)   # C = OOB -> skip
+    tier_ref[...] = tier_in_ref[...]
+    ring_ref[...] = ring_in_ref[...]
+    head_out_ref[0, 0] = head + total
+
+    def commit(j, _):
+        @pl.when(take_ref[0, j] != 0)
+        def _tier():
+            tier_ref[0, pages_ref[0, j]] = to_tier
+
+        ii = idx_ref[0, j]
+
+        @pl.when(ii < C)
+        def _ring():
+            ring_ref[ii, 0] = t_ref[0, 0]
+            ring_ref[ii, 1] = ten_ref[0, j]
+            ring_ref[ii, 2] = pages_ref[0, j]
+            ring_ref[ii, 3] = direction
+            ring_ref[ii, 4] = hot_ref[0, j]
+        return 0
+
+    jax.lax.fori_loop(0, N, commit, 0)
+
+
+def commit_moves_tpu(tier, ring_data, head, pages, take, tenants, hot_bits,
+                     t, *, direction: int, to_tier: int,
+                     interpret: bool = False):
+    """tier [1, L] i32; ring_data [C, 5] i32; head/t [1, 1] i32;
+    pages/take/tenants/hot_bits [1, N] i32. Whole-array refs, no grid:
+    the move stream is the compact [T·k] candidate lane space, small enough
+    to sit in VMEM next to the tier vector."""
+    L = tier.shape[1]
+    C = ring_data.shape[0]
+    N = pages.shape[1]
+    return pl.pallas_call(
+        functools.partial(_moves_kernel, direction=direction,
+                          to_tier=to_tier),
+        out_shape=[
+            jax.ShapeDtypeStruct((1, L), jnp.int32),
+            jax.ShapeDtypeStruct((C, 5), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        input_output_aliases={6: 0, 7: 1},   # tier, ring_data -> in place
+        scratch_shapes=[pltpu.VMEM((1, N), jnp.int32)],
+        compiler_params=tpu_compiler_params(()),
+        interpret=interpret,
+    )(pages, take, tenants, hot_bits, t, head, tier, ring_data)

@@ -1,18 +1,57 @@
-"""Jit'd wrapper for page migration with impl dispatch."""
+"""Jit'd wrappers for the page-move kernels with impl dispatch."""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.migrate.kernel import migrate_pages_tpu
-from repro.kernels.migrate.ref import migrate_pages_ref
+from repro.kernels.migrate.kernel import commit_moves_tpu, migrate_pages_tpu
+from repro.kernels.migrate.ref import commit_moves_ref, migrate_pages_ref
 
 
-@functools.partial(jax.jit, static_argnames=("impl",), donate_argnums=(1,))
+@functools.partial(jax.jit, static_argnames=("impl", "page_block"),
+                   donate_argnums=(1,))
 def migrate_pages(src_pool, dst_pool, src_idx, dst_idx, sel, *,
-                  impl: str = "ref"):
+                  impl: str = "ref", page_block: int = 8):
     if impl == "ref":
         return migrate_pages_ref(src_pool, dst_pool, src_idx, dst_idx, sel)
     return migrate_pages_tpu(src_pool, dst_pool, src_idx, dst_idx, sel,
+                             page_block=page_block,
                              interpret=(impl == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("direction", "to_tier", "impl"))
+def commit_moves(tier, ring_data, head, pages, take, tenants, hot, t, *,
+                 direction: int, to_tier: int, impl: str = "ref"):
+    """Fused tier scatter + migration-ring append over a compact move
+    stream. tier [L] i32; ring_data [C, 5] i32; head scalar i32;
+    pages [N] i32 (sentinel L on non-taken lanes is fine); take [N] bool;
+    tenants [N] i32; hot [N] f32 (hotness-at-move, ring-bitcast); t scalar
+    tick. Returns (tier', ring_data', head') — bit-identical to the
+    separate jnp tier ``where`` + ``obs/trace.ring_record``."""
+    hot_bits = jax.lax.bitcast_convert_type(hot.astype(jnp.float32),
+                                            jnp.int32)
+    if impl == "ref":
+        return commit_moves_ref(tier, ring_data, head, pages, take, tenants,
+                                hot_bits, t, direction=direction,
+                                to_tier=to_tier)
+    # lane-pad the move stream to a multiple of 128: untaken pad lanes are
+    # commit no-ops, and the fixed width keeps the kernel's prefix-scan
+    # depth (and so the tick jaxpr) constant across stream sizes
+    n = pages.shape[0]
+    pad = -n % 128
+    if pad:
+        pages = jnp.pad(pages, (0, pad))
+        take = jnp.pad(take, (0, pad))
+        tenants = jnp.pad(tenants, (0, pad))
+        hot_bits = jnp.pad(hot_bits, (0, pad))
+    tier2, data2, head2 = commit_moves_tpu(
+        tier[None].astype(jnp.int32), ring_data,
+        head.astype(jnp.int32).reshape(1, 1),
+        pages[None].astype(jnp.int32), take[None].astype(jnp.int32),
+        tenants[None].astype(jnp.int32), hot_bits[None],
+        t.astype(jnp.int32).reshape(1, 1),
+        direction=direction, to_tier=to_tier,
+        interpret=(impl == "pallas_interpret"))
+    return tier2[0], data2, head2[0, 0]

@@ -16,3 +16,32 @@ def migrate_pages_ref(src_pool, dst_pool, src_idx, dst_idx, sel):
     cur = dst_pool[:, barange, dst_idx]
     out = jnp.where(sel[None, :, None, None, None], src, cur)
     return dst_pool.at[:, barange, dst_idx].set(out)
+
+
+def commit_moves_ref(tier, ring_data, head, pages, take, tenants, hot_bits,
+                     t, *, direction: int, to_tier: int):
+    """jnp oracle for the tick's fused page-move commit. Bit-identical to
+    the tick core's separate ``jnp.where`` tier update + ``ring_record``
+    append (obs/trace.py): same newest-wins slot math, same packed row
+    layout, same drop-mode scatters.
+
+    tier [L] i32; ring_data [C, 5] i32; head scalar i32; pages/take/
+    tenants/hot_bits [N] (hot scores pre-bitcast to i32). Returns
+    (tier', ring_data', head')."""
+    L = tier.shape[0]
+    C = ring_data.shape[0]
+    m = take
+    offs = jnp.cumsum(m.astype(jnp.int32)) - 1
+    total = offs[-1] + 1
+    keep = m & (offs >= total - C)          # newest C events win
+    idx = jnp.where(keep, (head + offs) % C, C)   # C = OOB -> dropped
+    rows = jnp.stack([
+        jnp.broadcast_to(t, m.shape).astype(jnp.int32),
+        tenants.astype(jnp.int32),
+        pages.astype(jnp.int32),
+        jnp.full(m.shape, direction, jnp.int32),
+        hot_bits,
+    ], axis=-1)
+    data = ring_data.at[idx].set(rows, mode="drop")
+    tier2 = tier.at[jnp.where(m, pages, L)].set(to_tier, mode="drop")
+    return tier2, data, head + m.sum()

@@ -1,0 +1,168 @@
+"""Selection-core Pallas TPU kernels: tiled segmented top-k + reductions.
+
+Both kernels tile the [T, S] tenant-row space over row blocks of
+``block_rows`` (grid = T/block_rows programs, each owning a [block_rows, S]
+VMEM-resident tile), so VMEM pressure is bounded by the widest tenant row,
+not by L, and the grid is embarrassingly parallel across tenants.
+
+``seg_topk`` fuses the per-tenant masking, scoring and quota-bounded
+selection that the jnp path spreads across a gather, a masked ``top_k``
+and a take-compare: one pass of iterative max-extraction per tile. The
+extraction loop runs ``min(max(quota), k)`` rounds — the *quota* bound, not
+the row width — and each round is a row-max + row-argmin over the tile
+(pure VPU work, no sort network, no cross-program traffic). Ties break as
+(score desc, column asc), bit-matching ``jax.lax.top_k``'s "lower index
+wins".
+
+``seg_reduce`` replaces the length-L cumsum + boundary gathers of
+``allocation_ranks_contiguous``/``by_tenant_contiguous`` with a per-row
+Hillis-Steele log-shift scan: log2(S) shifted adds per tile, emitting the
+per-row total and the exclusive prefix in one pass. Integer-only: integer
+addition is associative so the reordered reduction is bit-equal to the jnp
+cumsum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tpu_compiler_params
+
+
+# ------------------------------------------------------------- seg_topk ----
+def _seg_topk_kernel(score_ref, valid_ref, quota_ref, cols_ref, take_ref,
+                     cnt_ref, *, k: int):
+    s = jnp.where(valid_ref[...] != 0, score_ref[...], -jnp.inf)  # [Bt, S]
+    Bt, S = s.shape
+    q = quota_ref[...][:, 0]                                      # [Bt] i32
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (Bt, S), 1)
+    lane_iota = jax.lax.broadcasted_iota(jnp.int32, (Bt, k), 1)
+    # Quota-bounded round count: rows that exhaust their quota (or run out
+    # of eligible columns) keep looping but stop committing lanes.
+    rounds = jnp.minimum(jnp.max(jnp.maximum(q, 0)), k)
+
+    def round_(j, carry):
+        s, cols, take = carry
+        m = jnp.max(s, axis=1)                       # row max  [Bt]
+        hit = s == m[:, None]
+        c = jnp.min(jnp.where(hit, col_iota, S), axis=1)   # lowest max col
+        ok = (m > -jnp.inf) & (j < q)
+        lane = lane_iota == j
+        commit = lane & ok[:, None]
+        cols = jnp.where(commit, c[:, None], cols)
+        take = jnp.where(commit, 1, take)
+        s = jnp.where(col_iota == c[:, None], -jnp.inf, s)  # consume winner
+        return s, cols, take
+
+    cols0 = jnp.full((Bt, k), S, jnp.int32)
+    take0 = jnp.zeros((Bt, k), jnp.int32)
+    _, cols, take = jax.lax.fori_loop(0, rounds, round_, (s, cols0, take0))
+    cols_ref[...] = cols
+    take_ref[...] = take
+    cnt_ref[...] = take.sum(axis=1, dtype=jnp.int32)[:, None]
+
+
+def seg_topk_tpu(score, valid, quotas, *, k: int, block_rows: int = 8,
+                 interpret: bool = False):
+    """score [T, S] f32, valid [T, S] int32, quotas [T, 1] int32; T must be
+    a multiple of ``block_rows`` (ops wrapper pads). Returns
+    (cols [T, k] i32 with sentinel S, take [T, k] i32, counts [T, 1] i32)."""
+    T, S = score.shape
+    Bt = block_rows
+    grid = (T // Bt,)
+    return pl.pallas_call(
+        functools.partial(_seg_topk_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bt, S), lambda i: (i, 0)),
+            pl.BlockSpec((Bt, S), lambda i: (i, 0)),
+            pl.BlockSpec((Bt, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Bt, k), lambda i: (i, 0)),
+            pl.BlockSpec((Bt, k), lambda i: (i, 0)),
+            pl.BlockSpec((Bt, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, k), jnp.int32),
+            jax.ShapeDtypeStruct((T, k), jnp.int32),
+            jax.ShapeDtypeStruct((T, 1), jnp.int32),
+        ],
+        compiler_params=tpu_compiler_params(("parallel",)),
+        interpret=interpret,
+    )(score, valid, quotas)
+
+
+# ----------------------------------------------------------- seg_reduce ----
+def _row_scan(x):
+    """Inclusive prefix sum along axis 1 (log-shift adds, int32)."""
+    S = x.shape[1]
+    inc = x
+    off = 1
+    while off < S:
+        shifted = jnp.concatenate(
+            [jnp.zeros((x.shape[0], off), jnp.int32), inc[:, :-off]], axis=1)
+        inc = inc + shifted
+        off *= 2
+    return inc
+
+
+def _seg_reduce_kernel(x_ref, valid_ref, sum_ref, pre_ref):
+    x = jnp.where(valid_ref[...] != 0, x_ref[...], 0)
+    inc = _row_scan(x)
+    sum_ref[...] = inc[:, -1:]
+    pre_ref[...] = inc - x
+
+
+def _seg_sums_kernel(x_ref, valid_ref, sum_ref):
+    x = jnp.where(valid_ref[...] != 0, x_ref[...], 0)
+    sum_ref[...] = x.sum(axis=1, dtype=jnp.int32)[:, None]
+
+
+def seg_reduce_tpu(x, valid, *, block_rows: int = 8,
+                   interpret: bool = False):
+    """x/valid [T, S] int32, T a multiple of ``block_rows``. Returns
+    (sums [T, 1] i32, prefix [T, S] i32)."""
+    T, S = x.shape
+    Bt = block_rows
+    return pl.pallas_call(
+        _seg_reduce_kernel,
+        grid=(T // Bt,),
+        in_specs=[
+            pl.BlockSpec((Bt, S), lambda i: (i, 0)),
+            pl.BlockSpec((Bt, S), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Bt, 1), lambda i: (i, 0)),
+            pl.BlockSpec((Bt, S), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, 1), jnp.int32),
+            jax.ShapeDtypeStruct((T, S), jnp.int32),
+        ],
+        compiler_params=tpu_compiler_params(("parallel",)),
+        interpret=interpret,
+    )(x, valid)
+
+
+def seg_sums_tpu(x, valid, *, block_rows: int = 8,
+                 interpret: bool = False):
+    """Sum-only variant (skips the [T, S] prefix write for by_tenant)."""
+    T, S = x.shape
+    Bt = block_rows
+    return pl.pallas_call(
+        _seg_sums_kernel,
+        grid=(T // Bt,),
+        in_specs=[
+            pl.BlockSpec((Bt, S), lambda i: (i, 0)),
+            pl.BlockSpec((Bt, S), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((Bt, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, 1), jnp.int32),
+        compiler_params=tpu_compiler_params(("parallel",)),
+        interpret=interpret,
+    )(x, valid)

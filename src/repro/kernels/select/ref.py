@@ -1,0 +1,53 @@
+"""jnp reference oracles for the selection-core kernels.
+
+These are the canonical semantics the Pallas kernels must reproduce
+bit-exactly (the interpret-mode equivalence suite pins them), and they are
+also the *compiled* selection-core algorithm on backends without a Mosaic
+lowering: a batched masked ``top_k`` over padded [T, S] tenant rows is O(L)
+where the generic composite-key sort path is O(L log L), so ``impl="ref"``
+is already the fast path on CPU.
+
+Semantics shared with the kernels:
+
+* ``seg_topk``: lane j of row t holds that row's j-th best eligible column
+  by (score desc, column asc) — the exact ``jax.lax.top_k`` "lower index
+  wins" tie-break. Lanes at or beyond ``min(quota[t], k)`` (or beyond the
+  row's eligible count) carry the sentinel column ``S`` and ``take=False``.
+* ``seg_reduce``: per-row sum and exclusive prefix sum of the masked values.
+  Integer-only by contract: integer addition is associative, so any kernel
+  reduction order is bit-equal; floats must stay on the golden-pinned jnp
+  association in ``core/select.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def seg_topk_ref(score: jax.Array, valid: jax.Array, quotas: jax.Array,
+                 k: int):
+    """score/valid: [T, S]; quotas: [T] int. Returns (cols, take, counts):
+    cols [T, k] int32 (sentinel S on non-taken lanes), take [T, k] bool,
+    counts [T] int32."""
+    S = score.shape[1]
+    elig = valid & jnp.isfinite(score)
+    s = jnp.where(elig, score, -jnp.inf)
+    vals, cols = jax.lax.top_k(s, k)
+    take = (jnp.arange(k, dtype=jnp.int32)[None, :]
+            < quotas.astype(jnp.int32)[:, None]) & (vals > -jnp.inf)
+    cols = jnp.where(take, cols, S).astype(jnp.int32)
+    return cols, take, take.sum(axis=1).astype(jnp.int32)
+
+
+def seg_reduce_ref(x: jax.Array, valid: jax.Array):
+    """x/valid: [T, S] (x integer). Returns (sums [T] int32,
+    prefix [T, S] int32 exclusive prefix sum along axis 1)."""
+    xm = jnp.where(valid, x, 0).astype(jnp.int32)
+    cs = jnp.cumsum(xm, axis=1, dtype=jnp.int32)
+    return cs[:, -1], cs - xm
+
+
+def seg_sums_ref(x: jax.Array, valid: jax.Array) -> jax.Array:
+    """Sum-only variant of ``seg_reduce_ref`` (no prefix output)."""
+    return jnp.where(valid, x, 0).astype(jnp.int32).sum(
+        axis=1, dtype=jnp.int32)
